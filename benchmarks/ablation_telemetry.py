@@ -1,0 +1,52 @@
+"""Beyond-paper ablation: how much does Algorithm 2's credit *prediction*
+matter? The paper argues (SS5.1) that scheduling on CloudWatch's raw 5-minute
+actuals would act on stale state, and adds 1-minute utilization-based
+prediction. We quantify that choice against two bounds:
+
+  stale     — 5-min actuals only (naive CloudWatch integration)
+  predicted — the paper's Algorithm 2 (actuals + 1-min extrapolation)
+  oracle    — zero-lag ground-truth credit state (upper bound)
+
+on the 10-VM disk experiment, plus stock YARN as the floor."""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import emit
+from repro.core.experiments import run_disk_experiment
+
+MODES = ("stale", "predicted", "oracle")
+
+
+def run() -> dict:
+    seeds = (1, 2, 3)
+    stock = statistics.mean(
+        run_disk_experiment("10vm", "stock", seed=s).result.avg_query_completion()
+        for s in seeds)
+    emit("ablation/stock/avg_qct_s", 0.0, f"{stock:.0f}")
+    out = {}
+    for mode in MODES:
+        qct = statistics.mean(
+            run_disk_experiment("10vm", "cash", seed=s,
+                                telemetry=mode).result.avg_query_completion()
+            for s in seeds)
+        out[mode] = 1 - qct / stock
+        emit(f"ablation/cash_{mode}/avg_qct_s", 0.0, f"{qct:.0f}")
+        emit(f"ablation/cash_{mode}/improvement_vs_stock", 0.0,
+             f"{out[mode]:+.3f}")
+    checks = {
+        # prediction must recover most of the oracle's advantage over stale
+        "all_beat_stock": all(v > 0 for v in out.values()),
+        "predicted_not_worse_than_stale":
+            out["predicted"] >= out["stale"] - 0.02,
+        "predicted_close_to_oracle":
+            out["predicted"] >= out["oracle"] - 0.08,
+    }
+    for k, ok in checks.items():
+        emit(f"ablation/check/{k}", 0.0, "PASS" if ok else "FAIL")
+    assert all(checks.values()), (checks, out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

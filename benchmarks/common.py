@@ -1,0 +1,19 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn: Callable, n: int = 1) -> float:
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6   # us

@@ -1,0 +1,38 @@
+"""Paper Fig 11 + SS6.6: public-cloud billing savings through CASH.
+
+"Any improvement in end-to-end wall-clock time directly translates to cost
+savings of equal valuation" — disk experiments' makespan improvements become
+billing savings; the CPU side adds the T3-vs-EMR rate discount."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cost import BillingLine, hourly_rate, savings_fraction
+from repro.core.experiments import DISK_SETUPS, run_disk_pair
+
+
+def run() -> dict:
+    out = {}
+    for setup, (n_nodes, db, _) in DISK_SETUPS.items():
+        pair = run_disk_pair(setup, seeds=(1, 2, 3))
+        stock = BillingLine("stock", "m5.2xlarge", n_nodes,
+                            pair["stock"]["makespan"])
+        cash = BillingLine("cash", "m5.2xlarge", n_nodes,
+                           pair["cash"]["makespan"])
+        save = savings_fraction(stock, cash)
+        out[setup] = save
+        emit(f"fig11/{setup}/stock_cost_usd", 0.0, f"{stock.total:.2f}")
+        emit(f"fig11/{setup}/cash_cost_usd", 0.0, f"{cash.total:.2f}")
+        emit(f"fig11/{setup}/saving", 0.0, f"{save:+.3f}")
+    checks = {
+        # savings == makespan improvement (duration-proportional billing)
+        "saving_tracks_makespan": all(v >= -0.02 for v in out.values()),
+        "20vm_saving_large": 0.15 <= out["20vm"] <= 0.45,
+    }
+    for k, ok in checks.items():
+        emit(f"fig11/check/{k}", 0.0, "PASS" if ok else "FAIL")
+    assert all(checks.values()), (checks, out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

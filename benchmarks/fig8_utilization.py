@@ -1,0 +1,43 @@
+"""Paper Fig 8: (a) average CPU-utilization timeline, (b) standard deviation
+of CPU credit balance across the cluster's VMs.
+
+Claims: CASH shows better load balancing than plain reordering (8a) and a
+LOWER credit-balance stddev, while T3-unlimited's per-instance averaging
+yields a high stddev — tenants billed for surplus while cluster-wide
+surplus credits exist (8b)."""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import emit
+from repro.core.experiments import run_cpu_experiment
+
+LABELS = ("emr", "reordered", "unlimited", "cash")
+
+
+def run() -> dict:
+    stds, utils = {}, {}
+    for label in LABELS:
+        r = run_cpu_experiment(label, n_nodes=10, seed=0)
+        tl = r.result.timeline
+        half = len(tl["cpu_credit_std"]) // 2
+        stds[label] = statistics.mean(tl["cpu_credit_std"][half:])
+        utils[label] = statistics.mean(tl["cpu_util"])
+        emit(f"fig8/{label}/avg_cpu_util", 0.0, f"{utils[label]:.3f}")
+        emit(f"fig8/{label}/credit_std_late", 0.0, f"{stds[label]:.0f}")
+    checks = {
+        # 8(b): CASH keeps credit consumption even; unlimited/reordered do not
+        "cash_lowest_credit_std": stds["cash"] <= min(stds["reordered"],
+                                                      stds["unlimited"]),
+        "unlimited_high_std": stds["unlimited"] > stds["cash"] * 1.5,
+        # 8(a): CASH utilization >= reordered (better load balancing)
+        "cash_util_not_worse": utils["cash"] >= utils["reordered"] - 0.01,
+    }
+    for k, ok in checks.items():
+        emit(f"fig8/check/{k}", 0.0, "PASS" if ok else "FAIL")
+    assert all(checks.values()), checks
+    return stds
+
+
+if __name__ == "__main__":
+    run()

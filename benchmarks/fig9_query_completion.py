@@ -1,0 +1,40 @@
+"""Paper Fig 9: TPC-DS query completion time, CASH vs stock YARN, at the
+three scales (2 VM / 280 GB, 10 VM / 1.2 TB, 20 VM / 2.5 TB).
+
+Claims: improvement grows with I/O intensity — paper: ~5%, ~10.7% (13%
+makespan), ~31% (22% makespan). We validate the monotone trend and the
+magnitude at scale (bands)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.experiments import run_disk_pair
+
+SETUPS = ("2vm", "10vm", "20vm")
+
+
+def run() -> dict:
+    impr = {}
+    for setup in SETUPS:
+        pair = run_disk_pair(setup, seeds=(1, 2, 3))
+        qct = 1 - pair["cash"]["avg_qct"] / pair["stock"]["avg_qct"]
+        mk = 1 - pair["cash"]["makespan"] / pair["stock"]["makespan"]
+        impr[setup] = {"qct": qct, "makespan": mk}
+        emit(f"fig9/{setup}/stock_avg_qct_s", 0.0, f"{pair['stock']['avg_qct']:.0f}")
+        emit(f"fig9/{setup}/cash_avg_qct_s", 0.0, f"{pair['cash']['avg_qct']:.0f}")
+        emit(f"fig9/{setup}/qct_improvement", 0.0, f"{qct:+.3f}")
+        emit(f"fig9/{setup}/makespan_improvement", 0.0, f"{mk:+.3f}")
+    checks = {
+        "2vm_modest": impr["2vm"]["qct"] < 0.10,
+        "monotone_qct": impr["2vm"]["qct"] < impr["10vm"]["qct"]
+                        <= impr["20vm"]["qct"] + 0.02,
+        "20vm_qct_large": 0.20 <= impr["20vm"]["qct"] <= 0.45,
+        "20vm_makespan_large": 0.15 <= impr["20vm"]["makespan"] <= 0.45,
+    }
+    for k, ok in checks.items():
+        emit(f"fig9/check/{k}", 0.0, "PASS" if ok else "FAIL")
+    assert all(checks.values()), (checks, impr)
+    return impr
+
+
+if __name__ == "__main__":
+    run()

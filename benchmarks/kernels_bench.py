@@ -1,0 +1,52 @@
+"""Kernel-layer micro-benchmarks (CPU wall-clock of the XLA reference path;
+TPU perf is assessed structurally via the roofline — see DESIGN.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    # flash attention (xla path) at a train-like shape
+    b, hq, hkv, s, d = 1, 8, 2, 2048, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="xla"))
+    f(q, k, v).block_until_ready()
+    us = timed(lambda: f(q, k, v).block_until_ready(), n=3)
+    flops = 4 * b * hq * s * s * d
+    emit("kernels/flash_xla_2k", us, f"{flops / (us * 1e-6) / 1e9:.1f}GFLOP/s")
+
+    # decode attention over a 32k cache
+    s_max = 32768
+    q1 = jax.random.normal(ks[0], (4, hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (4, hkv, s_max, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (4, hkv, s_max, d), jnp.float32)
+    lengths = jnp.full((4,), s_max, jnp.int32)
+    g = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l, impl="xla"))
+    g(q1, kc, vc, lengths).block_until_ready()
+    us = timed(lambda: g(q1, kc, vc, lengths).block_until_ready(), n=3)
+    bytes_ = 2 * 4 * hkv * s_max * d * 4
+    emit("kernels/decode_xla_32k", us, f"{bytes_ / (us * 1e-6) / 1e9:.1f}GB/s")
+
+    # ssd scan
+    b2, l2, h2, p2, n2 = 2, 2048, 8, 64, 64
+    x = jax.random.normal(ks[0], (b2, l2, h2, p2)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b2, l2, h2))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h2,)))
+    Bm = jax.random.normal(ks[0], (b2, l2, n2)) * 0.3
+    Cm = jax.random.normal(ks[1], (b2, l2, n2)) * 0.3
+    h = jax.jit(lambda *a: ops.ssd(*a, chunk=256, impl="xla"))
+    h(x, dt, A, Bm, Cm).block_until_ready()
+    us = timed(lambda: h(x, dt, A, Bm, Cm).block_until_ready(), n=3)
+    emit("kernels/ssd_xla_2k", us, f"{b2 * l2 / (us * 1e-6) / 1e6:.2f}Mtok/s")
+
+
+if __name__ == "__main__":
+    run()

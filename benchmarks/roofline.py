@@ -1,0 +1,63 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md SS Roofline).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), prints the
+per-(arch x shape) three-term table for the single-pod mesh, and flags the
+dominant bottleneck per cell. Run the sweep first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+RESULTS = Path("results/dryrun")
+
+
+def load(mesh: str = "pod16x16") -> List[dict]:
+    recs = []
+    for fn in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
+        recs.append(json.loads(Path(fn).read_text()))
+    return recs
+
+
+def run() -> Dict[str, dict]:
+    recs = load("pod16x16")
+    if not recs:
+        emit("roofline/status", 0.0, "NO_DRYRUN_RESULTS")
+        return {}
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    fail = [r for r in recs if r["status"] == "fail"]
+    emit("roofline/cells_ok", 0.0, str(len(ok)))
+    emit("roofline/cells_skip", 0.0, str(len(skip)))
+    emit("roofline/cells_fail", 0.0, str(len(fail)))
+    out = {}
+    for r in ok:
+        rf = r["roofline"]
+        cell = f"{r['arch']}__{r['shape']}"
+        out[cell] = rf
+        t_dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        frac = rf["t_compute_s"] / max(t_dom, 1e-30)
+        emit(f"roofline/{cell}/t_compute_s", 0.0, f"{rf['t_compute_s']:.3e}")
+        emit(f"roofline/{cell}/t_memory_s", 0.0, f"{rf['t_memory_s']:.3e}")
+        emit(f"roofline/{cell}/t_collective_s", 0.0, f"{rf['t_collective_s']:.3e}")
+        emit(f"roofline/{cell}/dominant", 0.0, rf["dominant"])
+        emit(f"roofline/{cell}/compute_fraction_of_bound", 0.0, f"{frac:.3f}")
+        emit(f"roofline/{cell}/useful_flops_ratio", 0.0,
+             f"{rf['useful_flops_ratio']:.3f}")
+    # multi-pod compile proof
+    mp = load("pod2x16x16")
+    mp_ok = sum(1 for r in mp if r["status"] == "ok")
+    mp_skip = sum(1 for r in mp if r["status"] == "skip")
+    emit("roofline/multipod_cells_ok", 0.0, str(mp_ok))
+    emit("roofline/multipod_cells_skip", 0.0, str(mp_skip))
+    return out
+
+
+if __name__ == "__main__":
+    run()

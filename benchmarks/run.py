@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_joint,
+        ablation_telemetry,
+        fig7_cpu_burst,
+        fig8_utilization,
+        fig9_query_completion,
+        fig10_iops,
+        fig11_cost,
+        kernels_bench,
+        roofline,
+        tables,
+    )
+    mods = [
+        ("tables", tables),
+        ("fig7", fig7_cpu_burst),
+        ("fig8", fig8_utilization),
+        ("fig9", fig9_query_completion),
+        ("fig10", fig10_iops),
+        ("fig11", fig11_cost),
+        ("kernels", kernels_bench),
+        ("ablation", ablation_telemetry),
+        ("joint", ablation_joint),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in mods:
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benchmarks: {[n for n, _ in failures]}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

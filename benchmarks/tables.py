@@ -1,0 +1,36 @@
+"""Paper Tables 1-2: T3 credit mechanics and pricing, validated exactly."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.cost import hourly_rate
+from repro.core.token_bucket import INSTANCE_TYPES
+
+
+def run() -> None:
+    # Table 1
+    for name in ("t3.large", "t3.xlarge", "t3.2xlarge"):
+        s = INSTANCE_TYPES[name]
+        emit(f"table1/{name}/vcpus", 0.0, str(s.vcpus))
+        emit(f"table1/{name}/baseline_per_vcpu", 0.0, f"{s.baseline_per_vcpu:.2f}")
+        emit(f"table1/{name}/credits_per_hour", 0.0, f"{s.credits_per_hour:.0f}")
+    assert INSTANCE_TYPES["t3.2xlarge"].credits_per_hour == 192.0
+    # Table 2
+    rows = {
+        ("t3.xlarge", False): 0.1664, ("t3.2xlarge", False): 0.3328,
+        ("m5.xlarge", False): 0.192, ("m5.2xlarge", False): 0.384,
+        ("m5.xlarge", True): 0.24, ("m5.2xlarge", True): 0.48,
+    }
+    for (inst, emr), want in rows.items():
+        got = hourly_rate(inst, emr=emr)
+        tag = f"{inst}{'+emr' if emr else ''}"
+        emit(f"table2/{tag}/usd_per_hour", 0.0, f"{got:.4f}")
+        assert abs(got - want) < 1e-9, (tag, got, want)
+    # the paper's headline rate comparisons
+    emit("table2/m5_premium_over_t3", 0.0,
+         f"{hourly_rate('m5.2xlarge') / hourly_rate('t3.2xlarge') - 1:.3f}")
+    emit("table2/emr_premium_over_t3", 0.0,
+         f"{hourly_rate('m5.2xlarge', True) / hourly_rate('t3.2xlarge') - 1:.3f}")
+
+
+if __name__ == "__main__":
+    run()

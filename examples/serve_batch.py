@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests: CASH admission over two
+credit-asymmetric replicas + the continuous-batching engine.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import init_params
+from repro.sched.serve_scheduler import CashServeScheduler, Request, make_replicas
+from repro.serve.engine import Engine, ServeRequest
+
+
+def main() -> None:
+    cfg = reduced_config(ARCHS["granite-3-2b"])
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    # two replicas: replica 1 has a full burst bucket, replica 0 is drained
+    replicas = make_replicas(2, slots=4, cpu_initial_fraction=0.0)
+    replicas[1].node.cpu.balance = replicas[1].node.cpu.capacity
+    cash = CashServeScheduler(replicas)
+    for t in range(301):                      # telemetry warm-up
+        cash.observe(float(t), {0: 0.0, 1: 0.0})
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt_tokens=int(rng.integers(4, 10)),
+                    max_new_tokens=8) for i in range(6)]
+    pf, dc = cash.admit(301.0, reqs, decode_batches=2)
+    print("CASH admission (prefill counts per replica):",
+          {k: len(v) for k, v in pf.items()})
+    print("  -> compute-heavy prefills land on the credit-rich replica 1")
+
+    engines = [Engine(cfg, params, n_slots=4, max_len=64, impl="xla")
+               for _ in range(2)]
+    t0 = time.time()
+    total = 0
+    for rep_id, assigned in pf.items():
+        for r in assigned:
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=(r.prompt_tokens,)).tolist()
+            engines[rep_id].submit(ServeRequest(
+                rid=r.rid, prompt=prompt, max_new_tokens=r.max_new_tokens))
+        done = engines[rep_id].run_until_done()
+        total += sum(len(d.output) for d in done)
+        print(f"replica {rep_id}: served {len(done)} requests "
+              f"in {engines[rep_id].steps} engine steps")
+    dt = time.time() - t0
+    print(f"\n{total} tokens in {dt:.1f}s ({total / dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: CASH (credit-aware scheduling) as a production JAX framework.
+
+Paper core (token buckets, Algorithm 1+2, simulator) in repro.core;
+the CASH runtime layer for JAX training/serving in repro.sched;
+models/kernels/distribution/training/serving substrates alongside.
+"""
+__version__ = "1.0.0"

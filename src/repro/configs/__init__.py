@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    FrontendStub,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    SSMConfig,
+    shape_applicable,
+)
+from repro.configs.registry import (
+    ALIASES,
+    ARCHS,
+    all_cells,
+    get_config,
+    reduced_config,
+)
+
+__all__ = [
+    "FrontendStub", "InputShape", "ModelConfig", "MoEConfig", "SSMConfig",
+    "SHAPES", "SHAPES_BY_NAME", "shape_applicable",
+    "ALIASES", "ARCHS", "all_cells", "get_config", "reduced_config",
+]

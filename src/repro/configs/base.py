@@ -1,0 +1,186 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. Fields cover the
+union of the dense / MoE / SSM / hybrid / enc-dec / multimodal families; family-
+specific fields are ignored by families that do not use them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    every: int = 1                 # MoE layer every `every` layers (1 = all layers)
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128             # N, SSD state size
+    d_conv: int = 4                # local conv width
+    expand: int = 2                # d_inner = expand * d_model
+    head_dim: int = 64             # SSD head dim (P)
+    chunk: int = 256               # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendStub:
+    """Modality frontend stub: ``input_specs`` provides precomputed embeddings."""
+    kind: str                      # "audio" | "vision"
+    num_tokens: int                # frames (audio) / patches incl. anyres tiles (vision)
+    feature_dim: int               # embedding dim fed into the backbone
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None           # default d_model // num_heads
+    max_seq_len: int = 8192
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"                    # rmsnorm | layernorm
+    act: str = "swiglu"                      # swiglu | gelu | geglu
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (jamba-style): within each block of `hybrid_period` layers, layer
+    # index `hybrid_attn_index` is attention, the rest are mamba.
+    hybrid_period: int = 0
+    hybrid_attn_index: int = 0
+    # enc-dec
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0                 # fixed encoder length (whisper: 1500)
+    frontend: Optional[FrontendStub] = None
+    dtype: str = "bfloat16"
+    notes: str = ""
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab padded to a multiple of 128 so the embedding / logits shard
+        cleanly over the model axis (Megatron-style padding)."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can serve 500k-token contexts (SSM / hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    def is_attention_layer(self, layer_idx: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid" and self.hybrid_period > 0:
+            return (layer_idx % self.hybrid_period) == self.hybrid_attn_index
+        return True
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return (layer_idx % self.moe.every) == (self.moe.every - 1)
+
+    def num_attention_layers(self) -> int:
+        return sum(1 for i in range(self.num_layers) if self.is_attention_layer(i))
+
+    def num_moe_layers(self) -> int:
+        return sum(1 for i in range(self.num_layers) if self.is_moe_layer(i))
+
+    # ---------------- parameter counting (for 6ND roofline) ----------------
+    def param_count(self, active_only: bool = False) -> int:
+        """Analytic parameter count. ``active_only`` counts top_k experts only."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = 0
+        # embeddings (+ untied output head)
+        total += self.vocab_size * d
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        layers = self.num_layers
+
+        def attn_params() -> int:
+            p = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+            if self.qkv_bias:
+                p += (n_q + 2 * n_kv) * hd
+            return p
+
+        def dense_mlp_params(dff: int) -> int:
+            mults = 3 if self.act in ("swiglu", "geglu") else 2
+            return mults * d * dff
+
+        def mamba_params() -> int:
+            s = self.ssm or SSMConfig()
+            d_in = s.expand * d
+            n_heads_ssm = d_in // s.head_dim
+            p = d * (2 * d_in + 2 * s.d_state + n_heads_ssm)   # in_proj(z,x,B,C,dt)
+            p += s.d_conv * (d_in + 2 * s.d_state)             # conv over x,B,C
+            p += n_heads_ssm * 2                               # A_log, D
+            p += d_in * d                                      # out_proj
+            return p
+
+        for i in range(layers):
+            total += 2 * d  # norms
+            if self.is_attention_layer(i):
+                total += attn_params()
+            else:
+                total += mamba_params()
+            if self.is_moe_layer(i):
+                m = self.moe
+                assert m is not None
+                n_e = m.top_k if active_only else m.num_experts
+                total += n_e * dense_mlp_params(m.d_ff) + d * m.num_experts  # + router
+            else:
+                total += dense_mlp_params(self.d_ff)
+        # encoder stack (enc-dec): attention + mlp per layer + cross-attn in decoder
+        if self.encoder_layers:
+            for _ in range(self.encoder_layers):
+                total += attn_params() + dense_mlp_params(self.d_ff) + 2 * d
+            # decoder cross-attention blocks
+            total += self.num_layers * (attn_params() + d)
+        total += d  # final norm
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", seq_len=4_096, global_batch=256, kind="train"),
+    InputShape("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+    InputShape("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+    InputShape("long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether a dry-run cell (arch x shape) applies; returns (ok, reason)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention; %s is full-attention" % cfg.name
+    return True, ""

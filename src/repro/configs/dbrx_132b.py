@@ -1,0 +1,22 @@
+"""dbrx-132b — fine-grained MoE, 16 experts top-4, every layer.
+
+[hf:databricks/dbrx-base; unverified] Analytic ~132B total / ~36B active.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    head_dim=128,
+    act="swiglu",
+    norm="layernorm",
+    rope_theta=500_000.0,
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff=10752, every=1),
+    source="hf:databricks/dbrx-base",
+)

@@ -1,0 +1,18 @@
+"""granite-20b — dense code LM, llama-arch, MQA (kv=1). [arXiv:2405.04324; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,            # MQA
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    act="gelu",                # granite-20b-code uses gelu MLP
+    norm="layernorm",
+    source="arXiv:2405.04324",
+    notes="llama-arch code model with multi-query attention",
+)

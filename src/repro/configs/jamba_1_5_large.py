@@ -1,0 +1,26 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2.
+
+[arXiv:2403.19887; hf] 72 layers in 9 blocks of 8; layer 4 of each block is
+attention (1:7 attn:mamba), MoE every other layer. Analytic params ~397B total /
+~94B active, matching the published 398B/94B.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    hybrid_period=8,
+    hybrid_attn_index=4,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff=24576, every=2),
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    source="arXiv:2403.19887",
+)

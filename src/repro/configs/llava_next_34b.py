@@ -1,0 +1,24 @@
+"""llava-next-34b — VLM; yi-34b backbone + anyres vision tiling (stubbed).
+
+[hf:llava-hf/llava-v1.6-34b; unverified] ``input_specs`` provides precomputed
+patch embeddings for the anyres tile grid (base 576 + up to 4 tiles x 576).
+"""
+from repro.configs.base import FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=5_000_000.0,
+    frontend=FrontendStub(kind="vision", num_tokens=2880, feature_dim=7168),
+    source="hf:llava-hf/llava-v1.6-34b",
+    notes="anyres tiling is host-side 'map-like' work under CASH annotation",
+)

@@ -1,0 +1,18 @@
+"""mamba2-130m — attention-free SSM (state-space duality). [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=24,              # d_inner / head_dim = 1536/64
+    num_kv_heads=24,
+    d_ff=0,                    # mamba2 block has no separate MLP
+    vocab_size=50280,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    source="arXiv:2405.21060",
+    notes="SSD; the long_500k cell runs here (O(S) state recurrence)",
+)

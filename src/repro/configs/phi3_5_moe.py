@@ -1,0 +1,21 @@
+"""phi3.5-moe-42b-a6.6b — MoE 16 experts top-2, every layer.
+
+[hf:microsoft/Phi-3.5-MoE-instruct; hf] Analytic ~42B total / ~6.6B active.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,                 # unused (every layer is MoE); kept for reference
+    vocab_size=32064,
+    head_dim=128,
+    act="swiglu",
+    norm="layernorm",
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff=6400, every=1),
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)

@@ -1,0 +1,113 @@
+"""Architecture registry: full configs, reduced smoke configs, shape table."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (
+    FrontendStub,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    SSMConfig,
+    shape_applicable,
+)
+
+from repro.configs.granite_20b import CONFIG as _granite_20b
+from repro.configs.qwen1_5_110b import CONFIG as _qwen
+from repro.configs.granite_3_2b import CONFIG as _granite_3_2b
+from repro.configs.yi_34b import CONFIG as _yi
+from repro.configs.whisper_large_v3 import CONFIG as _whisper
+from repro.configs.jamba_1_5_large import CONFIG as _jamba
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.phi3_5_moe import CONFIG as _phi
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.llava_next_34b import CONFIG as _llava
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        _granite_20b, _qwen, _granite_3_2b, _yi, _whisper,
+        _jamba, _mamba2, _phi, _dbrx, _llava,
+    )
+}
+
+# convenient aliases (CLI friendliness)
+ALIASES = {
+    "granite-20b": "granite-20b",
+    "qwen1.5-110b": "qwen1.5-110b",
+    "qwen110b": "qwen1.5-110b",
+    "granite-3-2b": "granite-3-2b",
+    "yi-34b": "yi-34b",
+    "whisper-large-v3": "whisper-large-v3",
+    "whisper": "whisper-large-v3",
+    "jamba-1.5-large-398b": "jamba-1.5-large-398b",
+    "jamba": "jamba-1.5-large-398b",
+    "mamba2-130m": "mamba2-130m",
+    "phi3.5-moe-42b-a6.6b": "phi3.5-moe-42b-a6.6b",
+    "phi3.5-moe": "phi3.5-moe-42b-a6.6b",
+    "dbrx-132b": "dbrx-132b",
+    "llava-next-34b": "llava-next-34b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = ALIASES.get(name, name)
+    if key not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[key]
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a full config to a CPU-smoke-testable config of the same family.
+
+    Keeps the structural features (GQA ratio topology, MoE, hybrid interleave,
+    enc-dec, frontend) while dropping widths/depths/vocab to toy scale.
+    """
+    kv = 1 if cfg.num_kv_heads == 1 else 2        # preserve MQA vs GQA
+    updates: dict = dict(
+        name=cfg.name + "-smoke",
+        num_layers=4 if cfg.family == "hybrid" else 2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=kv,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=257,
+        head_dim=16,
+        max_seq_len=128,
+    )
+    if cfg.moe is not None:
+        updates["moe"] = MoEConfig(
+            num_experts=4, top_k=min(cfg.moe.top_k, 2), d_ff=128,
+            every=min(cfg.moe.every, 2), capacity_factor=cfg.moe.capacity_factor)
+    if cfg.ssm is not None:
+        updates["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=16)
+    if cfg.family == "hybrid":
+        updates["hybrid_period"] = 2
+        updates["hybrid_attn_index"] = 1
+    if cfg.encoder_layers:
+        updates["encoder_layers"] = 2
+        updates["encoder_seq_len"] = 8
+    if cfg.frontend is not None:
+        updates["frontend"] = FrontendStub(
+            kind=cfg.frontend.kind, num_tokens=8, feature_dim=64)
+    return dataclasses.replace(cfg, **updates)
+
+
+def all_cells(include_skips: bool = False) -> List[Tuple[ModelConfig, InputShape, bool, str]]:
+    """All (arch, shape) dry-run cells; skipped cells flagged with the reason."""
+    out = []
+    for cfg in ARCHS.values():
+        for shape in SHAPES:
+            ok, reason = shape_applicable(cfg, shape)
+            if ok or include_skips:
+                out.append((cfg, shape, ok, reason))
+    return out
+
+
+__all__ = [
+    "ARCHS", "ALIASES", "SHAPES", "SHAPES_BY_NAME",
+    "get_config", "reduced_config", "all_cells", "shape_applicable",
+]

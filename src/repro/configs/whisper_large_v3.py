@@ -1,0 +1,26 @@
+"""whisper-large-v3 — enc-dec audio transformer; conv frontend stubbed.
+
+[arXiv:2212.04356; unverified] — the transformer BACKBONE only; ``input_specs``
+provides precomputed log-mel frame embeddings (the 2x conv1d stem is a stub).
+"""
+from repro.configs.base import FrontendStub, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    num_layers=32,             # decoder layers
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,           # full MHA (GQA kv=20 == heads)
+    d_ff=5120,
+    vocab_size=51866,
+    head_dim=64,
+    act="gelu",
+    norm="layernorm",
+    qkv_bias=True,
+    encoder_layers=32,
+    encoder_seq_len=1500,      # 30 s of audio at 50 Hz after conv stem
+    frontend=FrontendStub(kind="audio", num_tokens=1500, feature_dim=1280),
+    source="arXiv:2212.04356",
+    notes="enc-dec; decode shapes exercise decoder self-attn KV + cross-attn cache",
+)

@@ -1,0 +1,18 @@
+"""yi-34b — dense LM, llama-arch GQA kv=8. [arXiv:2403.04652; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=5_000_000.0,
+    source="arXiv:2403.04652",
+)

@@ -1,0 +1,31 @@
+"""CASH core: the paper's contribution (token buckets, Algorithm 1+2, simulator)."""
+from repro.core.annotations import Annotation, Task, annotate_dag, annotate_task, user_annotate
+from repro.core.cluster import Node, cluster_stats, make_cluster
+from repro.core.credits import CloudWatchEmulator, CreditPredictor, OracleCredits, StaleCredits
+from repro.core.scheduler import (
+    CashScheduler,
+    JointCashScheduler,
+    SCHEDULERS,
+    SchedulerBase,
+    StockScheduler,
+)
+from repro.core.simulator import Job, SimConfig, SimResult, Simulation
+from repro.core.token_bucket import (
+    DualTokenBucket,
+    EMR_SURCHARGE,
+    INSTANCE_TYPES,
+    InstanceSpec,
+    TokenBucket,
+    ebs_gp2_bucket,
+    network_dual_bucket,
+)
+
+__all__ = [
+    "Annotation", "Task", "annotate_dag", "annotate_task", "user_annotate",
+    "Node", "cluster_stats", "make_cluster",
+    "CloudWatchEmulator", "CreditPredictor", "OracleCredits", "StaleCredits",
+    "CashScheduler", "JointCashScheduler", "SCHEDULERS", "SchedulerBase", "StockScheduler",
+    "Job", "SimConfig", "SimResult", "Simulation",
+    "DualTokenBucket", "EMR_SURCHARGE", "INSTANCE_TYPES", "InstanceSpec",
+    "TokenBucket", "ebs_gp2_bucket", "network_dual_bucket",
+]

@@ -1,0 +1,112 @@
+"""Task model + framework-side annotation (paper SS4.1, SS5.2-5.3).
+
+The application framework annotates DAG vertices coarsely:
+  - map-like vertices ("map", "lambda", "tokenize", "root_input", "scan") are
+    *burst-intensive* in the workload's bottleneck resource (CPU or disk —
+    one, never both; paper SS4.1);
+  - reduce-like vertices ("reduce", "shuffle", "collate") get the *network*
+    annotation (attached alongside, but scheduling treats network as its own
+    phase-2 class per Algorithm 1);
+  - anything else is unannotated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence
+
+
+class Annotation(enum.Enum):
+    BURST_CPU = "burst_cpu"
+    BURST_DISK = "burst_disk"
+    NETWORK = "network"
+    NONE = "none"
+
+
+MAP_LIKE = {"map", "lambda", "tokenize", "root_input", "scan", "prefill", "encode"}
+REDUCE_LIKE = {"reduce", "shuffle", "collate", "decode_step", "sync"}
+
+
+@dataclasses.dataclass
+class Task:
+    """One schedulable unit (a YARN container request in the prototype).
+
+    work_* are total work volumes: cpu in vCPU-seconds, disk in I/O ops,
+    net in bytes. demand_* are the per-slot peak demand rates while running.
+    """
+    tid: int
+    job: str
+    vertex: str                                # DAG vertex kind
+    work_cpu: float = 0.0
+    work_disk: float = 0.0
+    work_net: float = 0.0
+    demand_cpu: float = 1.0                    # vCPUs (<= 1 slot => <= 1.0 typical)
+    demand_disk: float = 0.0                   # IOPS
+    demand_net: float = 0.0                    # bytes/sec
+    annotation: Annotation = Annotation.NONE
+    depends_on: Sequence[int] = ()
+    # fraction of dependencies that must finish before this task may start
+    # (None -> the owning Job's default). Paper: shuffle starts at ~5% of maps.
+    dep_threshold: Optional[float] = None
+    # runtime bookkeeping (filled by the simulator)
+    submit_time: float = 0.0
+    start_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    node: Optional[int] = None
+    done_cpu: float = 0.0
+    done_disk: float = 0.0
+    done_net: float = 0.0
+
+    @property
+    def burst_intensive(self) -> bool:
+        return self.annotation in (Annotation.BURST_CPU, Annotation.BURST_DISK)
+
+    @property
+    def network_annotated(self) -> bool:
+        return self.annotation == Annotation.NETWORK
+
+    def remaining(self) -> Dict[str, float]:
+        return {
+            "cpu": max(0.0, self.work_cpu - self.done_cpu),
+            "disk": max(0.0, self.work_disk - self.done_disk),
+            "net": max(0.0, self.work_net - self.done_net),
+        }
+
+    def finished(self) -> bool:
+        r = self.remaining()
+        return r["cpu"] <= 1e-9 and r["disk"] <= 1e-9 and r["net"] <= 1e-9
+
+    def elapsed(self) -> float:
+        if self.start_time is None or self.finish_time is None:
+            return float("nan")
+        return self.finish_time - self.start_time
+
+
+def annotate_task(task: Task, bottleneck: Annotation) -> Task:
+    """Framework auto-annotation (SS4.1): map-like -> burst(bottleneck),
+    reduce-like -> network. ``bottleneck`` is BURST_CPU or BURST_DISK —
+    the preliminary CASH uses one resource class per workload, never both.
+    """
+    if bottleneck not in (Annotation.BURST_CPU, Annotation.BURST_DISK):
+        raise ValueError("bottleneck must be BURST_CPU or BURST_DISK")
+    v = task.vertex.lower()
+    if v in MAP_LIKE or any(v.startswith(p) for p in MAP_LIKE):
+        task.annotation = bottleneck
+    elif v in REDUCE_LIKE or any(v.startswith(p) for p in REDUCE_LIKE):
+        task.annotation = Annotation.NETWORK
+    else:
+        task.annotation = Annotation.NONE
+    return task
+
+
+def annotate_dag(tasks: List[Task], bottleneck: Annotation) -> List[Task]:
+    for t in tasks:
+        annotate_task(t, bottleneck)
+    return tasks
+
+
+def user_annotate(task: Task, annotation: Annotation) -> Task:
+    """User-defined vertex-manager annotation (SS5.2: users may attach any
+    annotation to any vertex of their DAG)."""
+    task.annotation = annotation
+    return task

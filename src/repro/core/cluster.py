@@ -1,0 +1,97 @@
+"""Cluster / node / slot model (paper SS4.2: "Each node has a number of slots
+... one task per slot").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.annotations import Task
+from repro.core.token_bucket import (
+    DualTokenBucket,
+    InstanceSpec,
+    INSTANCE_TYPES,
+    TokenBucket,
+    ebs_gp2_bucket,
+    network_dual_bucket,
+)
+
+
+@dataclasses.dataclass
+class Node:
+    nid: int
+    spec: InstanceSpec
+    cpu: TokenBucket
+    disk: TokenBucket
+    net: DualTokenBucket
+    slots: int
+    running: List[Task] = dataclasses.field(default_factory=list)
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.running)
+
+    def assign(self, task: Task, now: float) -> None:
+        if self.free_slots <= 0:
+            raise RuntimeError(f"node {self.nid} has no free slot")
+        task.node = self.nid
+        task.start_time = now
+        self.running.append(task)
+
+    def release_finished(self, now: float) -> List[Task]:
+        done = [t for t in self.running if t.finished()]
+        for t in done:
+            t.finish_time = now
+            self.running.remove(t)
+        return done
+
+    # credit views used by schedulers -----------------------------------
+    def credit(self, resource: str) -> float:
+        if resource == "cpu":
+            return self.cpu.balance
+        if resource == "disk":
+            return self.disk.balance
+        raise KeyError(resource)
+
+
+def make_cluster(
+    n_nodes: int,
+    instance_type: str = "t3.2xlarge",
+    ebs_size_gb: float = 200.0,
+    slots_per_node: Optional[int] = None,
+    cpu_initial_fraction: float = 0.0,
+    disk_initial_credits: Optional[float] = None,
+    unlimited: bool = False,
+) -> List[Node]:
+    """Build a homogeneous cluster (the paper's experimental setups).
+
+    ``disk_initial_credits=0.0`` reproduces SS6.5's wiped burst buckets.
+    """
+    spec = INSTANCE_TYPES[instance_type]
+    slots = slots_per_node if slots_per_node is not None else spec.vcpus
+    nodes = []
+    for i in range(n_nodes):
+        nodes.append(Node(
+            nid=i,
+            spec=spec,
+            cpu=spec.cpu_bucket(initial_fraction=cpu_initial_fraction, unlimited=unlimited),
+            disk=ebs_gp2_bucket(ebs_size_gb, initial_credits=disk_initial_credits),
+            net=network_dual_bucket(),
+            slots=slots,
+        ))
+    return nodes
+
+
+def cluster_stats(nodes: List[Node]) -> Dict[str, float]:
+    import math
+    # effective balance: unlimited instances overdraft into billed surplus
+    # credits (negative effective balance), cf. Fig 8(b)
+    cpu = [n.cpu.balance - n.cpu.surplus_used for n in nodes]
+    disk = [n.disk.balance for n in nodes]
+    mean = lambda xs: sum(xs) / len(xs)
+    std = lambda xs: math.sqrt(max(0.0, mean([x * x for x in xs]) - mean(xs) ** 2))
+    return {
+        "cpu_credit_mean": mean(cpu), "cpu_credit_std": std(cpu),
+        "disk_credit_mean": mean(disk), "disk_credit_std": std(disk),
+        "free_slots": float(sum(n.free_slots for n in nodes)),
+    }

@@ -1,0 +1,60 @@
+"""Public-cloud billing model (paper Table 2, SS6.2.3, SS6.6, Fig 11).
+
+- On-demand instance pricing: per-hour x instances x wall-clock hours.
+- EMR: SaaS surcharge on top of the EC2 M5 price (Table 2).
+- T3 unlimited: surplus credits above the 24 h average are billed at
+  $0.05 per vCPU-hour (= 60 CPU credits = 3600 of our vCPU-second units).
+- "Any improvement in end-to-end wall-clock time directly translates to cost
+  savings of equal valuation" (SS6.6) — billing is duration-proportional.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.token_bucket import EMR_SURCHARGE, INSTANCE_TYPES
+
+UNLIMITED_USD_PER_VCPU_HOUR = 0.05
+VCPU_SECONDS_PER_CREDIT_HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BillingLine:
+    label: str
+    instance_type: str
+    n_instances: int
+    wall_clock_s: float
+    emr: bool = False
+    surplus_vcpu_seconds: float = 0.0     # T3-unlimited overdraft
+
+    @property
+    def hours(self) -> float:
+        return self.wall_clock_s / 3600.0
+
+    @property
+    def instance_cost(self) -> float:
+        spec = INSTANCE_TYPES[self.instance_type]
+        rate = spec.price_per_hour
+        if self.emr:
+            rate += EMR_SURCHARGE[self.instance_type]
+        return rate * self.n_instances * self.hours
+
+    @property
+    def surplus_cost(self) -> float:
+        surplus_vcpu_hours = self.surplus_vcpu_seconds / VCPU_SECONDS_PER_CREDIT_HOUR
+        return surplus_vcpu_hours * UNLIMITED_USD_PER_VCPU_HOUR
+
+    @property
+    def total(self) -> float:
+        return self.instance_cost + self.surplus_cost
+
+
+def savings_fraction(baseline: BillingLine, other: BillingLine) -> float:
+    return (baseline.total - other.total) / baseline.total
+
+
+def hourly_rate(instance_type: str, emr: bool = False) -> float:
+    spec = INSTANCE_TYPES[instance_type]
+    rate = spec.price_per_hour
+    if emr:
+        rate += EMR_SURCHARGE[instance_type]
+    return rate

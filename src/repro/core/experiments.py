@@ -1,0 +1,129 @@
+"""Paper experiment drivers (SS6.2 CPU-burst Experiments 1-4, SS6.5 disk-burst
+Experiments 1-3). Shared by the benchmarks and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.cluster import make_cluster
+from repro.core.cost import BillingLine
+from repro.core.scheduler import CashScheduler, StockScheduler
+from repro.core.simulator import SimConfig, SimResult, Simulation
+from repro.core.workloads import (
+    CPU_EXPERIMENT_ORDERS,
+    make_cpu_suite,
+    make_tpcds_suite,
+    reset_tids,
+)
+
+CPU_PHASES = ("map", "shuffle", "reduce")
+
+
+@dataclasses.dataclass
+class CpuExperimentResult:
+    label: str
+    result: SimResult
+    billing: BillingLine
+
+    def cumulative(self, phase: str) -> float:
+        return self.result.phase_elapsed.get(phase, 0.0)
+
+    def cumulative_total(self) -> float:
+        return sum(self.cumulative(p) for p in CPU_PHASES)
+
+
+def run_cpu_experiment(label: str, n_nodes: int = 10, seed: int = 0,
+                       scale: float = 1.0) -> CpuExperimentResult:
+    """labels: emr | naive | reordered | unlimited | cash (paper SS6.2.1-6.2.4)."""
+    reset_tids()
+    slots = 8
+    if label == "emr":
+        nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=200.0)
+        sched = StockScheduler()
+        order = CPU_EXPERIMENT_ORDERS["naive"]
+        jobs = make_cpu_suite(order, n_nodes, slots, seed=seed, scale=scale,
+                              emr_optimized=True)
+    elif label == "naive":
+        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
+                             cpu_initial_fraction=0.0)
+        sched = StockScheduler()
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
+                              seed=seed, scale=scale)
+    elif label == "reordered":
+        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
+                             cpu_initial_fraction=0.0)
+        sched = StockScheduler()
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes, slots,
+                              seed=seed, scale=scale)
+    elif label == "unlimited":
+        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
+                             cpu_initial_fraction=0.0, unlimited=True)
+        sched = StockScheduler()
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
+                              seed=seed, scale=scale)
+    elif label == "cash":
+        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
+                             cpu_initial_fraction=0.0)
+        sched = CashScheduler()
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes, slots,
+                              seed=seed, scale=scale)
+    else:
+        raise ValueError(label)
+    sim = Simulation(nodes, sched, SimConfig(resource="cpu"))
+    sim.submit_sequential(jobs)
+    res = sim.run()
+    billing = BillingLine(
+        label=label,
+        instance_type="m5.2xlarge" if label == "emr" else "t3.2xlarge",
+        n_instances=n_nodes,
+        wall_clock_s=res.makespan,
+        emr=(label == "emr"),
+        surplus_vcpu_seconds=res.surplus_credits,
+    )
+    return CpuExperimentResult(label, res, billing)
+
+
+@dataclasses.dataclass
+class DiskExperimentResult:
+    label: str
+    n_nodes: int
+    db_size_gb: float
+    result: SimResult
+
+
+DISK_SETUPS = {
+    # paper SS6.5.1-6.5.3: (n_nodes, db_size_gb, ebs_size_gb)
+    "2vm": (2, 280.0, 200.0),
+    "10vm": (10, 1200.0, 170.0),
+    "20vm": (20, 2500.0, 200.0),
+}
+
+
+def run_disk_experiment(setup: str, scheduler: str, seed: int = 0,
+                        telemetry: str = "predicted") -> DiskExperimentResult:
+    """telemetry: predicted (Algorithm 2) | stale (5-min actuals only) |
+    oracle (zero-lag ground truth) — the SS5.1 ablation."""
+    n_nodes, db, ebs = DISK_SETUPS[setup]
+    reset_tids()
+    nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=ebs,
+                         disk_initial_credits=0.0)   # SS6.5: wiped buckets
+    sched = CashScheduler() if scheduler == "cash" else StockScheduler()
+    sim = Simulation(nodes, sched, SimConfig(resource="disk",
+                                             telemetry=telemetry))
+    sim.submit_parallel(make_tpcds_suite(db, n_nodes, 8, seed=seed))
+    return DiskExperimentResult(scheduler, n_nodes, db, sim.run())
+
+
+def run_disk_pair(setup: str, seeds: Sequence[int] = (1, 2, 3)) -> Dict[str, Dict[str, float]]:
+    """stock-vs-cash averages over seeds: makespan + avg query completion."""
+    out: Dict[str, Dict[str, float]] = {}
+    for sched in ("stock", "cash"):
+        mks, qcts = [], []
+        for s in seeds:
+            r = run_disk_experiment(setup, sched, seed=s).result
+            mks.append(r.makespan)
+            qcts.append(r.avg_query_completion())
+        out[sched] = {"makespan": sum(mks) / len(mks),
+                      "avg_qct": sum(qcts) / len(qcts)}
+    return out

@@ -1,0 +1,291 @@
+"""Discrete-time cluster simulator for burstable-cloud scheduling (paper SS6).
+
+Time-stepped (default 1 s ticks). Each tick:
+  1. finished tasks release slots;
+  2. job sequencing / DAG readiness updates the pending queue;
+  3. the scheduler (CASH / stock) places runnable tasks onto free slots using
+     the telemetry-estimated credit state (Algorithm 2 predictor by default);
+  4. every node's token buckets serve the aggregate demand of its running
+     tasks; completed work is distributed pro-rata to task demands;
+  5. CloudWatch emulation observes ground truth at its reporting periods.
+
+The simulator is deterministic given (workload, scheduler rng, config).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import Node, cluster_stats
+from repro.core.credits import CloudWatchEmulator, CreditPredictor, OracleCredits, StaleCredits
+from repro.core.scheduler import SchedulerBase
+
+
+@dataclasses.dataclass
+class Job:
+    name: str
+    tasks: List[Task]
+    # fraction of a task's dependencies that must be *finished* before it may
+    # start (paper: reduce starts once ~5% of map output is available)
+    dep_threshold: float = 1.0
+
+    def finished(self) -> bool:
+        return all(t.finished() for t in self.tasks)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    dt: float = 1.0
+    max_time: float = 200_000.0
+    resource: str = "cpu"              # credit pool driving the scheduler
+    telemetry: str = "predicted"       # predicted | stale | oracle
+    actual_period: float = 300.0
+    usage_period: float = 60.0
+    sample_period: float = 10.0        # timeline sampling
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    job_completion: Dict[str, float]                  # job -> completion time
+    phase_elapsed: Dict[str, float]                   # vertex kind -> sum of task elapsed
+    phase_count: Dict[str, int]
+    timeline: Dict[str, List[float]]                  # sampled series
+    surplus_credits: float                            # T3-unlimited overdraft (vCPU-sec)
+    node_busy_seconds: float
+    total_cpu_work: float
+    tasks: List[Task]
+
+    def cumulative_elapsed(self, kinds: Sequence[str]) -> float:
+        return sum(self.phase_elapsed.get(k, 0.0) for k in kinds)
+
+    def avg_query_completion(self) -> float:
+        vals = list(self.job_completion.values())
+        return sum(vals) / max(len(vals), 1)
+
+
+class Simulation:
+    def __init__(self, nodes: List[Node], scheduler: SchedulerBase,
+                 config: Optional[SimConfig] = None):
+        self.nodes = nodes
+        self.scheduler = scheduler
+        self.cfg = config or SimConfig()
+        self.queue: List[Task] = []
+        self.jobs: List[Job] = []
+        self._sequential: List[Job] = []   # jobs gated on the previous finishing
+        self.finished_tasks: List[Task] = []
+        self._done_ids: set = set()
+        # incremental DAG-readiness tracking (O(edges) total)
+        self._dependents: Dict[int, List[Task]] = {}
+        self._dep_done: Dict[int, int] = {}
+        self._ready: set = set()
+        self.now = 0.0
+        self.joint = self.cfg.resource == "joint"
+        if self.joint:
+            # paper SS8 future work: two credit pools tracked side by side
+            self.watcher_cpu = CloudWatchEmulator(
+                "cpu", self.cfg.actual_period, self.cfg.usage_period)
+            self.watcher_disk = CloudWatchEmulator(
+                "disk", self.cfg.actual_period, self.cfg.usage_period)
+            self.telemetry_cpu = CreditPredictor(self.watcher_cpu)
+            self.telemetry_disk = CreditPredictor(self.watcher_disk)
+            self.watcher = self.watcher_cpu
+            self.telemetry = self.telemetry_cpu
+        else:
+            watcher = CloudWatchEmulator(self.cfg.resource,
+                                         self.cfg.actual_period,
+                                         self.cfg.usage_period)
+            self.watcher = watcher
+            if self.cfg.telemetry == "predicted":
+                self.telemetry = CreditPredictor(watcher)
+            elif self.cfg.telemetry == "stale":
+                self.telemetry = StaleCredits(watcher)
+            elif self.cfg.telemetry == "oracle":
+                self.telemetry = OracleCredits(self.cfg.resource)
+            else:
+                raise ValueError(self.cfg.telemetry)
+
+    # ----------------------------------------------------------- submission
+    def submit_parallel(self, jobs: Sequence[Job]) -> None:
+        """All jobs eligible immediately (streaming queries, SS6.5). Tasks are
+        interleaved round-robin across jobs — the capacity scheduler's fair
+        sharing between parallel query queues."""
+        for j in jobs:
+            self.jobs.append(j)
+            self._register_job(j)
+            for t in j.tasks:
+                t.submit_time = self.now
+        lists = [list(j.tasks) for j in jobs]
+        while any(lists):
+            for lst in lists:
+                if lst:
+                    self.queue.append(lst.pop(0))
+
+    def submit_sequential(self, jobs: Sequence[Job]) -> None:
+        """Jobs gated: job k+1 enters the queue when job k finishes (SS6.1:
+        HiBench jobs are submitted sequentially)."""
+        self._sequential.extend(jobs)
+
+    # ------------------------------------------------------------- internals
+    def _admit_sequential(self) -> None:
+        while self._sequential:
+            if self.jobs and not all(j.finished() for j in self.jobs):
+                break
+            j = self._sequential.pop(0)
+            self.jobs.append(j)
+            self._register_job(j)
+            for t in j.tasks:
+                t.submit_time = self.now
+            self.queue.extend(j.tasks)
+
+    def _register_job(self, job: Job) -> None:
+        """Index DAG edges for incremental readiness tracking."""
+        for t in job.tasks:
+            if not t.depends_on:
+                continue
+            if t.dep_threshold is None:
+                t.dep_threshold = job.dep_threshold
+            done = sum(1 for d in t.depends_on if d in self._done_ids)
+            self._dep_done[t.tid] = done
+            if done / len(t.depends_on) + 1e-12 >= t.dep_threshold:
+                self._ready.add(t.tid)
+            for d in t.depends_on:
+                if d not in self._done_ids:
+                    self._dependents.setdefault(d, []).append(t)
+
+    def _mark_done(self, task: Task) -> None:
+        self._done_ids.add(task.tid)
+        for dep_task in self._dependents.pop(task.tid, ()):  # type: ignore[arg-type]
+            self._dep_done[dep_task.tid] = self._dep_done.get(dep_task.tid, 0) + 1
+            th = dep_task.dep_threshold if dep_task.dep_threshold is not None else 1.0
+            if self._dep_done[dep_task.tid] / len(dep_task.depends_on) + 1e-12 >= th:
+                self._ready.add(dep_task.tid)
+
+    def _runnable_ids(self) -> set:
+        return self._ready
+
+    def _serve_tick(self) -> Dict[str, Dict[int, float]]:
+        """Serve all running tasks for one dt; returns per-node usage rates
+        for both credit resources (for CloudWatch)."""
+        dt = self.cfg.dt
+        usage: Dict[str, Dict[int, float]] = {"cpu": {}, "disk": {}}
+        for node in self.nodes:
+            run = node.running
+            dem_cpu = sum(min(t.demand_cpu, 1.0) for t in run if t.remaining()["cpu"] > 0)
+            dem_disk = sum(t.demand_disk for t in run if t.remaining()["disk"] > 0)
+            dem_net = sum(t.demand_net for t in run if t.remaining()["net"] > 0)
+            w_cpu = node.cpu.serve(dem_cpu, dt)
+            w_disk = node.disk.serve(dem_disk, dt)
+            w_net = node.net.serve(dem_net, dt)
+            for t in run:
+                rem = t.remaining()
+                if dem_cpu > 0 and rem["cpu"] > 0:
+                    t.done_cpu = min(t.work_cpu,
+                                     t.done_cpu + w_cpu * min(t.demand_cpu, 1.0) / dem_cpu)
+                if dem_disk > 0 and rem["disk"] > 0:
+                    t.done_disk = min(t.work_disk,
+                                      t.done_disk + w_disk * t.demand_disk / dem_disk)
+                if dem_net > 0 and rem["net"] > 0:
+                    t.done_net = min(t.work_net,
+                                     t.done_net + w_net * t.demand_net / dem_net)
+            usage["cpu"][node.nid] = w_cpu / dt
+            usage["disk"][node.nid] = w_disk / dt
+        return usage
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        timeline: Dict[str, List[float]] = {
+            "t": [], "cpu_util": [], "cpu_credit_std": [], "cpu_credit_mean": [],
+            "disk_credit_std": [], "disk_credit_mean": [], "iops": [],
+        }
+        next_sample = 0.0
+        busy_seconds = 0.0
+        iops_acc: List[float] = []
+        util_acc: List[float] = []
+
+        while self.now < cfg.max_time:
+            self._admit_sequential()
+            # release finished
+            for node in self.nodes:
+                for t in node.release_finished(self.now):
+                    self.finished_tasks.append(t)
+                    self._mark_done(t)
+            self._admit_sequential()
+
+            done = not self.queue and not self._sequential and \
+                all(not n.running for n in self.nodes)
+            if done:
+                break
+
+            # schedule
+            ready = self._runnable_ids()
+            if self.joint:
+                ccpu = self.telemetry_cpu.update(self.now, self.nodes)
+                cdisk = self.telemetry_disk.update(self.now, self.nodes)
+                self.scheduler.schedule(self.queue, self.nodes, ccpu, self.now,
+                                        ready_ids=ready, credits_cpu=ccpu,
+                                        credits_disk=cdisk)
+            else:
+                credits = self.telemetry.update(self.now, self.nodes)
+                self.scheduler.schedule(self.queue, self.nodes, credits,
+                                        self.now, ready_ids=ready)
+
+            # serve
+            usage = self._serve_tick()
+            if self.joint:
+                self.watcher_cpu.observe(self.now, self.nodes, usage["cpu"])
+                self.watcher_disk.observe(self.now, self.nodes, usage["disk"])
+            else:
+                self.watcher.observe(self.now, self.nodes,
+                                     usage[self.cfg.resource])
+
+            # metrics
+            total_vcpus = sum(n.spec.vcpus for n in self.nodes)
+            util = sum(usage["cpu"].values()) / total_vcpus
+            busy_seconds += sum(1.0 for n in self.nodes if n.running) * cfg.dt
+            if cfg.resource == "disk":
+                iops_acc.append(sum(usage["disk"].values()) / len(self.nodes))
+            else:
+                util_acc.append(util)
+            if self.now >= next_sample:
+                st = cluster_stats(self.nodes)
+                timeline["t"].append(self.now)
+                timeline["cpu_util"].append(util)
+                timeline["cpu_credit_std"].append(st["cpu_credit_std"])
+                timeline["cpu_credit_mean"].append(st["cpu_credit_mean"])
+                timeline["disk_credit_std"].append(st["disk_credit_std"])
+                timeline["disk_credit_mean"].append(st["disk_credit_mean"])
+                timeline["iops"].append(
+                    sum(usage["disk"].values()) / len(self.nodes))
+                next_sample += cfg.sample_period
+            self.now += cfg.dt
+
+        # aggregate
+        phase_elapsed: Dict[str, float] = {}
+        phase_count: Dict[str, int] = {}
+        for t in self.finished_tasks:
+            e = t.elapsed()
+            if not math.isnan(e):
+                phase_elapsed[t.vertex] = phase_elapsed.get(t.vertex, 0.0) + e
+                phase_count[t.vertex] = phase_count.get(t.vertex, 0) + 1
+        job_completion = {}
+        for j in self.jobs:
+            ends = [t.finish_time for t in j.tasks if t.finish_time is not None]
+            starts = [t.submit_time for t in j.tasks]
+            if ends:
+                job_completion[j.name] = max(ends) - min(starts)
+        surplus = sum(n.cpu.surplus_used for n in self.nodes)
+        return SimResult(
+            makespan=self.now,
+            job_completion=job_completion,
+            phase_elapsed=phase_elapsed,
+            phase_count=phase_count,
+            timeline=timeline,
+            surplus_credits=surplus,
+            node_busy_seconds=busy_seconds,
+            total_cpu_work=sum(t.done_cpu for t in self.finished_tasks),
+            tasks=self.finished_tasks,
+        )

@@ -1,0 +1,177 @@
+"""Token-bucket models of variable-service-rate cloud resources (paper SS2).
+
+A unified bucket covers AWS T3 CPU credits (SS2.1), EBS gp2 I/O credits (SS2.2)
+and the dual-bucket network regulator of burstable instances (paper footnote 3,
+reverse-engineered in Wang et al., SIGMETRICS'17).
+
+Unit convention: credits are measured in *service-unit x seconds* so the earn
+rate numerically equals the baseline service rate. For T3 this is equivalent to
+AWS's books (1 CPU credit = 1 vCPU-minute = 60 of our credit units); for EBS it
+matches AWS exactly (1 I/O credit = 1 IOPS x second).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass
+class TokenBucket:
+    """baseline: sustained service rate == credit earn rate (units/sec).
+    burst: max service rate while credits remain (units/sec).
+    capacity: bucket cap in credit units (service-unit-seconds).
+    unlimited: T3-unlimited semantics — never throttle, account surplus.
+    """
+    baseline: float
+    burst: float
+    capacity: float
+    balance: float = 0.0
+    unlimited: bool = False
+    surplus_used: float = 0.0      # credit units consumed beyond the bucket
+
+    def __post_init__(self) -> None:
+        if self.burst < self.baseline:
+            raise ValueError("burst rate must be >= baseline rate")
+        self.balance = min(max(self.balance, 0.0), self.capacity)
+
+    # ------------------------------------------------------------------
+    def max_rate(self) -> float:
+        """Service rate available *right now* (used by schedulers)."""
+        if self.unlimited or self.balance > 0.0:
+            return self.burst
+        return self.baseline
+
+    def serve(self, demand: float, dt: float) -> float:
+        """Serve ``demand`` (units/sec) for ``dt`` seconds.
+
+        Returns work completed (units x sec). Credits accrue at ``baseline``
+        and drain at the served rate; when the bucket empties the rate is
+        throttled to ``baseline`` (unless ``unlimited``, which books surplus
+        credits instead — AWS bills those, see core.cost).
+        """
+        if dt <= 0.0 or demand <= 0.0:
+            # idle: pure accrual
+            self.balance = min(self.capacity, self.balance + self.baseline * max(dt, 0.0))
+            return 0.0
+        rate = min(demand, self.burst)
+        drain = rate - self.baseline               # net credit flow (negative = accrue)
+        if drain <= 0.0:
+            self.balance = min(self.capacity, self.balance - drain * dt)
+            return rate * dt
+        # bursting: spend credits until the bucket empties
+        t_burst = dt if self.unlimited else min(dt, self.balance / drain)
+        work = rate * t_burst
+        spent = drain * t_burst
+        if self.unlimited:
+            over = max(0.0, spent - self.balance)
+            self.surplus_used += over
+            self.balance = max(0.0, self.balance - spent)
+        else:
+            self.balance = max(0.0, self.balance - spent)
+        rest = dt - t_burst
+        if rest > 0.0:
+            # throttled remainder at baseline (balance pinned at ~0 while
+            # demand exceeds baseline: earn == drain)
+            work += min(demand, self.baseline) * rest
+        return work
+
+    def time_to_deplete(self, demand: float) -> float:
+        """Seconds of ``demand`` service until throttling (inf if never)."""
+        rate = min(demand, self.burst)
+        drain = rate - self.baseline
+        if drain <= 0.0 or self.unlimited:
+            return float("inf")
+        return self.balance / drain
+
+    def snapshot(self) -> Tuple[float, float]:
+        return self.balance, self.surplus_used
+
+
+# ---------------------------------------------------------------------------
+# AWS instance / volume catalogs (paper Table 1, SS2.1-2.2, Table 2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSpec:
+    name: str
+    vcpus: int
+    memory_gib: int
+    baseline_per_vcpu: float       # fraction of a core (Table 1)
+    credits_per_hour: float        # CPU credits (vCPU-minutes) per hour
+    price_per_hour: float          # on-demand USD (Table 2 / AWS pricing)
+    burstable: bool
+
+    def cpu_bucket(self, initial_fraction: float = 0.0, unlimited: bool = False) -> TokenBucket:
+        if not self.burstable:
+            # fixed-rate instance: baseline == burst == all vCPUs, bucket inert
+            full = float(self.vcpus)
+            return TokenBucket(baseline=full, burst=full, capacity=0.0)
+        baseline = self.vcpus * self.baseline_per_vcpu          # vCPU units
+        cap = self.credits_per_hour * 24 * 60.0                 # 24h accrual, in vCPU-sec
+        # credits/hour in vCPU-min -> earn rate in vCPU-sec/sec == vCPU:
+        earn = self.credits_per_hour * 60.0 / 3600.0
+        assert abs(earn - baseline) < 1e-6, (self.name, earn, baseline)
+        return TokenBucket(
+            baseline=baseline, burst=float(self.vcpus), capacity=cap,
+            balance=cap * initial_fraction, unlimited=unlimited)
+
+
+# Table 1 (+ t3/m5 xlarge, 2xlarge pricing from Table 2; m5.2xl memory 32GiB)
+INSTANCE_TYPES = {
+    "t3.large":    InstanceSpec("t3.large", 2, 8, 0.30, 36.0, 0.0832, True),
+    "t3.xlarge":   InstanceSpec("t3.xlarge", 4, 16, 0.40, 96.0, 0.1664, True),
+    "t3.2xlarge":  InstanceSpec("t3.2xlarge", 8, 32, 0.40, 192.0, 0.3328, True),
+    "m5.xlarge":   InstanceSpec("m5.xlarge", 4, 16, 1.00, 0.0, 0.192, False),
+    "m5.2xlarge":  InstanceSpec("m5.2xlarge", 8, 32, 1.00, 0.0, 0.384, False),
+}
+
+# EMR premium on top of the EC2 instance price (Table 2: M5+EMR = 0.24 / 0.48)
+EMR_SURCHARGE = {"m5.xlarge": 0.048, "m5.2xlarge": 0.096}
+
+EBS_STARTUP_CREDITS = 5_400_000.0   # paper SS6.5: 5.4M initial I/O credits
+EBS_MAX_BURST_IOPS = 3000.0
+EBS_MIN_BASELINE_IOPS = 100.0
+EBS_MAX_BASELINE_IOPS = 16000.0
+
+
+def ebs_gp2_bucket(size_gb: float, initial_credits: Optional[float] = None) -> TokenBucket:
+    """EBS gp2 bucket (Figure 2): baseline 3 IOPS/GB in [100, 16000], burst 3000.
+
+    Volumes whose baseline exceeds 3000 IOPS never need credits (bucket inert).
+    """
+    baseline = min(max(3.0 * size_gb, EBS_MIN_BASELINE_IOPS), EBS_MAX_BASELINE_IOPS)
+    burst = max(EBS_MAX_BURST_IOPS, baseline)
+    cap = EBS_STARTUP_CREDITS
+    bal = cap if initial_credits is None else initial_credits
+    return TokenBucket(baseline=baseline, burst=burst, capacity=cap, balance=bal)
+
+
+@dataclasses.dataclass
+class DualTokenBucket:
+    """Network regulator of burstable instances (paper footnote 3 / Wang'17):
+    a small *peak* bucket refilled from a large *sustained* bucket; service is
+    limited by the peak bucket's state, long-run rate by the sustained one.
+    """
+    sustained: TokenBucket
+    peak: TokenBucket
+
+    def max_rate(self) -> float:
+        return min(self.peak.max_rate(),
+                   self.sustained.max_rate() if self.sustained.balance <= 0 else self.peak.burst)
+
+    def serve(self, demand: float, dt: float) -> float:
+        w1 = self.peak.serve(demand, dt)
+        # long-run envelope from the sustained bucket
+        w2 = self.sustained.serve(demand, dt)
+        return min(w1, w2)
+
+
+def network_dual_bucket(gbps_peak: float = 10.0, gbps_sustained: float = 2.5) -> DualTokenBucket:
+    to_units = 1e9 / 8.0  # bytes/sec
+    peak = TokenBucket(baseline=gbps_sustained * to_units, burst=gbps_peak * to_units,
+                       capacity=gbps_peak * to_units * 60.0,
+                       balance=gbps_peak * to_units * 60.0)
+    sustained = TokenBucket(baseline=gbps_sustained * to_units, burst=gbps_peak * to_units,
+                            capacity=gbps_peak * to_units * 3600.0,
+                            balance=gbps_peak * to_units * 3600.0)
+    return DualTokenBucket(sustained=sustained, peak=peak)

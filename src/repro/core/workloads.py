@@ -1,0 +1,204 @@
+"""Synthetic workload DAGs modeled on the paper's evaluation suites.
+
+CPU-burst side (SS6.1): HiBench PageRank / K-means / Hive SQL-aggregation —
+sequential jobs of map + shuffle + reduce waves; SQL aggregation demands more
+CPU than the T3 40% baseline, PageRank/K-means less (that asymmetry is what
+Experiments 1-4 exploit).
+
+Disk-burst side (SS6.4): hive-testbench TPC-DS queries 66 / 49 / 37 over Tez
+— parallel streaming queries whose map-like (root-input) vertices read a hive
+warehouse: IOPS demand scales with database size.
+
+All generators are deterministic given their seed.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.annotations import Annotation, Task, annotate_dag
+from repro.core.simulator import Job
+
+_next_tid = [0]
+
+
+def _tid() -> int:
+    _next_tid[0] += 1
+    return _next_tid[0]
+
+
+def reset_tids() -> None:
+    _next_tid[0] = 0
+
+
+def _lognorm(rng: random.Random, mean: float, sigma: float = 0.35) -> float:
+    """Heterogeneous work sizes (stragglers emerge naturally)."""
+    import math
+    mu = math.log(mean) - sigma * sigma / 2.0
+    return rng.lognormvariate(mu, sigma)
+
+
+# --------------------------------------------------------------------------
+# HiBench-like CPU workloads (paper SS6.1-6.2)
+# --------------------------------------------------------------------------
+
+HIBENCH_PROFILES: Dict[str, Dict[str, float]] = {
+    # demand_cpu: per-slot duty cycle (S3 wait keeps it < 1.0; EMR shows ~30%
+    # average node utilization, Fig 3) -- sql_aggregation exceeds the 40% T3
+    # baseline, pagerank/kmeans sit below it (SS6.2.1-6.2.2).
+    # moderate cluster load (paper SS3.1: utilization is low and bursty) --
+    # per-job map waves cover ~0.8x of cluster slots, many sequential jobs
+    # sql: cpu-dense, deep multi-wave queues (sustained >baseline demand);
+    # pagerank/kmeans: partial-load (paper SS3.1's low bursty utilization)
+    "sql_aggregation": dict(demand_cpu=0.85, map_work=300.0, red_work=45.0,
+                            maps_per_wave=3.0, n_jobs=4, reduces_frac=0.10),
+    "pagerank":        dict(demand_cpu=0.26, map_work=130.0, red_work=40.0,
+                            maps_per_wave=0.60, n_jobs=3, reduces_frac=0.15),
+    "kmeans":          dict(demand_cpu=0.30, map_work=110.0, red_work=35.0,
+                            maps_per_wave=0.60, n_jobs=3, reduces_frac=0.15),
+}
+
+DUTY_SIGMA = 0.45   # per-task duty-cycle jitter (data skew / S3 latency
+                    # variance) — the source of cross-node credit divergence
+WORK_SIGMA = 0.12   # task work-size spread (tight: HiBench splits are uniform)
+
+
+EMR_S3_SPEEDUP = 1.15       # EMR's S3-optimized committers raise the map duty
+                            # cycle (paper SS6.2: EMR "is highly optimized to
+                            # work with S3"); plain Hadoop-on-EC2 lacks this.
+
+
+def make_hibench_workload(kind: str, n_nodes: int, slots_per_node: int,
+                          seed: int = 0, scale: float = 1.0,
+                          emr_optimized: bool = False) -> List[Job]:
+    """One HiBench workload = several sequential Hadoop jobs. Each job has the
+    three Fig-7 phases: map (CPU-burst), shuffle (network; starts once ~5% of
+    maps finished), reduce (CPU; after its shuffle wave)."""
+    prof = HIBENCH_PROFILES[kind]
+    rng = random.Random(seed)
+    jobs: List[Job] = []
+    slots = n_nodes * slots_per_node
+    n_maps = max(4, int(prof["maps_per_wave"] * slots * scale))
+    n_reds = max(2, int(n_maps * prof["reduces_frac"]))
+    duty = min(1.0, prof["demand_cpu"] * (EMR_S3_SPEEDUP if emr_optimized else 1.0))
+    for j in range(int(prof["n_jobs"])):
+        tasks: List[Task] = []
+        map_ids = []
+        for _ in range(n_maps):
+            w = _lognorm(rng, prof["map_work"], WORK_SIGMA)
+            d = min(1.0, max(0.5 * duty, _lognorm(rng, duty, DUTY_SIGMA)))
+            t = Task(tid=_tid(), job=f"{kind}/job{j}", vertex="map",
+                     work_cpu=w, demand_cpu=d,
+                     work_disk=w * 2.0, demand_disk=20.0)   # scratch EBS I/O
+            tasks.append(t)
+            map_ids.append(t.tid)
+        shuf_ids = []
+        for _ in range(n_reds):
+            w = _lognorm(rng, prof["red_work"])
+            t = Task(tid=_tid(), job=f"{kind}/job{j}", vertex="shuffle",
+                     work_net=w * 3e8, demand_net=6.0e8,    # parallel fetch of map output
+                     work_cpu=w * 0.1, demand_cpu=0.15,
+                     depends_on=tuple(map_ids), dep_threshold=0.05)
+            tasks.append(t)
+            shuf_ids.append(t.tid)
+        for s in shuf_ids:
+            w = _lognorm(rng, prof["red_work"])
+            t = Task(tid=_tid(), job=f"{kind}/job{j}", vertex="reduce",
+                     work_cpu=w * 0.5, demand_cpu=0.35,
+                     work_net=w * 4e6, demand_net=4.0e7,
+                     depends_on=(s,), dep_threshold=1.0)
+            tasks.append(t)
+        annotate_dag(tasks, Annotation.BURST_CPU)
+        jobs.append(Job(name=f"{kind}/job{j}", tasks=tasks, dep_threshold=1.0))
+    return jobs
+
+
+CPU_EXPERIMENT_ORDERS = {
+    # paper SS6.2.1 (naive): the >baseline workload first, zero accrued credits
+    "naive": ["sql_aggregation", "pagerank", "kmeans"],
+    # SS6.2.2 (reordered): accrue credits first
+    "reordered": ["pagerank", "kmeans", "sql_aggregation"],
+}
+
+
+def make_cpu_suite(order: Sequence[str], n_nodes: int, slots_per_node: int,
+                   seed: int = 0, scale: float = 1.0,
+                   emr_optimized: bool = False) -> List[Job]:
+    jobs: List[Job] = []
+    for i, kind in enumerate(order):
+        jobs.extend(make_hibench_workload(kind, n_nodes, slots_per_node,
+                                          seed=seed + i, scale=scale,
+                                          emr_optimized=emr_optimized))
+    return jobs
+
+
+# --------------------------------------------------------------------------
+# TPC-DS-like disk workloads (paper SS6.4-6.5)
+# --------------------------------------------------------------------------
+
+# Relative scan/IO weight of the three queries (q66: widest scans over
+# web/catalog sales; q49: three channels; q37: inventory+catalog). Stage
+# counts reflect the multi-vertex Tez DAGs of these queries (cf. Fig 6).
+TPCDS_PROFILES: Dict[str, Dict[str, float]] = {
+    "q66": dict(scan_frac=0.40, stages=6),
+    "q49": dict(scan_frac=0.35, stages=5),
+    "q37": dict(scan_frac=0.25, stages=4),
+}
+
+IO_PER_GB = 1300.0          # read ops per GB of warehouse touched per query
+DEMAND_IOPS = 300.0         # per-scan-task peak IOPS demand
+SHUFFLE_BYTES = 3.0e10      # mean bytes moved per shuffle task
+SPLIT_GB = 4.0              # input-split size: scan-task count is data-determined
+
+
+def make_tpcds_query(q: str, db_size_gb: float, n_nodes: int,
+                     slots_per_node: int, seed: int = 0) -> Job:
+    """A streaming Hive/Tez query: root-input (disk-burst) vertices scanning
+    the warehouse, then shuffle (network) vertices, per stage. The number of
+    scan tasks follows the data (one per input split), not the cluster."""
+    prof = TPCDS_PROFILES[q]
+    rng = random.Random(seed)
+    slots = n_nodes * slots_per_node
+    total_io = db_size_gb * IO_PER_GB * prof["scan_frac"]
+    tasks: List[Task] = []
+    prev_ids: List[int] = []
+    n_stages = int(prof["stages"])
+    for s in range(n_stages):
+        # stage 0 is the wide warehouse scan; later stages are narrower
+        # refinements (join/aggregate inputs) — io split 50% / rest even
+        stage_frac = 0.5 if s == 0 else 0.5 / (n_stages - 1)
+        stage_io = total_io * stage_frac
+        n_scan = max(3, int(db_size_gb * prof["scan_frac"] * stage_frac / SPLIT_GB))
+        io_per_task = stage_io / n_scan
+        ids = []
+        for _ in range(n_scan):
+            io = _lognorm(rng, io_per_task)
+            t = Task(tid=_tid(), job=q, vertex="root_input",
+                     work_disk=io, demand_disk=DEMAND_IOPS,
+                     work_cpu=io / 90.0, demand_cpu=0.5,
+                     depends_on=tuple(prev_ids),
+                     dep_threshold=0.5 if prev_ids else None)
+            tasks.append(t)
+            ids.append(t.tid)
+        n_shuf = max(2, n_scan // 2)
+        sids = []
+        for _ in range(n_shuf):
+            t = Task(tid=_tid(), job=q, vertex="shuffle",
+                     work_net=_lognorm(rng, SHUFFLE_BYTES), demand_net=2.0e8,
+                     work_cpu=8.0, demand_cpu=0.3,
+                     depends_on=tuple(ids),
+                     dep_threshold=0.05)
+            tasks.append(t)
+            sids.append(t.tid)
+        prev_ids = sids
+    annotate_dag(tasks, Annotation.BURST_DISK)
+    return Job(name=q, tasks=tasks, dep_threshold=1.0)
+
+
+def make_tpcds_suite(db_size_gb: float, n_nodes: int, slots_per_node: int,
+                     seed: int = 0,
+                     queries: Sequence[str] = ("q66", "q49", "q37")) -> List[Job]:
+    """The paper runs all three queries in parallel (SS6.5)."""
+    return [make_tpcds_query(q, db_size_gb, n_nodes, slots_per_node,
+                             seed=seed + i)
+            for i, q in enumerate(queries)]

@@ -1,0 +1,88 @@
+"""Gradient compression for cross-pod (DCN) synchronization.
+
+int8 block-quantized all-reduce with error feedback: quantize(g + e) ->
+all-reduce int-sum (done in f32 of dequantized values under XLA; on a real
+DCN fabric the wire format is int8 + per-block scales, an 4x volume cut vs
+bf16) -> residual e kept locally. Error feedback makes the scheme unbiased
+over time (Seide et al.; 1-bit Adam lineage).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to(x: jax.Array, mult: int) -> Tuple[jax.Array, int]:
+    n = x.size
+    rem = (-n) % mult
+    flat = x.reshape(-1)
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), x.dtype)])
+    return flat, n
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK):
+    """Block-wise symmetric int8 quantization. Returns (q, scales, meta)."""
+    flat, n = _pad_to(x.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), (x.shape, n)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, meta) -> jax.Array:
+    shape, n = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_tree(grads: Any, err: Optional[Any] = None,
+                  block: int = BLOCK) -> Tuple[Any, Any]:
+    """Quantize every leaf (adding error feedback); returns
+    (dequantized_grads, new_error). The dequantized values are what the
+    all-reduce sums — wire volume is the int8+scales payload."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s, meta = quantize_int8(g32, block)
+        deq = dequantize_int8(q, s, meta)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def wire_bytes(grads: Any, block: int = BLOCK) -> Tuple[int, int]:
+    """(compressed, uncompressed bf16) cross-pod payload in bytes."""
+    comp = unc = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        nb = -(-n // block)
+        comp += n + nb * 4          # int8 payload + f32 scale per block
+        unc += n * 2                # bf16
+    return comp, unc
+
+
+def cross_pod_allreduce(grads: Any, axis_name: str = "pod",
+                        compress: bool = True,
+                        err: Optional[Any] = None) -> Tuple[Any, Any]:
+    """psum over the pod axis with optional int8+EF compression.
+
+    Usable under shard_map with a 'pod' mesh axis; under plain pjit the
+    all-reduce is implicit and this function models the payload (tests use
+    shard_map)."""
+    if compress:
+        grads, err = compress_tree(grads, err)
+    summed = jax.tree.map(lambda g: jax.lax.psum(g, axis_name), grads)
+    return summed, err

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules -> NamedSharding, divisibility-aware.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+Policy (MaxText-style FSDP+TP+EP):
+  - batch over ("pod", "data")  (pure DP across pods, DCN-friendly)
+  - parameters: FSDP over "data" on the d_model-ish dim (intra-pod ICI
+    all-gathers), tensor-parallel over "model" on heads/ff/vocab/experts;
+    replicated over "pod" (cross-pod all-reduce on gradients)
+  - decode KV caches: batch over data, cache sequence over "model"
+    (sharded-softmax decode: XLA emits partial max/sum all-reduces)
+Any dim not divisible by its mesh axis size falls back to replication.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit(shape: Sequence[int], spec: Sequence, mesh: Mesh) -> P:
+    """Drop any spec entry whose dim isn't divisible by the axis size."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        out.append(axis if (axis is not None and dim % axis_size(mesh, axis) == 0)
+                   else None)
+    out.extend([None] * (len(shape) - len(spec)))
+    return P(*out)
+
+
+# rules keyed by the param leaf name; value = logical spec for the TRAILING
+# dims (leading stack dims — layers / groups / in-group — get None).
+_PARAM_RULES: Dict[str, Tuple] = {
+    "embed": ("model", "data"),          # (V, d): vocab-parallel embedding
+    "lm_head": ("data", "model"),        # (d, V)
+    "wq": ("data", "model"),             # (d, Hq*hd)
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),             # (F, d)
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "w1": ("data", "model"),             # dense mlp (d, ff)
+    "w3": ("data", "model"),
+    "w2": ("model", "data"),             # (ff, d)
+    "router": ("data", None),            # (d, E)
+    "in_proj": ("data", "model"),        # mamba (d, proj)
+    "out_proj": ("model", "data"),       # (d_in, d)
+    "conv_w": (None, "model"),           # (K, conv_dim)
+    "conv_b": ("model",),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "norm": (None,), "scale": (None,), "bias": (None,),
+}
+
+# MoE expert tensors: (E, d, ff) / (E, ff, d) -> expert-parallel over model
+_MOE_RULES = {
+    "w1": ("model", "data", None),
+    "w3": ("model", "data", None),
+    "w2": ("model", None, "data"),
+}
+
+
+def spec_for_param(path: Tuple[str, ...], shape: Sequence[int], mesh: Mesh) -> P:
+    name = path[-1]
+    in_moe = "moe" in path
+    if in_moe and name in _MOE_RULES:
+        rule = _MOE_RULES[name]
+    elif name in _PARAM_RULES:
+        rule = _PARAM_RULES[name]
+    else:
+        rule = ()
+    n_lead = len(shape) - len(rule)
+    if n_lead < 0:   # scalar-ish leaf with an over-long rule
+        rule = rule[-len(shape):] if len(shape) else ()
+        n_lead = len(shape) - len(rule)
+    full = tuple([None] * n_lead) + tuple(rule)
+    return _fit(shape, full, mesh)
+
+
+def _path_names(key_path) -> Tuple[str, ...]:
+    names = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_shardings(params_struct: Any, mesh: Mesh, serve_tp: bool = False):
+    """Pytree of NamedSharding matching ``params_struct`` (arrays or
+    ShapeDtypeStructs).
+
+    ``serve_tp`` drops the FSDP ("data") axis — tensor-parallel-only weights
+    replicated across data, the right layout for decode where per-step FSDP
+    all-gathers dominate collectives."""
+    def mk(key_path, leaf):
+        spec = spec_for_param(_path_names(key_path), leaf.shape, mesh)
+        if serve_tp:
+            spec = P(*[None if s == "data" else s for s in spec])
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(mk, params_struct)
+
+
+def batch_shardings(batch_struct: Any, mesh: Mesh):
+    """Batch arrays: leading dim over (pod, data)."""
+    dp = dp_axes(mesh)
+
+    def mk(leaf):
+        spec = _fit(leaf.shape, (dp,), mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(mk, batch_struct)
+
+
+def cache_shardings(cache_struct: Any, mesh: Mesh):
+    """Decode caches. KV tensors (L, B, Hkv, S, hd): B over data, S over
+    model. Mamba states (L, B, ...): B over data, feature over model where
+    divisible. lengths (B,): over data."""
+    dp = dp_axes(mesh)
+
+    def mk(key_path, leaf):
+        names = _path_names(key_path)
+        shape = leaf.shape
+        if names[-1] in ("k", "v"):
+            spec = (None, dp, None, "model", None)
+            if len(shape) == 6:  # hybrid: (G, n?, B, H, S, hd) — not used
+                spec = (None,) + spec
+        elif names[-1] == "lengths":
+            spec = (dp,)
+        elif names[-1] == "enc_out":
+            spec = (dp, None, None)
+        elif names[-1] in ("conv", "ssd"):
+            spec = (None,) * (len(shape) - 4) + (dp, None, "model", None) \
+                if names[-1] == "ssd" else \
+                (None,) * (len(shape) - 3) + (dp, None, "model")
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, _fit(shape, spec, mesh))
+    return jax.tree_util.tree_map_with_path(mk, cache_struct)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# activation constraint helper (no-op outside a mesh context)
+# ----------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+SP_RESIDUALS = False     # sequence-parallel residual streams (hillclimb knob):
+                         # layer inputs (the remat-saved buffers) sharded over
+                         # "model" on d_model -> saves /TP memory, adds
+                         # per-layer all-gathers (Megatron-SP trade)
+
+
+def set_sp_residuals(flag: bool) -> None:
+    global SP_RESIDUALS
+    SP_RESIDUALS = flag
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the active mesh; resolves the
+    logical name "dp" to the mesh's data axes; drops non-divisible axes."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    resolved = tuple(dp_axes(mesh) if s == "dp" else s for s in spec)
+    fitted = _fit(x.shape, resolved, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))

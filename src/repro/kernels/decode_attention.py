@@ -1,0 +1,104 @@
+"""Decode attention (flash-decoding style) — Pallas TPU kernel.
+
+One-token queries against a long (possibly partially-filled) KV cache. The
+KV sequence is split across the sequential grid dimension; the per-kv-head
+query group (GQA) rides as the row dimension of each block so a single MXU
+matvec batch covers all query heads of the group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, group: int):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0, 0]
+    # skip KV blocks entirely past the filled length
+    @pl.when(j * block_k < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_k), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *,
+                            scale: Optional[float] = None,
+                            block_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q (B, Hq, D); k, v (B, Hkv, S, D); lengths (B,) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    hkv, s_max = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    block_k = min(block_k, s_max)
+    assert s_max % block_k == 0, (s_max, block_k)
+    scale = (d ** -0.5) if scale is None else scale
+
+    qg = q.reshape(b, hkv, group, d)
+    len2d = lengths.astype(jnp.int32).reshape(b, 1)
+    grid = (b, hkv, s_max // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k, group=group)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+            pltpu.VMEM((group, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(len2d, qg, k, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,93 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their XLA references.
+
+``impl`` selects the execution path:
+  - "xla":       pure-jnp reference lowered by XLA. Used on CPU, in the
+                 multi-pod dry-run (so cost_analysis sees true FLOPs) and as
+                 the autodiff path for training.
+  - "pallas":    the TPU kernel (compiled; TPU target).
+  - "interpret": the TPU kernel executed by the Pallas interpreter (CPU
+                 correctness testing).
+  - "auto":      "pallas" on TPU backends, "xla" elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+_UNROLL_INNER = False
+_SSD_CHUNK_OVERRIDE = None
+
+
+def set_unroll_inner(flag: bool, ssd_chunk_override=None) -> None:
+    """Dry-run calibration: unroll the inner KV-block / chunk scans so XLA
+    cost analysis counts every iteration (see launch/dryrun.py).
+
+    ``ssd_chunk_override`` caps the number of unrolled SSD chunk bodies for
+    very long sequences; the dry-run applies an analytic FLOP correction for
+    the chunk-size delta (intra-chunk cost is linear in chunk length)."""
+    global _UNROLL_INNER, _SSD_CHUNK_OVERRIDE
+    _UNROLL_INNER = flag
+    _SSD_CHUNK_OVERRIDE = ssd_chunk_override
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, scale: Optional[float] = None,
+              impl: str = "auto", block_q: int = 128,
+              block_k: int = 128) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "xla":
+        # blockwise online-softmax (O(S) memory); "xla_naive" keeps the
+        # quadratic oracle for small-shape testing
+        return ref.flash_attention_xla(q, k, v, causal=causal, scale=scale,
+                                       unroll=_UNROLL_INNER)
+    if impl == "xla_naive":
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=(impl == "interpret"))
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, scale: Optional[float] = None,
+                     impl: str = "auto", block_k: int = 512) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+    return decode_attention_pallas(
+        q, k, v, lengths, scale=scale, block_k=block_k,
+        interpret=(impl == "interpret"))
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, *, chunk: int = 256, impl: str = "auto") -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "xla":
+        if _SSD_CHUNK_OVERRIDE is not None:
+            chunk = min(_SSD_CHUNK_OVERRIDE, x.shape[1])
+        y, _ = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk,
+                                   unroll=_UNROLL_INNER)
+        return y
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=(impl == "interpret"))
+
+
+attention_jit = jax.jit(attention, static_argnames=(
+    "causal", "impl", "block_q", "block_k"))
+decode_attention_jit = jax.jit(decode_attention, static_argnames=(
+    "impl", "block_k"))
+ssd_jit = jax.jit(ssd, static_argnames=("chunk", "impl"))

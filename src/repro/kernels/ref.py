@@ -1,0 +1,193 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Conventions
+-----------
+- attention: q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D); GQA via Hq % Hkv == 0.
+  causal uses offset = Skv - Sq (query i attends keys <= i + offset).
+- decode attention: q (B, Hq, D); cache k, v (B, Hkv, S, D); lengths (B,)
+  masks positions >= length.
+- SSD (Mamba-2): x (B, L, H, P); dt (B, L, H) post-softplus; A (H,) negative;
+  Bm, Cm (B, L, N) single-group. State per head: S (N, P).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, Hkv, S, D) -> (B, Hkv * n_rep, S, D)."""
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(b, h * n_rep, s, d)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: Optional[float] = None) -> jax.Array:
+    """Full softmax attention oracle (fp32 accumulation)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        offset = skv - sq
+        qpos = jnp.arange(sq)[:, None] + offset
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, scale: Optional[float] = None,
+                        block_k: int = 1024, unroll: bool = False) -> jax.Array:
+    """Online-softmax attention in pure XLA: lax.scan over KV blocks.
+
+    O(S) memory (never materializes the S x S score matrix) — the dry-run /
+    training path on non-TPU backends; matches attention_ref numerically.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    group = hq // hkv
+    block_k = min(block_k, skv)
+    if skv % block_k != 0:
+        # largest divisor of skv not exceeding the requested block
+        block_k = next(bk for bk in range(block_k, 0, -1) if skv % bk == 0)
+    nk = skv // block_k
+    offset = skv - sq
+    # GQA without materializing repeated KV: fold q heads as (hkv, group)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, sq, d)
+    kb = jnp.moveaxis(k.astype(jnp.float32).reshape(b, hkv, nk, block_k, d), 2, 0)
+    vb = jnp.moveaxis(v.astype(jnp.float32).reshape(b, hkv, nk, block_k, d), 2, 0)
+    qpos = jnp.arange(sq) + offset
+
+    def body(carry, inp):
+        m, l, acc, j = carry
+        kj, vj = inp                                        # (B,Hkv,bk,D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kj)
+        if causal:
+            kpos = j * block_k + jnp.arange(block_k)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vj)
+        return (m_new, l, acc, j + 1), ()
+
+    m0 = jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, jnp.int32(0)),
+                                     (kb, vb), unroll=unroll)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, *,
+                         scale: Optional[float] = None) -> jax.Array:
+    """One-token-query attention over a (partially filled) KV cache.
+
+    GQA via a grouped einsum — never materializes repeated KV. This also
+    keeps XLA SPMD on the cheap path when the cache sequence dim is sharded
+    (a broadcast repeat makes the partitioner re-shard the whole cache)."""
+    b, hq, d = q.shape
+    hkv, s_max = k.shape[1], k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s_max)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd_sequential_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bm: jax.Array, Cm: jax.Array,
+                       init_state: Optional[jax.Array] = None):
+    """Step-by-step recurrence oracle: h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t.
+
+    Returns (y (B,L,H,P), final_state (B,H,N,P)).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = Bm.astype(jnp.float32), Cm.astype(jnp.float32), A.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(dtt * Af[None, :])                     # (B,H)
+        upd = dtt[..., None, None] * Bt[:, None, :, None] * xt[:, :, None, :]
+        S = a[..., None, None] * S + upd                   # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32) if init_state is None else init_state
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                             # (B,L,H,P)
+    return y.astype(x.dtype), S
+
+
+def ssd_chunked_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 64,
+                    init_state: Optional[jax.Array] = None,
+                    unroll: bool = False):
+    """Chunked state-space-duality oracle (the algorithm the kernel mirrors).
+
+    Scans over chunks carrying the (B,H,N,P) state, so peak memory is one
+    chunk's intra-buffers — matches the kernel's streaming structure.
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc, q = l // chunk, chunk
+    xf = jnp.moveaxis(x.astype(jnp.float32).reshape(b, nc, q, h, p), 1, 0)
+    dtf = jnp.moveaxis(dt.astype(jnp.float32).reshape(b, nc, q, h), 1, 0)
+    Bf = jnp.moveaxis(Bm.astype(jnp.float32).reshape(b, nc, q, n), 1, 0)
+    Cf = jnp.moveaxis(Cm.astype(jnp.float32).reshape(b, nc, q, n), 1, 0)
+    Af = A.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(S, inp):
+        xc, dtc, Bc, Cc = inp          # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        dtA = dtc * Af[None, None, :]                       # (B,Q,H)
+        cum = jnp.cumsum(dtA, axis=1)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H)
+        # clamp the (masked) upper triangle BEFORE exp: avoids inf in the
+        # unselected where-branch, whose cotangent would be 0 * inf = NaN
+        diff = jnp.where(tri[None, :, :, None], diff, 0.0)
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc)         # (B,Q,Q)
+        xdt = xc * dtc[..., None]                           # (B,Q,H,P)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, Lmat, xdt)
+        y = y + jnp.einsum("bqn,bhnp->bqhp", Cc, S) * jnp.exp(cum)[..., None]
+        decay_in = jnp.exp(cum[:, -1:, :] - cum)            # (B,Q,H)
+        S_new = jnp.exp(cum[:, -1, :])[..., None, None] * S + \
+            jnp.einsum("bqn,bqh,bqhp->bhnp", Bc, decay_in * dtc, xc)
+        return S_new, y
+
+    S0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None else init_state)
+    S_final, ys = jax.lax.scan(step, S0, (xf, dtf, Bf, Cf), unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, p)
+    return y.astype(x.dtype), S_final

@@ -1,0 +1,86 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+The state-space-duality algorithm: within each chunk the output is a masked
+quadratic form (two MXU matmuls), across chunks a cheap (N x P) state
+recurrence carried in VMEM scratch over the sequential chunk grid dimension.
+
+TPU adaptation: the CUDA implementation splits intra-chunk work across warps;
+here the whole (Q x Q) score block and (Q x P) outputs are single MXU calls,
+with chunk length Q chosen so Q^2 + 2 Q max(N, P) floats fit VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *,
+                chunk: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)              # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)               # (Q,)
+    a = a_ref[0].astype(jnp.float32)                       # scalar
+    bm = b_ref[0].astype(jnp.float32)                      # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                      # (Q, N)
+
+    dta = dt * a                                           # (Q,)
+    cum = jnp.cumsum(dta)                                  # (Q,)
+    q = chunk
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    diff = cum[:, None] - cum[None, :]
+    diff = jnp.where(ii >= jj, diff, 0.0)   # clamp before exp (overflow)
+    lmat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)         # (Q, Q)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * lmat
+    xdt = x * dt[:, None]                                  # (Q, P)
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    s_prev = s_ref[...]                                    # (N, P)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, s_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    decay_in = jnp.exp(cum[-1] - cum)                      # (Q,)
+    s_ref[...] = jnp.exp(cum[-1]) * s_prev + jax.lax.dot_general(
+        bm, xdt * decay_in[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """x (B,L,H,P); dt (B,L,H); A (H,); Bm, Cm (B,L,N) -> y (B,L,H,P)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    grid = (b, h, l // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c: (b_, c, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c: (b_, c, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, c: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c: (b_, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c: (b_, c, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

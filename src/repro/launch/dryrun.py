@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell against the
+production meshes; record memory / FLOPs / collective volume / roofline.
+
+XLA's cost_analysis counts while-loop (lax.scan) bodies ONCE, independent of
+trip count (verified empirically in EXPERIMENTS.md SS Dry-run methodology).
+Layer stacks here are scanned, so each cell is lowered THREE times:
+
+  A. full depth, scanned   -> compile success, memory_analysis, HLO text
+  B. 2 scan-units, unrolled-> cost_B (counted exactly)
+  C. 1 scan-unit,  unrolled-> cost_C (counted exactly)
+
+  per_unit = cost_B - cost_C;  nonloop = cost_C - per_unit
+  corrected_total = nonloop + n_units * per_unit
+
+The same extrapolation corrects collective bytes parsed from the HLO.
+
+MUST run as its own process (device count locks at first jax init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_config, shape_applicable
+from repro.distributed import sharding as SH
+from repro.kernels import ops as KOPS
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MD
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.step import jit_serve_step, jit_train_step
+
+# TPU v5e constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+
+def _unit_layers(cfg) -> int:
+    return cfg.hybrid_period if cfg.family == "hybrid" else 1
+
+
+def _n_units(cfg) -> int:
+    return cfg.num_layers // _unit_layers(cfg)
+
+
+def _reduced_depth(cfg, units: int):
+    upd = {"num_layers": units * _unit_layers(cfg)}
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = units
+    return dataclasses.replace(cfg, **upd)
+
+
+def _lower_cell(cfg, shape, mesh, *, remat: bool, unroll: bool,
+                moments_dtype: str):
+    """Lower one variant; returns the jax Lowered object."""
+    params_struct = SP.param_specs(cfg)
+    if shape.kind == "decode":
+        cache_struct, tokens_struct = SP.decode_specs(cfg, shape)
+        step, _ = jit_serve_step(cfg, mesh, impl="xla", unroll=unroll,
+                                 params_struct=params_struct,
+                                 cache_struct=cache_struct,
+                                 tokens_struct=tokens_struct)
+        with mesh:
+            return step.lower(params_struct, cache_struct, tokens_struct)
+    if shape.kind == "prefill":
+        batch_struct = SP.batch_specs(cfg, shape)
+        p_sh = SH.param_shardings(params_struct, mesh)
+        b_sh = SH.batch_shardings(batch_struct, mesh)
+
+        def prefill(params, batch):
+            logits, _ = MD.forward(cfg, params, batch, impl="xla",
+                                   remat=False, unroll=unroll)
+            return logits[:, -1, :]
+
+        step = jax.jit(prefill, in_shardings=(p_sh, b_sh), out_shardings=None)
+        with mesh:
+            return step.lower(params_struct, batch_struct)
+    # train
+    batch_struct = SP.batch_specs(cfg, shape)
+    opt = make_optimizer(OptimizerConfig(name="adamw",
+                                         moments_dtype=moments_dtype))
+    step, _ = jit_train_step(cfg, opt, mesh, impl="xla", remat=remat,
+                             unroll=unroll, params_struct=params_struct,
+                             batch_struct=batch_struct)
+    opt_struct = jax.eval_shape(opt.init, params_struct)
+    with mesh:
+        return step.lower(params_struct, opt_struct, batch_struct)
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll, kinds = collective_bytes(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll),
+        "kinds": kinds,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, remat: bool = True,
+             moments_dtype: str = "bfloat16", tag: str = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_tag,
+           "kind": shape.kind, "status": "skip", "reason": reason}
+    if not ok:
+        print(f"[dryrun] {cfg.name} x {shape_name} x {mesh_tag}: SKIP ({reason})")
+        if out_dir is not None:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{cfg.name}__{shape_name}__{mesh_tag}.json").write_text(
+                json.dumps(rec, indent=1))
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    SH.set_mesh(mesh)
+    t0 = time.time()
+    try:
+        # ---- A: full model, scanned -> compile success + memory ----
+        lowered = _lower_cell(cfg, shape, mesh, remat=remat, unroll=False,
+                              moments_dtype=moments_dtype)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        raw = _costs(compiled)
+
+        # ---- B/C: calibrated cost extrapolation ----
+        # cap the unrolled SSD chunk bodies for long-sequence ssm/hybrid
+        # cells: HLO size would otherwise explode (chunks x mamba layers);
+        # intra-chunk flops are linear in chunk length -> analytic delta
+        ssd_override = None
+        ssd_flop_delta = 0.0
+        if cfg.ssm is not None and shape.kind != "decode":
+            d_in = cfg.ssm.expand * cfg.d_model
+            n_mamba_2u = sum(
+                1 for i in range(2 * _unit_layers(cfg))
+                if not cfg.is_attention_layer(i))
+            n_chunks_2u = (shape.seq_len // cfg.ssm.chunk) * n_mamba_2u
+            if n_chunks_2u > 64:
+                ssd_override = shape.seq_len // max(
+                    1, 64 // max(n_mamba_2u, 1))
+                ssd_override = max(cfg.ssm.chunk, ssd_override)
+                # fwd intra-chunk flops/token/layer ~= 2*d_in*(Q + 2N)
+                passes = 3.0 if shape.kind == "train" else 1.0
+                tokens_g = shape.global_batch * shape.seq_len
+                n_mamba_total = sum(
+                    1 for i in range(cfg.num_layers)
+                    if not cfg.is_attention_layer(i))
+                ssd_flop_delta = (passes * tokens_g * 2.0 * d_in
+                                  * (cfg.ssm.chunk - ssd_override)
+                                  * n_mamba_total) / mesh.devices.size
+        KOPS.set_unroll_inner(True, ssd_chunk_override=ssd_override)
+        try:
+            c1 = _costs(_lower_cell(_reduced_depth(cfg, 1), shape, mesh,
+                                    remat=False, unroll=True,
+                                    moments_dtype=moments_dtype).compile())
+            c2 = _costs(_lower_cell(_reduced_depth(cfg, 2), shape, mesh,
+                                    remat=False, unroll=True,
+                                    moments_dtype=moments_dtype).compile())
+        finally:
+            KOPS.set_unroll_inner(False)
+        n_units = _n_units(cfg)
+        corr = {}
+        for key in ("flops", "bytes", "coll"):
+            per_unit = max(c2[key] - c1[key], 0.0)
+            nonloop = max(c1[key] - per_unit, 0.0)
+            corr[key] = nonloop + n_units * per_unit
+        corr["flops"] = max(corr["flops"] + ssd_flop_delta, 0.0)
+        kinds = {}
+        for k in c1["kinds"]:
+            if k.startswith("n_"):
+                continue
+            pu = max(c2["kinds"][k] - c1["kinds"][k], 0)
+            nl = max(c1["kinds"][k] - pu, 0)
+            kinds[k] = nl + n_units * pu
+
+        n_params = cfg.param_count()
+        n_active = cfg.param_count(active_only=True)
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * n_active * tokens
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * n_active * tokens
+        else:
+            tokens = shape.global_batch
+            model_flops = 2.0 * n_active * tokens
+
+        t_compute = corr["flops"] / PEAK_FLOPS
+        t_memory = corr["bytes"] / HBM_BW
+        t_coll = corr["coll"] / ICI_BW
+        dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                       (t_coll, "collective"))[1]
+        mem_fields = {
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "args": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "alias": getattr(mem, "alias_size_in_bytes", None),
+        }
+        rec.update({
+            "status": "ok", "n_chips": n_chips,
+            "ssd_chunk_override": ssd_override,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "total_s": round(time.time() - t0, 2),
+            "raw_reported": raw,
+            "flops_per_device": corr["flops"],
+            "bytes_per_device": corr["bytes"],
+            "collective_bytes_per_device": corr["coll"],
+            "collective_kinds": kinds,
+            "memory": mem_fields,
+            "model_flops_global": model_flops,
+            "params_total": n_params, "params_active": n_active,
+            "tokens": tokens,
+            "roofline": {
+                "t_compute_s": t_compute, "t_memory_s": t_memory,
+                "t_collective_s": t_coll, "dominant": dominant,
+                "useful_flops_ratio": model_flops / max(corr["flops"] * n_chips, 1.0),
+            },
+        })
+        print(f"[dryrun] {cfg.name} x {shape_name} x {mesh_tag}: OK "
+              f"compile={t_compile:.1f}s flops/dev={corr['flops']:.3e} "
+              f"coll/dev={corr['coll']:.3e}B dom={dominant} "
+              f"useful={rec['roofline']['useful_flops_ratio']:.2f}")
+        print(f"  memory_analysis/device: temp={mem_fields['temp']} "
+              f"args={mem_fields['args']} out={mem_fields['output']} "
+              f"alias={mem_fields['alias']}")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        print(f"[dryrun] {cfg.name} x {shape_name} x {mesh_tag}: FAIL {e}")
+    finally:
+        SH.set_mesh(None)
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = out_dir / f"{cfg.name}__{shape_name}__{mesh_tag}{suffix}.json"
+        fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    # hillclimb knobs (EXPERIMENTS.md SSPerf)
+    ap.add_argument("--sp-residuals", action="store_true")
+    ap.add_argument("--kv-write", default="onehot", choices=["onehot", "dus"])
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--tag", default=None, help="suffix for result files")
+    args = ap.parse_args()
+    if args.sp_residuals:
+        from repro.distributed import sharding as _sh
+        _sh.set_sp_residuals(True)
+    if args.kv_write != "onehot":
+        from repro.models import layers as _lay
+        _lay.set_kv_write_mode(args.kv_write)
+    if args.moe_group is not None:
+        from repro.models import moe as _moe
+        _moe.set_default_group(args.moe_group)
+    out = Path(args.out)
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    if args.all:
+        cells = [(c.name, s) for c in ARCHS.values() for s in SHAPES_BY_NAME]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for multi_pod in meshes:
+        tag = "pod2x16x16" if multi_pod else "pod16x16"
+        for arch, shape_name in cells:
+            if args.skip_existing:
+                fn = out / f"{get_config(arch).name}__{shape_name}__{tag}.json"
+                if fn.exists() and json.loads(fn.read_text()).get("status") in ("ok", "skip"):
+                    continue
+            rec = run_cell(arch, shape_name, multi_pod, out,
+                           remat=not args.no_remat, tag=args.tag)
+            n_fail += rec["status"] == "fail"
+    print(f"[dryrun] done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

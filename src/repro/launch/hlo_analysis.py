@@ -1,0 +1,61 @@
+"""Parse compiled/optimized HLO text for collective-communication volume.
+
+cost_analysis() has no collective-bytes entry, so we sum the result-shape
+bytes of every collective op in the optimized module (documented
+approximation: result bytes ~= per-device payload moved per op instance).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %ag = bf16[4,128,2048]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Total + per-op-kind result bytes of collectives in an HLO module.
+
+    ``-start`` ops are counted; their ``-done`` twins are skipped to avoid
+    double counting."""
+    per_kind: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_part, dtype, dims, kind = m.groups()
+        if tuple_part is not None:
+            nbytes = sum(_shape_bytes(dt, dm)
+                         for dt, dm in _SHAPE_RE.findall(tuple_part))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        per_kind[kind] += nbytes
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    per_kind.update({f"n_{k}": counts[k] for k in COLLECTIVES})
+    return total, per_kind

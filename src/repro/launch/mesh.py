@@ -1,0 +1,16 @@
+"""Production mesh construction (brief-mandated shapes)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Mesh over whatever devices exist (CPU smoke / single host)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input shape) dry-run cell.
+
+No device allocation: params via jax.eval_shape over init, inputs as bare
+structs. Modality frontends are stubs — audio/vision cells receive
+precomputed frame/patch embeddings as inputs (per the brief).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as MD
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training / prefill inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.num_tokens, cfg.d_model), dt)
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: MD.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Any, Any]:
+    """(cache_specs, token_specs) for a serve_step cell: one new token with
+    a KV cache of shape.seq_len."""
+    b, s_max = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = jax.ShapeDtypeStruct((b, cfg.encoder_seq_len, cfg.d_model), dt)
+    cache = jax.eval_shape(
+        functools.partial(MD.init_decode_cache, cfg, b, s_max, dt,
+                          enc_out=enc_out))
+    tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """All structs a dry-run cell needs, keyed by role."""
+    if shape.kind == "decode":
+        cache, tokens = decode_specs(cfg, shape)
+        return {"cache": cache, "tokens": tokens}
+    return {"batch": batch_specs(cfg, shape)}

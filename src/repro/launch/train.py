@@ -1,0 +1,67 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
+      --steps 50 --batch 8 --seq 128
+
+--smoke uses the reduced config (CPU-runnable); full configs train on real
+accelerator fleets via the same pjit step (see launch/dryrun.py for the
+production-mesh lowering of every assigned architecture).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core.annotations import Annotation
+from repro.sched.train_scheduler import CashTrainScheduler, make_hosts
+from repro.train.data import DataConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--hosts", type=int, default=4,
+                    help="CASH-scheduled data hosts (simulated credit state)")
+    ap.add_argument("--no-cash", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_config(cfg)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch,
+                          num_shards=max(args.hosts, 1))
+    sched = None
+    if not args.no_cash:
+        hosts = make_hosts(args.hosts)
+        sched = CashTrainScheduler(hosts, num_shards=data_cfg.num_shards,
+                                   bottleneck=Annotation.BURST_CPU)
+    trainer = Trainer(
+        cfg, data_cfg,
+        opt_cfg=OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                                total_steps=args.steps),
+        train_cfg=TrainConfig(steps=args.steps, grad_accum=args.grad_accum,
+                              ckpt_dir=args.ckpt_dir),
+        scheduler=sched, dtype=jnp.float32)
+    if args.resume:
+        restored = trainer.maybe_restore()
+        print(f"resume: {'restored step ' + str(trainer.step) if restored else 'fresh run'}")
+    hist = trainer.run()
+    print(f"final loss: {hist[-1]['loss']:.4f} (first {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

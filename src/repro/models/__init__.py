@@ -1,0 +1,12 @@
+from repro.models import layers, mamba, moe
+from repro.models.model import (
+    decode_step,
+    encode,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+)
+
+__all__ = ["layers", "mamba", "moe", "decode_step", "encode", "forward",
+           "init_decode_cache", "init_params", "loss_fn"]

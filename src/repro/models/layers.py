@@ -1,0 +1,222 @@
+"""Core transformer layers: norms, rotary embeddings, GQA attention, MLPs.
+
+Functional style: params are plain pytrees (nested dicts of jax.Arrays),
+layers are pure functions. Layer stacks carry a leading ``num_layers`` dim
+and are driven by ``jax.lax.scan`` (keeps HLO small at 80-layer scale).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+KV_WRITE_MODE = "onehot"     # "onehot" | "dus" (hillclimb knob; see dryrun)
+
+
+def set_kv_write_mode(mode: str) -> None:
+    global KV_WRITE_MODE
+    assert mode in ("onehot", "dus")
+    KV_WRITE_MODE = mode
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm != "rmsnorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ----------------------------------------------------------------- rotary
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D); positions (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                 # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    emb = jnp.zeros((length, dim), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb
+
+
+# -------------------------------------------------------------- attention
+def init_attention(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, nq * hd)) * sc).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, nkv * hd)) * sc).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, nkv * hd)) * sc).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (nq * hd, d)) * (nq * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def attention_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                    positions: jax.Array, *, impl: str = "auto",
+                    causal: bool = True,
+                    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill). x (B, S, d).
+
+    ``kv`` overrides keys/values source (cross-attention)."""
+    b, s, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    if kv is None:
+        xk = xv = x
+        kpos = positions
+    else:
+        xk, xv = kv
+        kpos = jnp.broadcast_to(jnp.arange(xk.shape[1])[None], (b, xk.shape[1]))
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, xk.shape[1], nkv, hd)
+    v = v.reshape(b, xv.shape[1], nkv, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kpos, cfg.rope_theta)
+    qt = constrain(q.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    kt = constrain(k.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    vt = constrain(v.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    o = ops.attention(qt, kt, vt, causal=causal, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, nq * hd)
+    return o @ p["wo"]
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     lengths: jax.Array, *, impl: str = "auto",
+                     use_rope: bool = True):
+    """Single-token decode. x (B, 1, d); cache (B, Hkv, S_max, hd);
+    lengths (B,) = tokens already in cache. Returns (out, new_k, new_v)."""
+    b, _, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, nq, hd)
+    k = k.reshape(b, 1, nkv, hd)
+    v = v.reshape(b, 1, nkv, hd)
+    if use_rope:
+        pos = lengths[:, None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    # write new kv at position `lengths`
+    k_t = k.transpose(0, 2, 1, 3)                        # (B, Hkv, 1, hd)
+    v_t = v.transpose(0, 2, 1, 3)
+    if KV_WRITE_MODE == "dus":
+        # per-row dynamic_update_slice along the cache sequence dim
+        def _wr(c, u, l):
+            return jax.lax.dynamic_update_slice(c, u, (0, l, 0))
+        cache_k = jax.vmap(_wr)(cache_k, k_t, lengths)
+        cache_v = jax.vmap(_wr)(cache_v, v_t, lengths)
+    else:
+        idx = lengths[:, None, None, None]
+        s_max = cache_k.shape[2]
+        onehot = (jnp.arange(s_max)[None, None, :, None] == idx)
+        cache_k = jnp.where(onehot, k_t, cache_k)
+        cache_v = jnp.where(onehot, v_t, cache_v)
+    o = ops.decode_attention(q.reshape(b, nq, hd), cache_k, cache_v,
+                             lengths + 1, impl=impl)
+    return (o.reshape(b, 1, nq * hd) @ p["wo"]), cache_k, cache_v
+
+
+def cross_attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                           enc_k: jax.Array, enc_v: jax.Array,
+                           *, impl: str = "auto"):
+    """Decode-time cross attention against fixed encoder K/V
+    (B, Hkv, S_enc, hd) — no cache mutation."""
+    b = x.shape[0]
+    hd, nq = cfg.resolved_head_dim, cfg.num_heads
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    s_enc = enc_k.shape[2]
+    lengths = jnp.full((b,), s_enc, jnp.int32)
+    o = ops.decode_attention(q.reshape(b, nq, hd), enc_k, enc_v, lengths,
+                             impl=impl)
+    return o.reshape(b, 1, nq * hd) @ p["wo"]
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(cfg: ModelConfig, key: jax.Array, dtype: Any,
+             d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = cfg.d_ff if d_ff is None else d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": (jax.random.normal(ks[0], (d, ff)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[1], (ff, d)) * ff ** -0.5).astype(dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = (jax.random.normal(ks[2], (d, ff)) * d ** -0.5).astype(dtype)
+    return p
+
+
+def mlp_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = x @ p["w1"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]

@@ -1,0 +1,124 @@
+"""Mamba-2 (SSD) block: in_proj -> causal conv -> selective SSM -> gated out.
+
+Train / prefill uses the chunked SSD (Pallas kernel or XLA ref via
+kernels.ops.ssd). Decode keeps per-layer recurrent state:
+  conv_state (B, d_conv-1, conv_dim) and ssd_state (B, H, N, P).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import rmsnorm
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return d_in, n_heads, s.d_state, s.head_dim, conv_dim
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in, h, n, p_dim, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * n + h          # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in, h, n, _, _ = dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * n], axis=-1)
+    return z, xBC, dt
+
+
+def mamba_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                *, impl: str = "auto") -> jax.Array:
+    """Full-sequence SSD. x (B, S, d) -> (B, S, d)."""
+    s_cfg = cfg.ssm or SSMConfig()
+    b, l, d = x.shape
+    d_in, h, n, p_dim, conv_dim = dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over (x, B, C)
+    w = p["conv_w"]                                        # (K, conv_dim)
+    k_w = w.shape[0]
+    pad = jnp.zeros((b, k_w - 1, conv_dim), xBC.dtype)
+    xc = jnp.concatenate([pad, xBC], axis=1)
+    out = jnp.zeros_like(xBC)
+    for i in range(k_w):
+        out = out + xc[:, i:i + l, :] * w[i]
+    xBC = jax.nn.silu(out + p["conv_b"])
+
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B, S, H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+    xh = xs.reshape(b, l, h, p_dim)
+    chunk = min(s_cfg.chunk, l)
+    if l % chunk != 0:
+        chunk = 1
+        while l % (chunk * 2) == 0 and chunk * 2 <= s_cfg.chunk:
+            chunk *= 2
+    from repro.kernels import ops
+    y = ops.ssd(xh, dt, A, Bm, Cm, chunk=chunk, impl=impl)          # (B,S,H,P)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"]).astype(x.dtype)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype: Any) -> Params:
+    s = cfg.ssm or SSMConfig()
+    d_in, h, n, p_dim, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, h, n, p_dim), jnp.float32),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                 cache: Params) -> Tuple[jax.Array, Params]:
+    """Single-step recurrence. x (B, 1, d) -> (B, 1, d), new cache."""
+    b = x.shape[0]
+    d_in, h, n, p_dim, conv_dim = dims(cfg)
+    zxbcdt = x[:, 0] @ p["in_proj"]                        # (B, proj)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    w = p["conv_w"]                                        # (K, conv_dim)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # (B, K, conv)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"]
+    xBC_act = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+
+    xs, Bm, Cm = jnp.split(xBC_act, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B, H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])                              # (B, H)
+    xh = xs.reshape(b, h, p_dim).astype(jnp.float32)
+    upd = dt[..., None, None] * Bm[:, None, :, None].astype(jnp.float32) \
+        * xh[:, :, None, :]
+    S = a[..., None, None] * cache["ssd"] + upd            # (B,H,N,P)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), S)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"]).astype(x.dtype)[:, None]
+    return out, {"conv": new_conv, "ssd": S}

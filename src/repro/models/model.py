@@ -1,0 +1,452 @@
+"""Unified model builder for the 10 assigned architectures.
+
+Families: dense | moe | ssm | hybrid | encdec | vlm | audio (audio==encdec).
+Parameters are pytrees with leading layer/group dims; forward passes scan
+over the stacks (small HLO even at 80 layers). Every family exposes:
+
+  init_params(cfg, key, dtype)           -> params
+  forward(cfg, params, batch, ...)       -> (logits, aux_loss)
+  loss_fn(cfg, params, batch, ...)       -> scalar loss
+  init_decode_cache(cfg, params, batch_size, s_max, ...) -> cache
+  decode_step(cfg, params, cache, tokens, ...) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as _SH
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_layer(cfg: ModelConfig, key: jax.Array, layer_idx: int,
+                dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": L.init_norm(cfg, cfg.d_model),
+                 "ln2": L.init_norm(cfg, cfg.d_model)}
+    if cfg.is_attention_layer(layer_idx):
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+    else:
+        p["mamba"] = M.init_mamba(cfg, ks[0], dtype)
+    if cfg.is_moe_layer(layer_idx):
+        p["moe"] = MOE.init_moe(cfg, ks[1], dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.init_mlp(cfg, ks[1], dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype: Optional[Any] = None) -> Params:
+    dtype = _dtype(cfg) if dtype is None else dtype
+    keys = jax.random.split(key, cfg.num_layers + cfg.encoder_layers + 4)
+    vp = cfg.padded_vocab_size
+    params: Params = {
+        "embed": (jax.random.normal(keys[-1], (vp, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "ln_f": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[-2], (cfg.d_model, vp)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.num_layers // period
+        groups = []
+        for g in range(n_groups):
+            gp: Params = {
+                "ln1": _stack([L.init_norm(cfg, cfg.d_model) for _ in range(period)]),
+                "ln2": _stack([L.init_norm(cfg, cfg.d_model) for _ in range(period)]),
+            }
+            mambas, moes, mlps = [], [], []
+            for rel in range(period):
+                k = keys[g * period + rel]
+                ks = jax.random.split(k, 2)
+                if cfg.is_attention_layer(rel):
+                    gp["attn"] = L.init_attention(cfg, ks[0], dtype)
+                else:
+                    mambas.append(M.init_mamba(cfg, ks[0], dtype))
+                if cfg.is_moe_layer(rel):
+                    moes.append(MOE.init_moe(cfg, ks[1], dtype))
+                elif cfg.d_ff > 0:
+                    mlps.append(L.init_mlp(cfg, ks[1], dtype))
+            gp["mamba"] = _stack(mambas)
+            if moes:
+                gp["moe"] = _stack(moes)
+            if mlps:
+                gp["mlp"] = _stack(mlps)
+            groups.append(gp)
+        # groups share structure (period even, fixed attention index)
+        params["groups"] = _stack(groups)
+    else:
+        params["layers"] = _stack([
+            _init_layer(cfg, keys[i], i, dtype) for i in range(cfg.num_layers)])
+
+    if cfg.encoder_layers:
+        enc_cfg = cfg
+        enc = []
+        for i in range(cfg.encoder_layers):
+            k = keys[cfg.num_layers + i]
+            ks = jax.random.split(k, 2)
+            enc.append({
+                "ln1": L.init_norm(cfg, cfg.d_model),
+                "ln2": L.init_norm(cfg, cfg.d_model),
+                "attn": L.init_attention(enc_cfg, ks[0], dtype),
+                "mlp": L.init_mlp(enc_cfg, ks[1], dtype),
+            })
+        params["encoder"] = _stack(enc)
+        params["enc_ln_f"] = L.init_norm(cfg, cfg.d_model)
+        # decoder cross-attention stack (one per decoder layer)
+        params["cross"] = _stack([
+            L.init_attention(cfg, keys[-3 - i], dtype)
+            for i in range(cfg.num_layers)])
+        params["ln_x"] = _stack([L.init_norm(cfg, cfg.d_model)
+                                 for _ in range(cfg.num_layers)])
+    return params
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+def _maybe_remat(fn, remat: bool):
+    if not remat:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _decoder_layer(cfg: ModelConfig, lp: Params, x: jax.Array,
+                   positions: jax.Array, layer_idx_static: Dict[str, bool],
+                   impl: str, enc_out: Optional[jax.Array] = None,
+                   cross_p: Optional[Params] = None,
+                   ln_x: Optional[Params] = None) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain(x, "dp", None, "model") if _SH.SP_RESIDUALS \
+        else constrain(x, "dp", None, None)
+    h = L.norm(cfg, lp["ln1"], x)
+    if layer_idx_static["attention"]:
+        x = x + L.attention_block(cfg, lp["attn"], h, positions, impl=impl,
+                                  use_rope=(cfg.family != "encdec"))
+    else:
+        x = x + M.mamba_block(cfg, lp["mamba"], h, impl=impl)
+    if enc_out is not None and cross_p is not None:
+        hx = L.norm(cfg, ln_x, x)
+        x = x + L.attention_block(cfg, cross_p, hx, positions, impl=impl,
+                                  causal=False, kv=(enc_out, enc_out),
+                                  use_rope=False)
+    h2 = L.norm(cfg, lp["ln2"], x)
+    if layer_idx_static["moe"]:
+        y, aux = MOE.moe_block(cfg, lp["moe"], h2)
+        x = x + y
+    elif cfg.d_ff > 0:
+        x = x + L.mlp_block(cfg, lp["mlp"], h2)
+    return x, aux
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+               positions: jax.Array, impl: str, remat: bool,
+               enc_out: Optional[jax.Array] = None,
+               unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+
+        def group_body(carry, gp):
+            x = carry
+            aux_total = jnp.zeros((), jnp.float32)
+            mamba_i = moe_i = mlp_i = 0
+            for rel in range(period):
+                h = L.norm(cfg, jax.tree.map(lambda a: a[rel], gp["ln1"]), x)
+                if cfg.is_attention_layer(rel):
+                    x = x + L.attention_block(cfg, gp["attn"], h, positions,
+                                              impl=impl)
+                else:
+                    mp = jax.tree.map(lambda a: a[mamba_i], gp["mamba"])
+                    x = x + M.mamba_block(cfg, mp, h, impl=impl)
+                    mamba_i += 1
+                h2 = L.norm(cfg, jax.tree.map(lambda a: a[rel], gp["ln2"]), x)
+                if cfg.is_moe_layer(rel):
+                    ep = jax.tree.map(lambda a: a[moe_i], gp["moe"])
+                    y, aux = MOE.moe_block(cfg, ep, h2)
+                    x = x + y
+                    aux_total = aux_total + aux
+                    moe_i += 1
+                elif cfg.d_ff > 0:
+                    fp = jax.tree.map(lambda a: a[mlp_i], gp["mlp"])
+                    x = x + L.mlp_block(cfg, fp, h2)
+                    mlp_i += 1
+            return x, aux_total
+
+        body = _maybe_remat(group_body, remat)
+        x, auxs = jax.lax.scan(body, x, params["groups"], unroll=unroll)
+        return x, jnp.sum(auxs)
+
+    # homogeneous stack (dense / moe / ssm / encdec decoder / vlm)
+    is_attn = cfg.is_attention_layer(0)
+    is_moe = cfg.is_moe_layer(0)
+    flags = {"attention": is_attn, "moe": is_moe}
+    has_cross = cfg.encoder_layers > 0
+
+    def layer_body(carry, inp):
+        x = carry
+        if has_cross:
+            lp, cross_p, ln_x = inp
+            x, aux = _decoder_layer(cfg, lp, x, positions, flags, impl,
+                                    enc_out=enc_out, cross_p=cross_p,
+                                    ln_x=ln_x)
+        else:
+            lp = inp
+            x, aux = _decoder_layer(cfg, lp, x, positions, flags, impl)
+        return x, aux
+
+    body = _maybe_remat(layer_body, remat)
+    xs = (params["layers"], params["cross"], params["ln_x"]) if has_cross \
+        else params["layers"]
+    x, auxs = jax.lax.scan(body, x, xs, unroll=unroll)
+    return x, jnp.sum(auxs)
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array,
+           *, impl: str = "auto", remat: bool = False,
+           unroll: bool = False) -> jax.Array:
+    """Whisper-style encoder over stubbed frame embeddings (B, S_enc, d)."""
+    b, s, d = frames.shape
+    pos_emb = L.sinusoidal_embedding(s, d).astype(frames.dtype)
+    x = frames + pos_emb[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, lp):
+        x = carry
+        h = L.norm(cfg, lp["ln1"], x)
+        x = x + L.attention_block(cfg, lp["attn"], h, positions, impl=impl,
+                                  causal=False, use_rope=False)
+        h = L.norm(cfg, lp["ln2"], x)
+        x = x + L.mlp_block(cfg, lp["mlp"], h)
+        return x, ()
+
+    body = _maybe_remat(body, remat)
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=unroll)
+    return L.norm(cfg, params["enc_ln_f"], x)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, impl: str = "auto", remat: bool = False,
+            unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """batch: tokens (B, S) [+ frames (B,S_enc,d) | image_embeds (B,V,d)].
+
+    Returns (logits (B, S, V), aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = constrain(x, "dp", None, None)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        v = batch["image_embeds"].shape[1]
+        x = jnp.concatenate([batch["image_embeds"].astype(x.dtype),
+                             x[:, v:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.family == "encdec":
+        x = x + L.sinusoidal_embedding(s, cfg.d_model).astype(x.dtype)[None]
+        enc_out = encode(cfg, params, batch["frames"], impl=impl, remat=remat,
+                         unroll=unroll)
+    else:
+        enc_out = None
+    x, aux = _run_stack(cfg, params, x, positions, impl, remat, enc_out=enc_out,
+                        unroll=unroll)
+    x = L.norm(cfg, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    # mask padded vocab entries (vocab padded for clean model-axis sharding)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, impl: str = "auto", remat: bool = False,
+            unroll: bool = False) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(cfg, params, batch, impl=impl, remat=remat,
+                          unroll=unroll)
+    labels = batch["labels"]
+    # sharding-safe cross entropy: logsumexp + one-hot contraction keep the
+    # vocab dim model-sharded end-to-end (no all-gather of logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    lab_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - lab_logit
+    mask = (labels >= 0).astype(jnp.float32)
+    xent = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    m = cfg.moe
+    loss = xent + (m.aux_loss_weight * aux if m is not None else 0.0)
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ===========================================================================
+# decode (serving)
+# ===========================================================================
+
+def init_decode_cache(cfg: ModelConfig, batch: int, s_max: int,
+                      dtype: Optional[Any] = None,
+                      enc_out: Optional[jax.Array] = None) -> Params:
+    """Stacked per-layer KV caches (+ mamba states for ssm/hybrid)."""
+    dtype = _dtype(cfg) if dtype is None else dtype
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    cache: Params = {"lengths": jnp.zeros((batch,), jnp.int32)}
+
+    def kv(n_layers):
+        return (jnp.zeros((n_layers, batch, nkv, s_max, hd), dtype),
+                jnp.zeros((n_layers, batch, nkv, s_max, hd), dtype))
+
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.num_layers // period
+        n_mamba = period - 1
+        cache["k"], cache["v"] = kv(n_groups)
+        d_in, h, n, p_dim, conv_dim = M.dims(cfg)
+        s = cfg.ssm
+        cache["conv"] = jnp.zeros((n_groups, n_mamba, batch, s.d_conv - 1, conv_dim), dtype)
+        cache["ssd"] = jnp.zeros((n_groups, n_mamba, batch, h, n, p_dim), jnp.float32)
+    elif cfg.family == "ssm":
+        d_in, h, n, p_dim, conv_dim = M.dims(cfg)
+        s = cfg.ssm
+        cache["conv"] = jnp.zeros((cfg.num_layers, batch, s.d_conv - 1, conv_dim), dtype)
+        cache["ssd"] = jnp.zeros((cfg.num_layers, batch, h, n, p_dim), jnp.float32)
+    else:
+        cache["k"], cache["v"] = kv(cfg.num_layers)
+    if cfg.encoder_layers:
+        assert enc_out is not None, "enc-dec decode needs encoder output"
+        # pre-projected cross-attention K/V per decoder layer
+        cache["enc_out"] = enc_out
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, *, impl: str = "auto",
+                unroll: bool = False) -> Tuple[jax.Array, Params]:
+    """One decoding step. tokens (B,) -> logits (B, V), updated cache."""
+    b = tokens.shape[0]
+    lengths = cache["lengths"]
+    x = params["embed"][tokens][:, None]                     # (B, 1, d)
+    if cfg.family == "encdec":
+        pe = L.sinusoidal_embedding(int(cache["k"].shape[3]), cfg.d_model)
+        x = x + pe[lengths[0]][None, None].astype(x.dtype)
+
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+
+        def group_body(x, inp):
+            gp, ck, cv, conv, ssd = inp
+            mamba_i = moe_i = mlp_i = 0
+            new_conv, new_ssd = [], []
+            nk, nv = ck, cv
+            for rel in range(period):
+                h = L.norm(cfg, jax.tree.map(lambda a: a[rel], gp["ln1"]), x)
+                if cfg.is_attention_layer(rel):
+                    o, nk, nv = L.attention_decode(cfg, gp["attn"], h, ck, cv,
+                                                   lengths, impl=impl)
+                    x = x + o
+                else:
+                    mp = jax.tree.map(lambda a: a[mamba_i], gp["mamba"])
+                    mc = {"conv": conv[mamba_i], "ssd": ssd[mamba_i]}
+                    o, mc = M.mamba_decode(cfg, mp, h, mc)
+                    new_conv.append(mc["conv"])
+                    new_ssd.append(mc["ssd"])
+                    mamba_i += 1
+                    x = x + o
+                h2 = L.norm(cfg, jax.tree.map(lambda a: a[rel], gp["ln2"]), x)
+                if cfg.is_moe_layer(rel):
+                    ep = jax.tree.map(lambda a: a[moe_i], gp["moe"])
+                    y, _ = MOE.moe_block(cfg, ep, h2, group_size=b)
+                    x = x + y
+                    moe_i += 1
+                elif cfg.d_ff > 0:
+                    fp = jax.tree.map(lambda a: a[mlp_i], gp["mlp"])
+                    x = x + L.mlp_block(cfg, fp, h2)
+                    mlp_i += 1
+            return x, (nk, nv, jnp.stack(new_conv), jnp.stack(new_ssd))
+
+        x, (nk, nv, nconv, nssd) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["k"], cache["v"], cache["conv"], cache["ssd"]),
+            unroll=unroll)
+        cache = dict(cache, k=nk, v=nv, conv=nconv, ssd=nssd)
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, conv, ssd = inp
+            h = L.norm(cfg, lp["ln1"], x)
+            o, mc = M.mamba_decode(cfg, lp["mamba"], h, {"conv": conv, "ssd": ssd})
+            x = x + o
+            return x, (mc["conv"], mc["ssd"])
+
+        x, (nconv, nssd) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssd"]),
+            unroll=unroll)
+        cache = dict(cache, conv=nconv, ssd=nssd)
+
+    else:
+        has_cross = cfg.encoder_layers > 0
+        is_moe = cfg.is_moe_layer(0)
+
+        def body(x, inp):
+            if has_cross:
+                lp, ck, cv, cross_p, ln_x = inp
+            else:
+                lp, ck, cv = inp
+            h = L.norm(cfg, lp["ln1"], x)
+            o, nk, nv = L.attention_decode(
+                cfg, lp["attn"], h, ck, cv, lengths, impl=impl,
+                use_rope=(cfg.family != "encdec"))
+            x = x + o
+            if has_cross:
+                hx = L.norm(cfg, ln_x, x)
+                enc = cache["enc_out"]
+                x = x + L.attention_block(cfg, cross_p, hx,
+                                          jnp.zeros((b, 1), jnp.int32),
+                                          impl=impl, causal=False,
+                                          kv=(enc, enc), use_rope=False)
+            h2 = L.norm(cfg, lp["ln2"], x)
+            if is_moe:
+                y, _ = MOE.moe_block(cfg, lp["moe"], h2, group_size=b)
+                x = x + y
+            elif cfg.d_ff > 0:
+                x = x + L.mlp_block(cfg, lp["mlp"], h2)
+            return x, (nk, nv)
+
+        xs = (params["layers"], cache["k"], cache["v"])
+        if has_cross:
+            xs = xs + (params["cross"], params["ln_x"])
+        x, (nk, nv) = jax.lax.scan(body, x, xs, unroll=unroll)
+        cache = dict(cache, k=nk, v=nv)
+
+    x = L.norm(cfg, params["ln_f"], x[:, 0])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    cache["lengths"] = lengths + 1
+    return logits, cache

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts layer: top-k routing with capacity (GShard-style
+einsum dispatch) — SPMD-friendly: with tokens sharded over ``data`` and
+experts over ``model``, XLA emits the dispatch/combine all-to-alls.
+
+Group size bounds the dispatch tensor (G, S_g, E, C); C = ceil(S_g*k*cf/E).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+Params = Dict[str, Any]
+
+DEFAULT_GROUP = 512
+
+
+def set_default_group(n: int) -> None:
+    """Hillclimb knob: MoE dispatch group size (dispatch volume ~ linear
+    in group size at fixed capacity factor)."""
+    global DEFAULT_GROUP
+    DEFAULT_GROUP = n
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array, dtype: Any) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d, ff, e = cfg.d_model, m.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, ff)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[2], (e, ff, d)) * ff ** -0.5).astype(dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = (jax.random.normal(ks[3], (e, d, ff)) * d ** -0.5).astype(dtype)
+    return p
+
+
+def moe_block(cfg: ModelConfig, p: Params, x: jax.Array,
+              *, group_size: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    tokens = b * s
+    g_sz = min(group_size if group_size is not None else DEFAULT_GROUP, tokens)
+    assert tokens % g_sz == 0, (tokens, g_sz)
+    g = tokens // g_sz
+    cap = max(k, int(math.ceil(g_sz * k * m.capacity_factor / e)))
+
+    xg = constrain(x.reshape(g, g_sz, d), "dp", None, None)
+    logits = (xg.astype(jnp.float32) @ p["router"])            # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load balance aux loss
+    me = jnp.mean(probs, axis=1)                               # (G, E)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=2), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e
+
+    # capacity positions: for the j-th routing choice of each token, its
+    # position within its expert's buffer (GShard cumsum trick)
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)    # (G, S, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(g, k * g_sz, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                 # (G, k*S, E)
+    pos = pos_flat.reshape(g, k, g_sz, e).transpose(0, 2, 1, 3)  # (G, S, k, E)
+    pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)     # (G, S, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)       # (G, S, k, C)
+    combine = jnp.einsum("gske,gskc->gsec", onehot * gate_vals[..., None], pos_oh)
+    dispatch = (combine > 0.0).astype(x.dtype)                 # (G, S, E, C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)            # (G, E, C, d)
+    xe = constrain(xe, "dp", "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])              # (G, E, C, d)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(ye.dtype), ye)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

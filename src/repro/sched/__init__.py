@@ -1,0 +1,10 @@
+"""CASH applied to the JAX runtime: credit-aware training-work scheduling,
+serving admission, straggler prediction, elastic recovery."""
+from repro.sched.elastic import ElasticPlan, plan, resume
+from repro.sched.serve_scheduler import CashServeScheduler, Replica, Request, make_replicas
+from repro.sched.straggler import StragglerMonitor
+from repro.sched.train_scheduler import CashTrainScheduler, TrainHost, make_hosts
+
+__all__ = ["ElasticPlan", "plan", "resume", "CashServeScheduler", "Replica",
+           "Request", "make_replicas", "StragglerMonitor",
+           "CashTrainScheduler", "TrainHost", "make_hosts"]

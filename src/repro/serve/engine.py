@@ -1,0 +1,146 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of KV slots; each engine step decodes one token for every live
+request, admits pending requests into free slots (prefill), and retires
+finished ones. Admission order across replicas is CASH's job
+(repro.sched.serve_scheduler) — this engine is the per-replica executor.
+
+Prefill here uses the decode path token-by-token for small models (exact,
+simple); ``prefill_chunk`` switches to chunked forward prefill when the
+model/file sizes warrant it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+from repro.serve.kv_cache import KVCacheManager
+from repro.serve.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    t_arrive: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, n_slots: int = 8,
+                 max_len: int = 512, eos_id: Optional[int] = None,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 impl: str = "auto", dtype: Any = jnp.float32):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                "Engine's token-feed prefill is exact only for attention "
+                f"families (recurrent state can't rewind); got {cfg.family}")
+        self.cfg = cfg
+        self.params = params
+        self.kv = KVCacheManager(n_slots, max_len)
+        self.sampler = sampler
+        self.eos_id = eos_id
+        self.impl = impl
+        self.cache = MD.init_decode_cache(cfg, n_slots, max_len, dtype)
+        self._step = jax.jit(
+            lambda p, c, t: MD.decode_step(cfg, p, c, t, impl=impl))
+        self.pending: List[ServeRequest] = []
+        self.live: Dict[int, ServeRequest] = {}   # slot -> request
+        self.finished: List[ServeRequest] = []
+        self.key = jax.random.PRNGKey(0)
+        self.steps = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: ServeRequest) -> None:
+        req.t_arrive = time.time()
+        self.pending.append(req)
+
+    def _sync_lengths(self) -> None:
+        lengths = np.zeros((self.kv.n_slots,), np.int32)
+        for slot, info in enumerate(self.kv.slots):
+            lengths[slot] = info.length
+        self.cache["lengths"] = jnp.asarray(lengths)
+
+    def _admit(self) -> None:
+        while self.pending and self.kv.free_slots():
+            req = self.pending.pop(0)
+            slot = self.kv.admit(req.rid, 0)
+            req.slot = slot
+            self.live[slot] = req
+            # prefill: feed all prompt tokens but the last through the decode
+            # path; the last is fed by the first step() so its logits give
+            # the first generated token
+            for tok in req.prompt[:-1]:
+                self._feed_single(slot, tok)
+
+    def _feed_single(self, slot: int, tok: int) -> None:
+        # batch a single-slot token feed: other slots feed a dummy but their
+        # cache is masked by lengths (only `slot` advances)
+        tokens = np.zeros((self.kv.n_slots,), np.int32)
+        tokens[slot] = tok
+        lengths_before = list(self.kv.lengths())
+        self._sync_lengths()
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens))
+        # revert the length bump for every slot except `slot`
+        for s2 in range(self.kv.n_slots):
+            if s2 == slot:
+                self.kv.slots[s2].length = lengths_before[s2] + 1 \
+                    if not self.kv.slots[s2].free else 0
+            else:
+                if not self.kv.slots[s2].free:
+                    self.kv.slots[s2].length = lengths_before[s2]
+        self._sync_lengths()
+
+    # --------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration; returns number of live requests served."""
+        self._admit()
+        if not self.live:
+            return 0
+        tokens = np.zeros((self.kv.n_slots,), np.int32)
+        for slot, req in self.live.items():
+            tokens[slot] = (req.output[-1] if req.output
+                            else (req.prompt[-1] if req.prompt else 0))
+        self._sync_lengths()
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens))
+        self.key, sub = jax.random.split(self.key)
+        next_tokens = np.asarray(sample(logits, sub, self.sampler))
+        served = 0
+        for slot, req in list(self.live.items()):
+            tok = int(next_tokens[slot])
+            if not req.output:
+                req.t_first_token = time.time()
+            req.output.append(tok)
+            self.kv.append_token(slot)
+            served += 1
+            if req.done or (self.eos_id is not None and tok == self.eos_id):
+                req.t_done = time.time()
+                self.finished.append(req)
+                self.kv.release(slot)
+                del self.live[slot]
+        self.steps += 1
+        return served
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[ServeRequest]:
+        for _ in range(max_steps):
+            if not self.pending and not self.live:
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,71 @@
+"""Block (paged) KV-cache manager for continuous batching.
+
+Host-side block table (vLLM-style): the device cache is the dense stacked
+(L, B_slots, Hkv, S_max, hd) tensor from models.init_decode_cache; this
+manager tracks slot allocation, per-slot lengths and block accounting so
+the engine can admit/evict requests without device reallocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+BLOCK_TOKENS = 128
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    rid: Optional[int] = None           # owning request
+    length: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.rid is None
+
+    def blocks(self) -> int:
+        return -(-max(self.length, 1) // BLOCK_TOKENS)
+
+
+class KVCacheManager:
+    def __init__(self, n_slots: int, max_len: int,
+                 block_tokens: int = BLOCK_TOKENS):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_tokens = block_tokens
+        self.slots: List[SlotInfo] = [SlotInfo() for _ in range(n_slots)]
+        self.total_blocks = n_slots * (max_len // block_tokens)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def used_blocks(self) -> int:
+        return sum(s.blocks() for s in self.slots if not s.free)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return bool(self.free_slots()) and prompt_len < self.max_len
+
+    def admit(self, rid: int, prompt_len: int) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free KV slots")
+        slot = free[0]
+        self.slots[slot] = SlotInfo(rid=rid, length=prompt_len)
+        return slot
+
+    def append_token(self, slot: int) -> None:
+        s = self.slots[slot]
+        if s.free:
+            raise RuntimeError(f"slot {slot} not allocated")
+        if s.length + 1 >= self.max_len:
+            raise RuntimeError("KV slot overflow")
+        s.length += 1
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = SlotInfo()
+
+    def lengths(self) -> List[int]:
+        return [s.length for s in self.slots]
+
+    def active(self) -> Dict[int, int]:
+        """rid -> slot for live requests."""
+        return {s.rid: i for i, s in enumerate(self.slots) if not s.free}

@@ -1,0 +1,4 @@
+from repro.train import checkpoint, data, optimizer, step
+from repro.train.trainer import TrainConfig, Trainer
+
+__all__ = ["checkpoint", "data", "optimizer", "step", "TrainConfig", "Trainer"]

@@ -1,0 +1,197 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+AdamW (decoupled weight decay), Adafactor (factored second moment — the
+memory-frugal choice for the 398B config), SGD-momentum, plus a
+warmup-cosine schedule. Optimizer state mirrors the parameter pytree so the
+parameter sharding rules apply verbatim (ZeRO-style sharded optimizer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"                 # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"      # bfloat16 halves optimizer memory
+    momentum: float = 0.9               # sgd
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState, jax.Array],
+                     Tuple[Params, OptState, Dict[str, jax.Array]]]
+    config: OptimizerConfig
+
+
+def _decay_mask(path_names) -> bool:
+    """No weight decay on norms / biases / 1-d params."""
+    name = path_names[-1]
+    return name not in ("scale", "bias", "norm", "A_log", "D", "dt_bias",
+                        "bq", "bk", "bv", "conv_b")
+
+
+def _paths(tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in kp), tree)
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def init(params: Params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, step=None):
+        step = state["step"] if step is None else step
+        count = step + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = schedule(cfg, count.astype(jnp.float32))
+        bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, mu, nu, path):
+            g = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+            nu32 = nu.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+            step_ = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+            if _decay_mask(path):
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step_
+            return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+        flat_p, tdef = jax.tree_util.tree_flatten_with_path(params)
+        paths = [tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+                 for kp, _ in flat_p]
+        tdef_plain = jax.tree_util.tree_structure(params)
+        flat_g = tdef_plain.flatten_up_to(grads)
+        flat_mu = tdef_plain.flatten_up_to(state["mu"])
+        flat_nu = tdef_plain.flatten_up_to(state["nu"])
+        news = [upd(p, g, mu, nu, path)
+                for (_, p), g, mu, nu, path
+                in zip(flat_p, flat_g, flat_mu, flat_nu, paths)]
+        new_p = tdef_plain.unflatten([n[0] for n in news])
+        new_mu = tdef_plain.unflatten([n[1] for n in news])
+        new_nu = tdef_plain.unflatten([n[2] for n in news])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": count}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    return Optimizer(init, update, cfg)
+
+
+def adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored second moment for matrices (>=2D); full for vectors."""
+
+    def init(params: Params) -> OptState:
+        def factored(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(factored, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, step=None):
+        step = state["step"] if step is None else step
+        count = step + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = schedule(cfg, count.astype(jnp.float32))
+        decay = 1.0 - count.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if p.ndim >= 2:
+                vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                pre = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                           + cfg.eps)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                nv = decay * v["v"] + (1 - decay) * g2
+                pre = g / (jnp.sqrt(nv) + cfg.eps)
+                new_v = {"v": nv}
+            upd_ = pre + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+            return new_p, new_v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        news = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_p = tdef.unflatten([n[0] for n in news])
+        new_v = tdef.unflatten([n[1] for n in news])
+        return new_p, {"v": new_v, "step": count}, {"lr": lr, "grad_norm": gnorm}
+
+    return Optimizer(init, update, cfg)
+
+
+def sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, step=None):
+        step = state["step"] if step is None else step
+        count = step + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = schedule(cfg, count.astype(jnp.float32))
+
+        def upd(p, g, m):
+            m32 = cfg.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m32).astype(p.dtype), m32
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["mom"])
+        news = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        return (tdef.unflatten([n[0] for n in news]),
+                {"mom": tdef.unflatten([n[1] for n in news]), "step": count},
+                {"lr": lr, "grad_norm": gnorm})
+
+    return Optimizer(init, update, cfg)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[cfg.name](cfg)

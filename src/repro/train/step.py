@@ -1,0 +1,97 @@
+"""jit-compiled train / serve step builders (shared by trainer and dry-run)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
+from repro.models import model as MD
+from repro.train.optimizer import Optimizer
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    impl: str = "auto", remat: bool = True,
+                    unroll: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: MD.loss_fn(cfg, p, batch, impl=impl, remat=remat,
+                                 unroll=unroll),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = optimizer.update(params, grads, opt_state)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, impl: str = "auto",
+                    unroll: bool = False):
+    """(params, cache, tokens) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens):
+        return MD.decode_step(cfg, params, cache, tokens, impl=impl,
+                              unroll=unroll)
+
+    return serve_step
+
+
+def jit_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
+                   impl: str = "auto", remat: bool = True, unroll: bool = False,
+                   params_struct=None, batch_struct=None):
+    """pjit the train step against a mesh with the sharding rules applied."""
+    step = make_train_step(cfg, optimizer, impl=impl, remat=remat, unroll=unroll)
+    if params_struct is None:
+        params_struct = jax.eval_shape(
+            lambda: MD.init_params(cfg, jax.random.PRNGKey(0)))
+    opt_struct = jax.eval_shape(optimizer.init, params_struct)
+    p_sh = SH.param_shardings(params_struct, mesh)
+    o_sh = SH.param_shardings(opt_struct, mesh)   # mirrors params; extras -> replicated
+    if batch_struct is not None:
+        b_sh = SH.batch_shardings(batch_struct, mesh)
+    else:
+        b_sh = None
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    ), (p_sh, o_sh, b_sh)
+
+
+SERVE_TP_BUDGET_BYTES = 14e9     # fit bf16 TP-sharded weights in v5e HBM
+
+
+def serve_params_mode(cfg: ModelConfig, mesh) -> str:
+    """"tp" (weights TP-only, data-replicated: no per-step FSDP gathers)
+    when the TP shard fits HBM; otherwise "fsdp"."""
+    tp = mesh.shape.get("model", 1)
+    per_dev = cfg.param_count() * 2.0 / tp
+    return "tp" if per_dev <= SERVE_TP_BUDGET_BYTES else "fsdp"
+
+
+def jit_serve_step(cfg: ModelConfig, mesh, *, impl: str = "auto",
+                   unroll: bool = False, params_mode: str = "auto",
+                   params_struct=None, cache_struct=None, tokens_struct=None):
+    step = make_serve_step(cfg, impl=impl, unroll=unroll)
+    if params_struct is None:
+        params_struct = jax.eval_shape(
+            lambda: MD.init_params(cfg, jax.random.PRNGKey(0)))
+    if params_mode == "auto":
+        params_mode = serve_params_mode(cfg, mesh)
+    p_sh = SH.param_shardings(params_struct, mesh,
+                              serve_tp=(params_mode == "tp"))
+    c_sh = SH.cache_shardings(cache_struct, mesh) if cache_struct is not None else None
+    t_sh = (SH.batch_shardings(tokens_struct, mesh)
+            if tokens_struct is not None else None)
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, t_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    ), (p_sh, c_sh)

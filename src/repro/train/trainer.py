@@ -1,0 +1,120 @@
+"""Training loop: grad accumulation, checkpoint/restart, CASH-scheduled data
+shards, straggler-aware microbatching, failure injection for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+from repro.sched.train_scheduler import CashTrainScheduler
+from repro.train import checkpoint as CKPT
+from repro.train.data import DataConfig, global_batch
+from repro.train.optimizer import Optimizer, OptimizerConfig, make_optimizer
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    grad_accum: int = 1
+    impl: str = "auto"
+    remat: bool = False
+    seed: int = 0
+    rebalance_every: int = 20          # CASH shard-rebalance cadence (steps)
+    fail_at_step: Optional[int] = None  # failure injection (tests)
+
+
+class Trainer:
+    """Single-process trainer (multi-host generalizes via the same pjit step;
+    the CASH scheduler layer is host-level and identical either way)."""
+
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 opt_cfg: Optional[OptimizerConfig] = None,
+                 train_cfg: Optional[TrainConfig] = None,
+                 scheduler: Optional[CashTrainScheduler] = None,
+                 dtype: Any = jnp.float32):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.train_cfg = train_cfg or TrainConfig()
+        self.opt = make_optimizer(opt_cfg or OptimizerConfig(
+            warmup_steps=10, total_steps=self.train_cfg.steps))
+        self.scheduler = scheduler
+        key = jax.random.PRNGKey(self.train_cfg.seed)
+        self.params = MD.init_params(cfg, key, dtype)
+        self.opt_state = self.opt.init(self.params)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, self.opt, impl=self.train_cfg.impl, remat=self.train_cfg.remat))
+        self.step = 0
+        self.history: List[Dict[str, float]] = []
+        self._ckpt = (CKPT.AsyncCheckpointer(self.train_cfg.ckpt_dir,
+                                             keep=self.train_cfg.ckpt_keep)
+                      if self.train_cfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------------
+    def state(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt": self.opt_state}
+
+    def maybe_restore(self) -> bool:
+        if not self.train_cfg.ckpt_dir:
+            return False
+        latest = CKPT.latest_step(self.train_cfg.ckpt_dir)
+        if latest is None:
+            return False
+        state, step, extra = CKPT.restore(self.train_cfg.ckpt_dir, self.state())
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+        return True
+
+    def _microbatches(self, batch: Dict[str, np.ndarray]):
+        ga = self.train_cfg.grad_accum
+        if ga == 1:
+            yield batch
+            return
+        rows = batch["tokens"].shape[0]
+        per = rows // ga
+        for i in range(ga):
+            yield {k: v[i * per:(i + 1) * per] for k, v in batch.items()}
+
+    def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
+        tc = self.train_cfg
+        end = self.step + (steps if steps is not None else tc.steps)
+        while self.step < end:
+            if tc.fail_at_step is not None and self.step == tc.fail_at_step:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            if (self.scheduler is not None
+                    and self.step % tc.rebalance_every == 0):
+                self.scheduler.rebalance(now=float(self.step))
+            batch_np = global_batch(self.data_cfg, self.step)
+            t0 = time.time()
+            metrics = None
+            for mb in self._microbatches(batch_np):
+                mb = {k: jnp.asarray(v) for k, v in mb.items()}
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, mb)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = self.step
+            metrics["step_time_s"] = time.time() - t0
+            self.history.append(metrics)
+            if self.step % tc.log_every == 0:
+                print(f"step {self.step:5d} loss={metrics['loss']:.4f} "
+                      f"lr={metrics['lr']:.2e} ({metrics['step_time_s']:.2f}s)")
+            self.step += 1
+            if self._ckpt and self.step % tc.ckpt_every == 0:
+                self._ckpt.save(self.step, self.state(),
+                                extra={"data_step": self.step})
+        if self._ckpt:
+            self._ckpt.save(self.step, self.state(),
+                            extra={"data_step": self.step})
+            self._ckpt.wait()
+        return self.history

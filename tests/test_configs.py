@@ -1,0 +1,71 @@
+"""Assigned-architecture configs: published sizes, shape table, skips."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, all_cells, get_config, shape_applicable
+
+# published parameter counts (total, active), tolerance 6%
+PUBLISHED = {
+    "granite-20b": (20.1e9, None),
+    "qwen1.5-110b": (111e9, None),
+    "granite-3-2b": (2.5e9, None),
+    "yi-34b": (34.4e9, None),
+    "whisper-large-v3": (1.55e9, None),
+    "jamba-1.5-large-398b": (398e9, 94e9),
+    "mamba2-130m": (130e6, None),
+    "phi3.5-moe-42b-a6.6b": (41.9e9, 6.6e9),
+    "dbrx-132b": (132e9, 36e9),
+    "llava-next-34b": (34.4e9, None),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_counts_match_published(arch):
+    total, active = PUBLISHED[arch]
+    cfg = ARCHS[arch]
+    got = cfg.param_count()
+    assert abs(got - total) / total < 0.06, (arch, got, total)
+    if active is not None:
+        got_a = cfg.param_count(active_only=True)
+        assert abs(got_a - active) / active < 0.06, (arch, got_a, active)
+
+
+def test_exact_dims_from_brief():
+    c = get_config("qwen1.5-110b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (80, 8192, 64, 8, 49152, 152064)
+    assert c.qkv_bias
+    c = get_config("dbrx-132b")
+    assert (c.moe.num_experts, c.moe.top_k) == (16, 4)
+    c = get_config("granite-20b")
+    assert c.num_kv_heads == 1          # MQA
+    c = get_config("jamba-1.5-large-398b")
+    assert c.hybrid_period == 8 and c.num_attention_layers() == 9
+
+
+def test_shape_table():
+    names = [s.name for s in SHAPES]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    by = {s.name: s for s in SHAPES}
+    assert (by["train_4k"].seq_len, by["train_4k"].global_batch) == (4096, 256)
+    assert (by["long_500k"].seq_len, by["long_500k"].global_batch) == (524288, 1)
+    assert by["decode_32k"].kind == "decode"
+
+
+def test_long_500k_skips():
+    """long_500k runs only for sub-quadratic archs (ssm/hybrid)."""
+    long = [s for s in SHAPES if s.name == "long_500k"][0]
+    runnable = {a for a, c in ARCHS.items()
+                if shape_applicable(c, long)[0]}
+    assert runnable == {"mamba2-130m", "jamba-1.5-large-398b"}
+
+
+def test_cell_count():
+    cells = all_cells(include_skips=True)
+    assert len(cells) == 40
+    assert sum(1 for *_, ok, _ in cells if ok) == 32
+
+
+def test_padded_vocab_divisible_by_128():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab_size % 128 == 0
+        assert cfg.padded_vocab_size >= cfg.vocab_size

@@ -1,0 +1,46 @@
+"""Algorithm 2: CloudWatch staleness + credit prediction."""
+import pytest
+
+from repro.core.cluster import make_cluster
+from repro.core.credits import CloudWatchEmulator, CreditPredictor, StaleCredits
+
+
+def test_actuals_refresh_every_5_minutes():
+    nodes = make_cluster(1, "t3.2xlarge", cpu_initial_fraction=0.5)
+    w = CloudWatchEmulator("cpu")
+    w.observe(0.0, nodes, {0: 0.0})
+    first = w.latest_actual(0)
+    # balance changes, but the published sample stays until 300 s pass
+    nodes[0].cpu.serve(8.0, 100.0)
+    w.observe(100.0, nodes, {0: 8.0})
+    assert w.latest_actual(0).balance == first.balance
+    w.observe(301.0, nodes, {0: 8.0})
+    assert w.latest_actual(0).balance != first.balance
+
+
+def test_predictor_tracks_between_actuals():
+    nodes = make_cluster(1, "t3.2xlarge", cpu_initial_fraction=0.5)
+    w = CloudWatchEmulator("cpu")
+    pred = CreditPredictor(w)
+    stale = StaleCredits(w)
+    # burn credits at full burst for 250 s, observing each second
+    for t in range(251):
+        w.observe(float(t), nodes, {0: 8.0})
+        nodes[0].cpu.serve(8.0, 1.0)
+    est = pred.update(250.0, nodes)[0]
+    actual = nodes[0].cpu.balance
+    stale_est = stale.update(250.0, nodes)[0]
+    # prediction lands near truth; the 5-min stale sample does not
+    assert abs(est - actual) < abs(stale_est - actual) * 0.2
+    assert est == pytest.approx(actual, rel=0.1)
+
+
+def test_prediction_clamped_to_bucket_range():
+    nodes = make_cluster(1, "t3.2xlarge", cpu_initial_fraction=0.0)
+    w = CloudWatchEmulator("cpu")
+    pred = CreditPredictor(w)
+    for t in range(0, 290, 10):
+        w.observe(float(t), nodes, {0: 8.0})
+        nodes[0].cpu.serve(8.0, 10.0)
+    est = pred.update(289.0, nodes)[0]
+    assert 0.0 <= est <= nodes[0].cpu.capacity

@@ -1,0 +1,58 @@
+"""Collective-bytes HLO parser: synthetic lines + a real lowered module."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.hlo_analysis import collective_bytes
+
+
+def test_parses_simple_ops():
+    hlo = """
+  %ag = bf16[4,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[16,16]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = s32[8]{0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+    total, kinds = collective_bytes(hlo)
+    assert kinds["all-gather"] == 4 * 128 * 2
+    assert kinds["all-reduce"] == 1024 * 4
+    assert kinds["reduce-scatter"] == 16 * 16 * 4
+    assert kinds["collective-permute"] == 8 * 4
+    assert total == sum(kinds[k] for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "collective-permute", "all-to-all"))
+
+
+def test_start_done_counted_once():
+    hlo = """
+  %s = f32[256]{0} all-gather-start(%x)
+  %d = f32[256]{0} all-gather-done(%s)
+"""
+    total, kinds = collective_bytes(hlo)
+    assert kinds["all-gather"] == 256 * 4
+    assert kinds["n_all-gather"] == 1
+
+
+def test_tuple_results():
+    hlo = "%t = (f32[64]{0}, f32[64]{0}) all-reduce(%a, %b)"
+    total, kinds = collective_bytes(hlo)
+    assert kinds["all-reduce"] == 2 * 64 * 4
+
+
+def test_real_sharded_matmul_has_allreduce():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >=2 devices")
+    mesh = Mesh(np.array(jax.devices()[:2]), ("model",))
+    n = 64
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    f = jax.jit(lambda a, b: a @ b,
+                in_shardings=(NamedSharding(mesh, P(None, "model")),
+                              NamedSharding(mesh, P("model", None))),
+                out_shardings=NamedSharding(mesh, P()))
+    hlo = f.lower(x, w).compile().as_text()
+    total, kinds = collective_bytes(hlo)
+    # contracting-dim sharding forces an all-reduce of the (n, n) result
+    assert kinds["all-reduce"] >= n * n * 4

@@ -1,0 +1,76 @@
+"""Pallas flash attention vs jnp oracle: shape/dtype sweep in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (b, hq, hkv, sq, skv, d)
+    (1, 2, 2, 128, 128, 64),          # MHA
+    (2, 4, 2, 256, 256, 64),          # GQA 2x
+    (1, 8, 1, 128, 128, 128),         # MQA
+    (1, 4, 4, 128, 384, 64),          # cross/history: skv > sq
+    (2, 2, 2, 384, 384, 32),          # non-pow2 blocks (384 = 3x128)
+]
+
+
+def _mk(b, hq, hkv, sq, skv, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), jnp.float32)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_pallas_matches_oracle(shape, dtype, tol, causal):
+    q, k, v = _mk(*shape, dtype)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    got = ops.attention(q, k, v, causal=causal, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_xla_matches_oracle(shape, causal):
+    q, k, v = _mk(*shape, jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    got = ref.flash_attention_xla(q, k, v, causal=causal, block_k=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_xla_non_divisible_block():
+    q, k, v = _mk(1, 2, 2, 100, 100, 32, jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=False)
+    got = ref.flash_attention_xla(q, k, v, causal=False, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_xla_grad_matches_oracle():
+    q, k, v = _mk(1, 2, 2, 128, 128, 32, jnp.float32)
+
+    def f_ref(q):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+    def f_flash(q):
+        return jnp.sum(ref.flash_attention_xla(q, k, v, causal=True,
+                                               block_k=64) ** 2)
+
+    g1 = jax.grad(f_ref)(q)
+    g2 = jax.grad(f_flash)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flash_scale_parameter():
+    q, k, v = _mk(1, 2, 2, 128, 128, 64, jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=True, scale=0.3)
+    got = ops.attention(q, k, v, causal=True, scale=0.3, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

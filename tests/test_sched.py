@@ -1,0 +1,109 @@
+"""CASH-in-the-runtime: train scheduler, serve admission, straggler monitor,
+elastic recovery plans."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.annotations import Annotation
+from repro.sched.elastic import plan
+from repro.sched.serve_scheduler import CashServeScheduler, Request, make_replicas
+from repro.sched.straggler import StragglerMonitor
+from repro.sched.train_scheduler import CashTrainScheduler, make_hosts
+
+
+class TestTrainScheduler:
+    def test_initial_assignment_covers_all_shards(self):
+        hosts = make_hosts(4)
+        sched = CashTrainScheduler(hosts, num_shards=16)
+        got = sorted(s for h in hosts for s in h.assigned_shards)
+        assert got == list(range(16))
+
+    def test_rebalance_prefers_credit_rich_hosts(self):
+        hosts = make_hosts(4, cpu_initial_fraction=0.0)
+        hosts[2].node.cpu.balance = hosts[2].node.cpu.capacity    # rich host
+        sched = CashTrainScheduler(hosts, num_shards=4)
+        for t in range(301):      # let telemetry publish actuals
+            sched.observe(float(t), {h.host_id: 0.0 for h in hosts})
+        out = sched.rebalance(301.0)
+        # the rich host gets packed first (4 slots)
+        assert len(out[2]) == 4
+
+    def test_rebalance_covers_all_shards_always(self):
+        hosts = make_hosts(3, slots=2)
+        sched = CashTrainScheduler(hosts, num_shards=10)   # > total slots
+        out = sched.rebalance(0.0)
+        got = sorted(s for ss in out.values() for s in ss)
+        assert got == list(range(10))
+
+    def test_microbatch_weights_penalize_throttled(self):
+        hosts = make_hosts(2, cpu_initial_fraction=0.0)
+        hosts[1].node.cpu.balance = hosts[1].node.cpu.capacity
+        sched = CashTrainScheduler(hosts, num_shards=2)
+        for t in range(301):
+            sched.observe(float(t), {0: 8.0, 1: 0.0})
+        w = sched.microbatch_weights(301.0)
+        assert w[1] > w[0]          # throttled host gets less work
+
+    def test_split_rows_sums_exactly(self):
+        hosts = make_hosts(3, cpu_initial_fraction=0.0)
+        hosts[0].node.cpu.balance = hosts[0].node.cpu.capacity
+        sched = CashTrainScheduler(hosts, num_shards=3)
+        for t in range(301):
+            sched.observe(float(t), {h.host_id: 0.0 for h in hosts})
+        split = sched.split_rows(17, 301.0)
+        assert sum(split.values()) == 17
+        assert all(v >= 0 for v in split.values())
+
+
+class TestServeScheduler:
+    def test_prefill_to_rich_decode_to_poor(self):
+        reps = make_replicas(2, cpu_initial_fraction=0.0)
+        reps[1].node.cpu.balance = reps[1].node.cpu.capacity
+        cash = CashServeScheduler(reps)
+        for t in range(301):
+            cash.observe(float(t), {0: 0.0, 1: 0.0})
+        pf, dc = cash.admit(301.0, [Request(0, 512, 32)], decode_batches=1)
+        assert len(pf[1]) == 1       # prefill -> credit-rich replica
+        assert dc[0] == 1            # decode -> credit-poor replica
+
+    def test_all_requests_routed(self):
+        reps = make_replicas(3, slots=2)
+        cash = CashServeScheduler(reps)
+        reqs = [Request(i, 128, 8) for i in range(5)]
+        pf, dc = cash.admit(0.0, reqs, decode_batches=1)
+        assert sum(len(v) for v in pf.values()) + sum(dc.values()) == 6
+
+
+class TestStraggler:
+    def test_reactive_flags_slow_host(self):
+        mon = StragglerMonitor(4)
+        for h in range(4):
+            for _ in range(5):
+                mon.record_step(h, 1.0 if h != 2 else 3.0)
+        assert mon.reactive_stragglers() == [2]
+
+    def test_predictive_flags_depleting_bucket(self):
+        from repro.core.token_bucket import TokenBucket
+        mon = StragglerMonitor(2, horizon_s=100.0)
+        rich = TokenBucket(baseline=1.0, burst=2.0, capacity=1e5, balance=1e5)
+        poor = TokenBucket(baseline=1.0, burst=2.0, capacity=1e5, balance=10.0)
+        flags = mon.predictive_stragglers({0: rich, 1: poor},
+                                          {0: 2.0, 1: 2.0})
+        assert flags == [1]          # depletes in 10 s < horizon
+
+
+class TestElasticPlan:
+    def test_plan_shrinks_cleanly(self):
+        p8 = plan(8, devices_per_host=4, num_shards=32, model_parallel=4)
+        assert p8.mesh_shape == (8, 4)
+        p5 = plan(5, devices_per_host=4, num_shards=32, model_parallel=4)
+        assert p5.mesh_shape == (5, 4)
+        # every shard still owned exactly once
+        got = sorted(s for ss in p5.shard_map.values() for s in ss)
+        assert got == list(range(32))
+
+    def test_plan_rejects_impossible(self):
+        with pytest.raises(ValueError):
+            plan(0, 4, 8)
+        with pytest.raises(ValueError):
+            plan(3, 1, 8, model_parallel=2)

@@ -1,0 +1,128 @@
+"""Algorithm 1 semantics + hypothesis invariants."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.annotations import Annotation, Task, annotate_task
+from repro.core.cluster import make_cluster
+from repro.core.scheduler import CashScheduler, JointCashScheduler, StockScheduler
+
+
+def mk_task(tid, annotation=Annotation.NONE, deps=()):
+    return Task(tid=tid, job="j", vertex="v", work_cpu=10.0,
+                annotation=annotation, depends_on=deps)
+
+
+def fresh_nodes(n=4, slots=2):
+    return make_cluster(n, "t3.2xlarge", slots_per_node=slots)
+
+
+class TestPhase1:
+    def test_burst_tasks_go_to_highest_credit_node_first(self):
+        nodes = fresh_nodes(3, slots=2)
+        credits = {0: 10.0, 1: 100.0, 2: 50.0}
+        q = [mk_task(i, Annotation.BURST_CPU) for i in range(2)]
+        CashScheduler().schedule(q, nodes, credits, 0.0)
+        assert len(nodes[1].running) == 2       # packed on the richest
+        assert not q
+
+    def test_packing_spills_to_next_richest(self):
+        nodes = fresh_nodes(3, slots=2)
+        credits = {0: 10.0, 1: 100.0, 2: 50.0}
+        q = [mk_task(i, Annotation.BURST_CPU) for i in range(3)]
+        CashScheduler().schedule(q, nodes, credits, 0.0)
+        assert len(nodes[1].running) == 2
+        assert len(nodes[2].running) == 1
+        assert len(nodes[0].running) == 0
+
+
+class TestPhase2:
+    def test_network_tasks_ascend_and_round_robin(self):
+        nodes = fresh_nodes(3, slots=3)
+        credits = {0: 10.0, 1: 100.0, 2: 50.0}
+        q = [mk_task(i, Annotation.NETWORK) for i in range(4)]
+        CashScheduler().schedule(q, nodes, credits, 0.0)
+        # one per node per round ascending (0, 2, 1), second round -> node 0
+        assert len(nodes[0].running) == 2
+        assert len(nodes[2].running) == 1
+        assert len(nodes[1].running) == 1
+
+    def test_burst_before_network(self):
+        nodes = fresh_nodes(2, slots=1)
+        credits = {0: 10.0, 1: 100.0}
+        burst = mk_task(0, Annotation.BURST_CPU)
+        net = mk_task(1, Annotation.NETWORK)
+        q = [net, burst]   # queue order must not matter for phase priority
+        CashScheduler().schedule(q, nodes, credits, 0.0)
+        assert burst in nodes[1].running        # burst -> richest
+        assert net in nodes[0].running          # network -> poorest
+
+
+class TestDependencies:
+    def test_blocked_tasks_stay_queued(self):
+        nodes = fresh_nodes(2, slots=2)
+        q = [mk_task(1), mk_task(2, deps=(1,))]
+        CashScheduler().schedule(q, nodes, {0: 0.0, 1: 0.0}, 0.0,
+                                 ready_ids=set())
+        assert len(q) == 1 and q[0].tid == 2
+
+    def test_ready_set_releases(self):
+        nodes = fresh_nodes(2, slots=2)
+        t2 = mk_task(2, deps=(1,))
+        q = [t2]
+        CashScheduler().schedule(q, nodes, {0: 0.0, 1: 0.0}, 0.0,
+                                 ready_ids={2})
+        assert not q
+
+
+class TestJoint:
+    def test_joint_min_normalized(self):
+        nodes = fresh_nodes(2, slots=1)
+        # node 0: rich cpu, poor disk; node 1: balanced
+        ccpu = {0: nodes[0].cpu.capacity, 1: nodes[1].cpu.capacity * 0.5}
+        cdisk = {0: 0.0, 1: nodes[1].disk.capacity * 0.5}
+        t = mk_task(0, Annotation.BURST_CPU)
+        JointCashScheduler().schedule([t], nodes, {}, 0.0,
+                                      credits_cpu=ccpu, credits_disk=cdisk)
+        assert t in nodes[1].running
+
+
+@given(
+    n_nodes=st.integers(1, 6),
+    slots=st.integers(1, 4),
+    n_burst=st.integers(0, 12),
+    n_net=st.integers(0, 12),
+    n_plain=st.integers(0, 12),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=150, deadline=None)
+def test_scheduler_invariants(n_nodes, slots, n_burst, n_net, n_plain, seed):
+    rng = random.Random(seed)
+    nodes = make_cluster(n_nodes, "t3.2xlarge", slots_per_node=slots)
+    credits = {n.nid: rng.uniform(0, 1000) for n in nodes}
+    tid = [0]
+
+    def nt(ann):
+        tid[0] += 1
+        return mk_task(tid[0], ann)
+
+    q = ([nt(Annotation.BURST_CPU) for _ in range(n_burst)]
+         + [nt(Annotation.NETWORK) for _ in range(n_net)]
+         + [nt(Annotation.NONE) for _ in range(n_plain)])
+    rng.shuffle(q)
+    total = len(q)
+    sched = CashScheduler(random.Random(seed))
+    assigned = sched.schedule(q, nodes, credits, 0.0)
+
+    # no node over capacity
+    for n in nodes:
+        assert len(n.running) <= slots
+    # work conserved: every task is either running or still queued
+    assert len(assigned) + len(q) == total
+    # all slots used if tasks were plentiful
+    if total >= n_nodes * slots:
+        assert all(n.free_slots == 0 for n in nodes)
+    # a queued burst task may only remain if no free slot anywhere
+    if any(t.burst_intensive for t in q):
+        assert all(n.free_slots == 0 for n in nodes)

@@ -1,0 +1,80 @@
+"""Cluster simulator: determinism, conservation, paper-experiment structure."""
+import pytest
+
+from repro.core import (
+    Annotation,
+    SCHEDULERS,
+    SimConfig,
+    Simulation,
+    Task,
+    make_cluster,
+)
+from repro.core.simulator import Job
+from repro.core.workloads import make_tpcds_suite, reset_tids
+
+
+def _small_run(sched="cash", seed=1):
+    reset_tids()
+    nodes = make_cluster(3, "m5.2xlarge", ebs_size_gb=100.0,
+                         disk_initial_credits=0.0)
+    sim = Simulation(nodes, SCHEDULERS[sched](),
+                     SimConfig(resource="disk", max_time=50_000))
+    sim.submit_parallel(make_tpcds_suite(100.0, 3, 8, seed=seed))
+    return sim.run()
+
+
+def test_deterministic():
+    a = _small_run()
+    b = _small_run()
+    assert a.makespan == b.makespan
+    assert a.job_completion == b.job_completion
+
+
+def test_all_tasks_finish_and_work_conserved():
+    r = _small_run()
+    assert r.tasks, "no tasks completed"
+    for t in r.tasks:
+        rem = t.remaining()
+        assert max(rem.values()) <= 1e-6
+        assert t.finish_time is not None and t.finish_time >= t.start_time
+
+
+def test_dependencies_respected():
+    r = _small_run()
+    by_id = {t.tid: t for t in r.tasks}
+    for t in r.tasks:
+        if not t.depends_on:
+            continue
+        th = t.dep_threshold if t.dep_threshold is not None else 1.0
+        done_before = sum(
+            1 for d in t.depends_on if by_id[d].finish_time <= t.start_time)
+        assert done_before / len(t.depends_on) + 1e-9 >= min(th, 1.0)
+
+
+def test_sequential_jobs_gate():
+    reset_tids()
+    nodes = make_cluster(2, "m5.2xlarge")
+    sim = Simulation(nodes, SCHEDULERS["stock"](), SimConfig(resource="cpu"))
+    t1 = Task(tid=1, job="a", vertex="map", work_cpu=10.0, demand_cpu=1.0)
+    t2 = Task(tid=2, job="b", vertex="map", work_cpu=10.0, demand_cpu=1.0)
+    sim.submit_sequential([Job("a", [t1]), Job("b", [t2])])
+    sim.run()
+    assert t2.start_time >= t1.finish_time
+
+
+def test_throttling_extends_elapsed():
+    """A CPU-hungry wave on zero-credit burstables runs ~baseline/demand
+    slower than on fixed-rate instances."""
+    def run(instance):
+        reset_tids()
+        nodes = make_cluster(1, instance, cpu_initial_fraction=0.0)
+        sim = Simulation(nodes, SCHEDULERS["stock"](), SimConfig(resource="cpu"))
+        tasks = [Task(tid=i + 1, job="j", vertex="map", work_cpu=100.0,
+                      demand_cpu=0.9, annotation=Annotation.BURST_CPU)
+                 for i in range(8)]
+        sim.submit_parallel([Job("j", tasks)])
+        return sim.run().makespan
+
+    m5 = run("m5.2xlarge")          # no throttle
+    t3 = run("t3.2xlarge")          # throttled to 3.2/7.2
+    assert t3 > m5 * 1.8

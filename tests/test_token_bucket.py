@@ -1,0 +1,119 @@
+"""Token-bucket mechanics vs the provider-published numbers (paper Table 1,
+SS2.1-2.2), plus hypothesis invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.token_bucket import (
+    INSTANCE_TYPES,
+    TokenBucket,
+    ebs_gp2_bucket,
+    network_dual_bucket,
+)
+
+
+class TestTable1:
+    """The AWS T3 credit table reproduced by the bucket constructors."""
+
+    @pytest.mark.parametrize("name,vcpus,baseline,credits_hr", [
+        ("t3.large", 2, 0.30, 36.0),
+        ("t3.xlarge", 4, 0.40, 96.0),
+        ("t3.2xlarge", 8, 0.40, 192.0),
+    ])
+    def test_specs(self, name, vcpus, baseline, credits_hr):
+        spec = INSTANCE_TYPES[name]
+        assert spec.vcpus == vcpus
+        assert spec.baseline_per_vcpu == baseline
+        assert spec.credits_per_hour == credits_hr
+
+    def test_earn_rate_equals_baseline(self):
+        # 1 credit = 1 vCPU-minute; earn rate == baseline service rate
+        b = INSTANCE_TYPES["t3.2xlarge"].cpu_bucket()
+        assert b.baseline == pytest.approx(8 * 0.40)
+        assert b.burst == 8.0
+        # 24h accrual cap
+        assert b.capacity == pytest.approx(192.0 * 24 * 60)
+
+    def test_one_hour_idle_accrues_one_hour_of_credits(self):
+        b = INSTANCE_TYPES["t3.2xlarge"].cpu_bucket()
+        b.serve(0.0, 3600.0)
+        # 192 credits/hr * 60 vCPU-sec per credit
+        assert b.balance == pytest.approx(192 * 60.0)
+
+
+class TestEBS:
+    def test_baseline_3_iops_per_gb(self):
+        assert ebs_gp2_bucket(200.0).baseline == pytest.approx(600.0)
+        assert ebs_gp2_bucket(10.0).baseline == pytest.approx(100.0)   # floor
+        assert ebs_gp2_bucket(6000.0).baseline == pytest.approx(16000.0)  # cap
+
+    def test_burst_3000_and_startup_credits(self):
+        b = ebs_gp2_bucket(200.0)
+        assert b.burst == 3000.0
+        assert b.balance == pytest.approx(5.4e6)
+
+    def test_burst_duration_formula(self):
+        # Figure 2: a full 100GB volume bursts 3000 IOPS for
+        # 5.4M / (3000 - 300) = 2000 s
+        b = ebs_gp2_bucket(100.0)
+        assert b.time_to_deplete(3000.0) == pytest.approx(2000.0)
+
+    def test_large_volume_never_throttles(self):
+        b = ebs_gp2_bucket(2000.0)  # baseline 6000 > burst floor
+        assert b.max_rate() >= 6000.0
+        assert b.time_to_deplete(6000.0) == math.inf
+
+
+class TestServeSemantics:
+    def test_throttle_to_baseline_when_empty(self):
+        b = TokenBucket(baseline=3.2, burst=8.0, capacity=1000.0, balance=0.0)
+        work = b.serve(8.0, 10.0)
+        assert work == pytest.approx(3.2 * 10.0)
+
+    def test_burst_until_depleted_then_throttle(self):
+        b = TokenBucket(baseline=3.2, burst=8.0, capacity=1000.0, balance=48.0)
+        # drain rate 4.8/s -> 10 s of burst, then baseline
+        work = b.serve(8.0, 20.0)
+        assert work == pytest.approx(8.0 * 10 + 3.2 * 10)
+        assert b.balance == pytest.approx(0.0)
+
+    def test_unlimited_books_surplus(self):
+        b = TokenBucket(baseline=3.2, burst=8.0, capacity=1000.0, balance=0.0,
+                        unlimited=True)
+        work = b.serve(8.0, 10.0)
+        assert work == pytest.approx(80.0)
+        assert b.surplus_used == pytest.approx((8.0 - 3.2) * 10.0)
+
+    def test_dual_bucket_network(self):
+        nb = network_dual_bucket()
+        assert nb.peak.burst > nb.peak.baseline
+
+
+@given(
+    baseline=st.floats(0.5, 10.0),
+    headroom=st.floats(0.0, 10.0),
+    balance_frac=st.floats(0.0, 1.0),
+    demand=st.floats(0.0, 30.0),
+    dt=st.floats(0.1, 1000.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_bucket_invariants(baseline, headroom, balance_frac, demand, dt):
+    cap = 10_000.0
+    b = TokenBucket(baseline=baseline, burst=baseline + headroom,
+                    capacity=cap, balance=cap * balance_frac)
+    before = b.balance
+    work = b.serve(demand, dt)
+    # balance stays in [0, cap]
+    assert 0.0 <= b.balance <= cap + 1e-6
+    # served work bounded by burst and by demand
+    assert work <= min(demand, b.burst) * dt + 1e-6
+    # work at least baseline-limited service when demand exceeds baseline
+    if demand >= baseline:
+        assert work >= min(demand, baseline) * dt - 1e-6
+    # credit conservation: spend = servedwork - earned, equals balance drop
+    earned = baseline * dt
+    spent = work
+    expected = min(cap, before + earned - spent)
+    if expected >= 0:
+        assert b.balance == pytest.approx(expected, abs=1e-3)
