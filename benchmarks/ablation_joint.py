@@ -81,5 +81,56 @@ def run() -> dict:
     return out
 
 
+_VEC_MODES = {
+    # mode -> (vec scheduler, credit resource) — both compile-time static
+    "stock": ("stock", "cpu"),
+    "cash-cpu": ("cash", "cpu"),
+    "cash-disk": ("cash", "disk"),
+    "cash-joint": ("cash-joint", "joint"),
+}
+
+
+def run_batched(fast: bool = False) -> dict:
+    """Vectorized mixed-workload sweep: each scheduler/resource mode is one
+    compile over its seed batch (the modes themselves are compile-time
+    static, so four small batches instead of 12 Python runs)."""
+    import statistics
+    import time
+
+    from repro.core import vecsim
+    from repro.core.cluster import make_cluster as _mk
+
+    seeds = (1,) if fast else (1, 2, 3)
+    n_nodes = 6 if fast else N_NODES
+    n_ticks = 6_000 if fast else 12_000
+    t0 = time.time()
+
+    def scenario(seed: int):
+        reset_tids()
+        nodes = _mk(n_nodes, "t3.2xlarge", ebs_size_gb=170.0,
+                    cpu_initial_fraction=0.3, disk_initial_credits=0.0)
+        jobs = make_tpcds_suite(600.0, n_nodes, 8, seed=seed)
+        cpu_jobs = make_hibench_workload("sql_aggregation", n_nodes, 8,
+                                         seed=seed + 7)
+        return vecsim.build_scenario(nodes, jobs + cpu_jobs[:2])
+
+    scenarios = [scenario(s) for s in seeds]
+    batch = vecsim.stack_scenarios(scenarios)
+    out = {}
+    for mode, (sched, resource) in _VEC_MODES.items():
+        res = vecsim.run_batch(batch, vecsim.VecSimConfig(
+            n_ticks=n_ticks, scheduler=sched, resource=resource))
+        assert bool(res["all_done"].all()), (mode, "did not finish")
+        out[mode] = statistics.mean(float(m) for m in res["makespan"])
+        emit(f"joint/batched/{mode}/makespan_s", 0.0, f"{out[mode]:.0f}")
+    for mode in ("cash-cpu", "cash-disk", "cash-joint"):
+        emit(f"joint/batched/{mode}/improvement_vs_stock", 0.0,
+             f"{1 - out[mode] / out['stock']:+.3f}")
+    emit("joint/batched/sweep_wall_s", (time.time() - t0) * 1e6,
+         f"{time.time() - t0:.1f}")
+    return out
+
+
 if __name__ == "__main__":
     run()
+    run_batched()

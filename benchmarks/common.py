@@ -1,8 +1,8 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV emission + timing + vec-path helpers."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, List, Tuple
+from typing import Callable, Dict, Iterable, List, Sequence, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
 
@@ -17,3 +17,15 @@ def timed(fn: Callable, n: int = 1) -> float:
     for _ in range(n):
         fn()
     return (time.time() - t0) / n * 1e6   # us
+
+
+def phase_elapsed_from_vec(order: Sequence, start, finish) -> Dict[str, float]:
+    """Per-vertex-kind elapsed sums from a vecsim run's start/finish arrays
+    (``order`` from ``vecsim.scenario_task_order``) — the batched analogue of
+    ``SimResult.phase_elapsed``."""
+    import math
+    out: Dict[str, float] = {}
+    for (_, t), s, f in zip(order, start, finish):
+        if math.isfinite(float(f)) and math.isfinite(float(s)):
+            out[t.vertex] = out.get(t.vertex, 0.0) + float(f) - float(s)
+    return out

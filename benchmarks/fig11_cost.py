@@ -34,5 +34,24 @@ def run() -> dict:
     return out
 
 
+def run_batched(fast: bool = False) -> dict:
+    """Billing savings from the vectorized fig9 sweep (shared batch — the
+    makespans are computed once and reused here)."""
+    from benchmarks import fig9_query_completion
+
+    b = fig9_query_completion.run_batched(fast)
+    out = {}
+    for setup in b["setups"]:
+        n_nodes = DISK_SETUPS[setup][0]
+        stock = BillingLine("stock", "m5.2xlarge", n_nodes,
+                            b["pair"]["stock"][setup]["makespan"])
+        cash = BillingLine("cash", "m5.2xlarge", n_nodes,
+                           b["pair"]["cash"][setup]["makespan"])
+        out[setup] = savings_fraction(stock, cash)
+        emit(f"fig11/batched/{setup}/saving", 0.0, f"{out[setup]:+.3f}")
+    return out
+
+
 if __name__ == "__main__":
     run()
+    run_batched()

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import statistics
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, phase_elapsed_from_vec, timed
 from repro.core.cost import hourly_rate
 from repro.core.experiments import CPU_PHASES, run_cpu_experiment
 
@@ -55,5 +55,69 @@ def run() -> dict:
     return out
 
 
+_CPU_BATCH_CACHE: dict = {}
+
+
+def run_cpu_sweep_batched(fast: bool = False) -> dict:
+    """Vectorized sweep over the Fig-7 labels (core.vecsim): the four
+    stock-scheduled fleets (emr / naive / reordered / unlimited) stack into
+    ONE jitted batch; cash compiles separately. Deterministic node order
+    (shuffle="none"), so numbers track — not bit-match — the Python path.
+    Cached: fig8's batched path reuses the same sweep."""
+    import time
+
+    from repro.core import vecsim
+    from repro.core.experiments import build_cpu_vec_scenario
+
+    if fast in _CPU_BATCH_CACHE:
+        return _CPU_BATCH_CACHE[fast]
+    n_nodes, scale = (6, 0.4) if fast else (10, 1.0)
+    n_ticks = 9_000 if fast else 18_000
+    t0 = time.time()
+    built = {label: build_cpu_vec_scenario(label, n_nodes=n_nodes, scale=scale)
+             for label in LABELS}
+    stock_labels = [l for l in LABELS if built[l][1] == "stock"]
+    res = {}
+    for sched, labels in (("stock", stock_labels), ("cash", ["cash"])):
+        batch = vecsim.stack_scenarios([built[l][0] for l in labels])
+        out = vecsim.run_batch(batch, vecsim.VecSimConfig(
+            n_ticks=n_ticks, scheduler=sched))
+        for i, label in enumerate(labels):
+            res[label] = {k: out[k][i] for k in out}
+    sweep = {"res": res, "built": built, "n_nodes": n_nodes,
+             "wall": time.time() - t0}
+    _CPU_BATCH_CACHE[fast] = sweep
+    return sweep
+
+
+def run_batched(fast: bool = False) -> dict:
+    """Fig-7 metrics (cumulative phase elapsed, degradation vs EMR) from the
+    shared vectorized CPU sweep."""
+    from repro.core import vecsim
+
+    sweep = run_cpu_sweep_batched(fast)
+    res, built, wall = sweep["res"], sweep["built"], sweep["wall"]
+
+    cums = {}
+    for label in LABELS:
+        r = res[label]
+        assert bool(r["all_done"]), (label, "did not finish in n_ticks")
+        order = vecsim.scenario_task_order(built[label][2], "sequential")
+        ph = phase_elapsed_from_vec(order, r["start"], r["finish"])
+        cums[label] = sum(ph.get(p, 0.0) for p in CPU_PHASES)
+        emit(f"fig7/batched/{label}/makespan_s", 0.0,
+             f"{float(r['makespan']):.0f}")
+        for p in CPU_PHASES:
+            emit(f"fig7/batched/{label}/cum_{p}_s", 0.0, f"{ph.get(p, 0):.0f}")
+    out_deg = {}
+    for label in LABELS[1:]:
+        out_deg[label] = cums[label] / cums["emr"] - 1.0
+        emit(f"fig7/batched/{label}/cum_degradation_vs_emr", 0.0,
+             f"{out_deg[label]:+.3f}")
+    emit("fig7/batched/sweep_wall_s", wall * 1e6, f"{wall:.1f}")
+    return out_deg
+
+
 if __name__ == "__main__":
     run()
+    run_batched()

@@ -39,5 +39,30 @@ def run() -> dict:
     return stds
 
 
+def run_batched(fast: bool = False) -> dict:
+    """Vectorized utilization metrics: average CPU utilization from the
+    engine's aggregate served-work counter (cpu_work_served / (makespan x
+    total vCPUs)), reusing fig7's shared CPU sweep (one compile + run for
+    both figures). The credit-balance stddev *timeline* of Fig 8(b) needs
+    per-tick sampling the scan does not emit yet — ROADMAP open item."""
+    from benchmarks.fig7_cpu_burst import run_cpu_sweep_batched
+    from repro.core.cluster import INSTANCE_TYPES
+
+    sweep = run_cpu_sweep_batched(fast)
+    utils = {}
+    for label in LABELS:
+        r = sweep["res"][label]
+        assert bool(r["all_done"]), (label, "did not finish")
+        itype = "m5.2xlarge" if label == "emr" else "t3.2xlarge"
+        total_vcpus = sweep["n_nodes"] * INSTANCE_TYPES[itype].vcpus
+        utils[label] = (float(r["cpu_work_served"])
+                        / (float(r["makespan"]) * total_vcpus))
+        emit(f"fig8/batched/{label}/avg_cpu_util", 0.0, f"{utils[label]:.3f}")
+        emit(f"fig8/batched/{label}/surplus_credits", 0.0,
+             f"{float(r['surplus_credits']):.0f}")
+    return utils
+
+
 if __name__ == "__main__":
     run()
+    run_batched()

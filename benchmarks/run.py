@@ -1,14 +1,30 @@
 """Benchmark driver: one module per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+``--fast`` is the CI smoke mode: every figure benchmark runs its *batched*
+(core.vecsim) path at reduced scale, plus a reduced vecsim throughput
+measurement; the Python-loop figure drivers are skipped. Both modes write
+``BENCH_vecsim.json`` (Python-loop vs vectorized throughput) so the perf
+trajectory is tracked PR over PR.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--fast", action="store_true",
+                        help="reduced-scale smoke run (batched paths only)")
+    parser.add_argument("--out", default="BENCH_vecsim.json",
+                        help="where to write the vecsim throughput JSON")
+    args = parser.parse_args(argv)
+
     from benchmarks import (
         ablation_joint,
         ablation_telemetry,
@@ -20,27 +36,50 @@ def main() -> None:
         kernels_bench,
         roofline,
         tables,
+        vecsim_bench,
     )
-    mods = [
-        ("tables", tables),
-        ("fig7", fig7_cpu_burst),
-        ("fig8", fig8_utilization),
-        ("fig9", fig9_query_completion),
-        ("fig10", fig10_iops),
-        ("fig11", fig11_cost),
-        ("kernels", kernels_bench),
-        ("ablation", ablation_telemetry),
-        ("joint", ablation_joint),
-        ("roofline", roofline),
+    batched = [
+        ("fig7/batched", fig7_cpu_burst.run_batched),
+        ("fig8/batched", fig8_utilization.run_batched),
+        ("fig9/batched", fig9_query_completion.run_batched),
+        ("fig11/batched", fig11_cost.run_batched),
+        ("joint/batched", ablation_joint.run_batched),
     ]
+    if args.fast:
+        mods = [(n, lambda fn=fn: fn(fast=True)) for n, fn in batched]
+    else:
+        mods = [
+            ("tables", tables.run),
+            ("fig7", fig7_cpu_burst.run),
+            ("fig8", fig8_utilization.run),
+            ("fig9", fig9_query_completion.run),
+            ("fig10", fig10_iops.run),
+            ("fig11", fig11_cost.run),
+            ("kernels", kernels_bench.run),
+            ("ablation", ablation_telemetry.run),
+            ("joint", ablation_joint.run),
+            ("roofline", roofline.run),
+        ] + batched
+
     print("name,us_per_call,derived")
     failures = []
-    for name, mod in mods:
+    for name, fn in mods:
         try:
-            mod.run()
+            fn()
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             traceback.print_exc()
+
+    # vecsim throughput JSON: the tracked perf metric from this PR onward
+    try:
+        stats = vecsim_bench.run(fast=args.fast)
+        stats["mode"] = "fast" if args.fast else "full"
+        pathlib.Path(args.out).write_text(json.dumps(stats, indent=2) + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    except Exception as e:  # noqa: BLE001
+        failures.append(("vecsim_bench", e))
+        traceback.print_exc()
+
     if failures:
         print(f"FAILED benchmarks: {[n for n, _ in failures]}", file=sys.stderr)
         raise SystemExit(1)

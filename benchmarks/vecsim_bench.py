@@ -1,0 +1,109 @@
+"""Vectorized fleet-simulator throughput: `core.vecsim` (jitted lax.scan,
+vmapped over scenarios) vs looping the pure-Python `Simulation`.
+
+Reference sweep (ISSUE 3 acceptance): 32 scenarios x 16 nodes x 10k ticks on
+CPU, target >= 50x. The Python side is timed on one full scenario and
+extrapolated linearly to the sweep (it has no cross-scenario batching to
+amortize — one scenario already takes ~8 s); the vectorized side is timed
+end-to-end on the whole stacked batch, steady-state (post-compile).
+
+Figure of merit: ticks * nodes * scenarios / second.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.scheduler import CashScheduler
+from repro.core.simulator import Job, SimConfig, Simulation
+from repro.core import vecsim
+
+SLOTS = 8
+
+
+def _sweep_jobs(seed: int, n_nodes: int):
+    """CPU-burst fleet near saturation: every tick schedules and serves."""
+    rng = np.random.RandomState(seed)
+    tid = [100_000 * (seed + 1)]
+
+    def nt(**kw):
+        tid[0] += 1
+        return Task(tid=tid[0], job=kw.pop("job"), **kw)
+
+    jobs = []
+    for j in range(4):
+        maps = [nt(job=f"j{j}", vertex="map",
+                   work_cpu=float(rng.uniform(800, 2400)),
+                   demand_cpu=float(rng.uniform(0.3, 0.95)),
+                   annotation=Annotation.BURST_CPU)
+                for _ in range(n_nodes * SLOTS // 2)]
+        jobs.append(Job(name=f"j{j}", tasks=maps))
+    return jobs
+
+
+def _nodes(n_nodes: int):
+    return make_cluster(n_nodes, "t3.2xlarge", slots_per_node=SLOTS,
+                        cpu_initial_fraction=0.2)
+
+
+def run(fast: bool = False) -> dict:
+    n_scen, n_nodes, n_ticks = (8, 8, 1_000) if fast else (32, 16, 10_000)
+    py_ticks = 300 if fast else 2_000     # Python sample, extrapolated
+
+    # --- Python loop (one scenario, capped ticks, extrapolated) ----------
+    sim = Simulation(_nodes(n_nodes), CashScheduler(vecsim.IdentityRng()),
+                     SimConfig(max_time=float(py_ticks)))
+    sim.submit_parallel(_sweep_jobs(0, n_nodes))
+    t0 = time.perf_counter()
+    r = sim.run()
+    t_py = time.perf_counter() - t0
+    ticks_run = max(int(r.makespan), 1)
+    t_py_sweep = t_py / ticks_run * n_ticks * n_scen
+    py_rate = ticks_run * n_nodes / t_py
+
+    # --- vectorized batch ------------------------------------------------
+    scenarios = []
+    for s in range(n_scen):
+        scenarios.append(vecsim.build_scenario(_nodes(n_nodes),
+                                               _sweep_jobs(s, n_nodes)))
+    batch = vecsim.stack_scenarios(scenarios)
+    cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash", impl="xla")
+    t0 = time.perf_counter()
+    vecsim.run_batch(batch, cfg)
+    t_cold = time.perf_counter() - t0     # includes jit compile
+    t0 = time.perf_counter()
+    out = vecsim.run_batch(batch, cfg)
+    t_vec = time.perf_counter() - t0
+    vec_rate = n_ticks * n_nodes * n_scen / t_vec
+    speedup = t_py_sweep / t_vec
+
+    emit("vecsim/sweep_shape", 0.0, f"{n_scen}x{n_nodes}x{n_ticks}")
+    emit("vecsim/python_ticks_nodes_per_s", t_py / ticks_run * 1e6,
+         f"{py_rate:.3e}")
+    emit("vecsim/python_sweep_est_s", 0.0, f"{t_py_sweep:.1f}")
+    emit("vecsim/vec_compile_s", t_cold * 1e6, f"{t_cold:.2f}")
+    emit("vecsim/vec_sweep_s", t_vec * 1e6, f"{t_vec:.2f}")
+    emit("vecsim/vec_ticks_nodes_scen_per_s", 0.0, f"{vec_rate:.3e}")
+    emit("vecsim/speedup_vs_python_loop", 0.0, f"{speedup:.1f}x")
+    if not fast:
+        check = speedup >= 50.0
+        emit("vecsim/check/speedup_ge_50x", 0.0, "PASS" if check else "FAIL")
+        assert check, f"vectorized speedup {speedup:.1f}x < 50x"
+    return {
+        "sweep": [n_scen, n_nodes, n_ticks],
+        "python_est_sweep_s": t_py_sweep,
+        "vec_sweep_s": t_vec,
+        "vec_compile_s": t_cold,
+        "python_ticks_nodes_per_s": py_rate,
+        "vec_ticks_nodes_scen_per_s": vec_rate,
+        "speedup": speedup,
+        "all_done": bool(np.asarray(out["all_done"]).all()),
+    }
+
+
+if __name__ == "__main__":
+    run()

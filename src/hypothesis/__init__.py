@@ -1,0 +1,125 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` package.
+
+The container this repo targets does not ship ``hypothesis``; rather than
+skip the property tests entirely we provide the tiny subset the test-suite
+uses — ``@given`` with keyword strategies, ``@settings(max_examples=...,
+deadline=...)`` and ``strategies.integers/floats/booleans/sampled_from`` —
+backed by a deterministic PRNG seeded from the test name, so failures are
+reproducible run-to-run. If the real hypothesis is ever installed, remove
+this shim from ``src/`` (it shadows the package on PYTHONPATH).
+"""
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable, Sequence
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any], name: str = "strategy"):
+        self._draw = draw
+        self._name = name
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{self._name}>"
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (imported ``as st``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value),
+                        f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: Any) -> Strategy:
+        def draw(rng: random.Random) -> float:
+            # bias some mass onto the endpoints — they are where bucket /
+            # scheduler edge cases live and what real hypothesis shrinks to
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            return rng.uniform(min_value, max_value)
+        return Strategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: rng.choice(elements), "sampled_from(...)")
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline: Any = None,
+             **_: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*args: Strategy, **kwargs: Strategy) -> Callable:
+    if args:
+        raise TypeError("the hypothesis shim supports keyword strategies only")
+
+    def deco(fn: Callable) -> Callable:
+        max_examples = getattr(fn, "_shim_settings",
+                               {}).get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        # NB: no functools.wraps — it sets __wrapped__ and pytest would then
+        # see the original signature and demand fixtures for every strategy
+        # parameter. The wrapper must present a zero-argument signature.
+        def wrapper(*wargs: Any) -> None:
+            seed = f"{fn.__module__}.{fn.__qualname__}"
+            for i in range(max_examples):
+                rng = random.Random(f"{seed}:{i}")
+                drawn = {k: s.example_from(rng) for k, s in kwargs.items()}
+                try:
+                    fn(*wargs, **drawn)
+                except _Rejected:
+                    continue  # assume() failed: drop the example
+                except Exception as e:  # re-raise with the failing example
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{max_examples}): "
+                        f"{fn.__name__}({drawn!r})") from e
+
+        # NB: do not set a ``hypothesis`` attribute here — pytest's bundled
+        # hypothesis integration probes it and expects the real object.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def assume(condition: bool) -> None:
+    """``assume(False)`` rejects the current example: ``given()`` catches
+    the raise and moves on to the next draw. Rejected draws still count
+    toward ``max_examples`` (no resampling), so assume-heavy tests run
+    fewer effective examples than configured."""
+    if not condition:
+        raise _Rejected()
+
+
+class _Rejected(Exception):
+    pass
+
+
+__all__ = ["given", "settings", "strategies", "st", "assume", "Strategy"]

@@ -115,6 +115,59 @@ def run_disk_experiment(setup: str, scheduler: str, seed: int = 0,
     return DiskExperimentResult(scheduler, n_nodes, db, sim.run())
 
 
+# ---------------------------------------------------------------------------
+# Vectorized (core.vecsim) scenario builders — same setups as the Python
+# drivers above, frozen to arrays for batched sweeps. The batched paths run
+# with shuffle="none" (deterministic node order) whereas the Python drivers
+# shuffle with Random(0); results are the same experiment, not bit-equal.
+# ---------------------------------------------------------------------------
+
+def build_cpu_vec_scenario(label: str, n_nodes: int = 10, seed: int = 0,
+                           scale: float = 1.0):
+    """vecsim scenario for ``run_cpu_experiment``'s setup.
+
+    Returns (scenario, scheduler_name, jobs) — labels using the stock
+    scheduler (emr / naive / reordered / unlimited) stack into one batch;
+    "cash" compiles separately (the scheduler is compile-time static).
+    """
+    from repro.core import vecsim
+
+    reset_tids()
+    slots = 8
+    if label == "emr":
+        nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=200.0)
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
+                              seed=seed, scale=scale, emr_optimized=True)
+    elif label in ("naive", "unlimited"):
+        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
+                             cpu_initial_fraction=0.0,
+                             unlimited=(label == "unlimited"))
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
+                              seed=seed, scale=scale)
+    elif label in ("reordered", "cash"):
+        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
+                             cpu_initial_fraction=0.0)
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes,
+                              slots, seed=seed, scale=scale)
+    else:
+        raise ValueError(label)
+    sched = "cash" if label == "cash" else "stock"
+    return vecsim.build_scenario(nodes, jobs, submit="sequential"), sched, jobs
+
+
+def build_disk_vec_scenario(setup: str, seed: int = 0):
+    """vecsim scenario for ``run_disk_experiment``'s setup (scheduler and
+    telemetry stay compile-time static — pass them via VecSimConfig)."""
+    from repro.core import vecsim
+
+    n_nodes, db, ebs = DISK_SETUPS[setup]
+    reset_tids()
+    nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=ebs,
+                         disk_initial_credits=0.0)
+    jobs = make_tpcds_suite(db, n_nodes, 8, seed=seed)
+    return vecsim.build_scenario(nodes, jobs), jobs
+
+
 def run_disk_pair(setup: str, seeds: Sequence[int] = (1, 2, 3)) -> Dict[str, Dict[str, float]]:
     """stock-vs-cash averages over seeds: makespan + avg query completion."""
     out: Dict[str, Dict[str, float]] = {}

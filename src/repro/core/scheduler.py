@@ -37,6 +37,15 @@ def _runnable(queue: Sequence[Task], ready_ids: Optional[set] = None) -> List[Ta
     return [t for t in queue if not t.depends_on or t.tid in ready_ids]
 
 
+def _dequeue_assigned(queue: List[Task], assignments: Sequence[Assignment]) -> None:
+    """Remove assigned tasks from the queue in one O(queue) rebuild (a
+    per-assignment ``queue.remove`` rescan is O(queue x assignments))."""
+    if not assignments:
+        return
+    assigned = {t.tid for t, _ in assignments}
+    queue[:] = [t for t in queue if t.tid not in assigned]
+
+
 class CashScheduler(SchedulerBase):
     """Paper Algorithm 1 (three-phase, credit-ordered)."""
 
@@ -86,8 +95,7 @@ class CashScheduler(SchedulerBase):
                 node.assign(task, now)
                 assignments.append((task, node))
 
-        for task, _ in assignments:
-            queue.remove(task)
+        _dequeue_assigned(queue, assignments)
         return assignments
 
 
@@ -113,8 +121,7 @@ class StockScheduler(SchedulerBase):
                 task = pending.pop(0)
                 node.assign(task, now)
                 assignments.append((task, node))
-        for task, _ in assignments:
-            queue.remove(task)
+        _dequeue_assigned(queue, assignments)
         return assignments
 
 
@@ -198,8 +205,7 @@ class JointCashScheduler(SchedulerBase):
                 node.assign(task, now)
                 assignments.append((task, node))
 
-        for task, _ in assignments:
-            queue.remove(task)
+        _dequeue_assigned(queue, assignments)
         return assignments
 
 

@@ -117,11 +117,13 @@ class Simulation:
             self._register_job(j)
             for t in j.tasks:
                 t.submit_time = self.now
-        lists = [list(j.tasks) for j in jobs]
-        while any(lists):
+        # round-robin interleave in O(total tasks): wave w takes the w-th task
+        # of every job that still has one (list.pop(0) per element is O(n^2))
+        lists = [j.tasks for j in jobs]
+        for wave in range(max((len(l) for l in lists), default=0)):
             for lst in lists:
-                if lst:
-                    self.queue.append(lst.pop(0))
+                if wave < len(lst):
+                    self.queue.append(lst[wave])
 
     def submit_sequential(self, jobs: Sequence[Job]) -> None:
         """Jobs gated: job k+1 enters the queue when job k finishes (SS6.1:

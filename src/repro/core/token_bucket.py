@@ -160,10 +160,15 @@ class DualTokenBucket:
                    self.sustained.max_rate() if self.sustained.balance <= 0 else self.peak.burst)
 
     def serve(self, demand: float, dt: float) -> float:
+        """Serve through both regulators: the peak bucket shapes the burst,
+        then the sustained bucket is charged only for the work the peak
+        bucket actually delivered (charging both by the full demand would
+        drain the non-binding bucket for work never done)."""
         w1 = self.peak.serve(demand, dt)
-        # long-run envelope from the sustained bucket
-        w2 = self.sustained.serve(demand, dt)
-        return min(w1, w2)
+        if dt <= 0.0:
+            return 0.0
+        # long-run envelope: the sustained bucket sees the delivered rate
+        return self.sustained.serve(w1 / dt, dt)
 
 
 def network_dual_bucket(gbps_peak: float = 10.0, gbps_sustained: float = 2.5) -> DualTokenBucket:

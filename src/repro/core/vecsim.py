@@ -1,0 +1,846 @@
+"""Vectorized batched fleet simulator: a `lax.scan` tick engine, vmapped
+over a leading scenario axis, for CASH scenario sweeps.
+
+The pure-Python `Simulation` (core.simulator) advances one scenario at a
+time through Python dicts — every paper figure and ablation is wall-clock
+bound by the interpreter. This module represents the whole cluster as
+arrays and advances *hundreds of scenarios at once*:
+
+  per-node bucket state   (balance, surplus, baseline, burst, capacity)
+                          for the CPU pool, the EBS pool, and the two
+                          halves of the network dual regulator;
+  per-task state          (work/done per resource, demand, node, status);
+  telemetry state         (CloudWatch actual/usage samples per node).
+
+One tick = release -> sequential-wave admission -> telemetry estimate ->
+three-phase placement (credit-sorted argsort + masked scatter of slot
+assignments) -> token-bucket serve (kernels.ops.bucket_serve, the Pallas /
+XLA kernel) with pro-rata work distribution -> CloudWatch observe. The
+semantics mirror `Simulation.run` tick-for-tick; under float64
+(`jax_enable_x64`) the engine reproduces the Python oracle's makespan,
+per-job completion times and surplus credits exactly (see
+tests/test_vecsim.py). The single deliberate deviation: the Python
+schedulers shuffle node order with a Mersenne-Twister rng in stock /
+phase-3 placement; the vectorized engine offers `shuffle="none"`
+(deterministic nid order — pass the Python scheduler an identity-shuffle
+rng to compare) or `shuffle="random"` (counter-based `jax.random`
+permutation per tick).
+
+Scenario sweeps batch over (credit seeds x fleet mixes x scheduler modes x
+telemetry modes): build one `Scenario` per configuration with
+`build_scenario`, group them by (scheduler, telemetry, shuffle) — those are
+compile-time static — `stack_scenarios`, and `run_batch` jit-compiles one
+scan for the whole group.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import Node
+from repro.core.simulator import Job
+from repro.kernels import ops
+
+# annotation codes in the task class array
+CLS_PAD, CLS_NONE, CLS_BURST_CPU, CLS_BURST_DISK, CLS_NET = -1, 0, 1, 2, 3
+
+_ANN_CODE = {
+    Annotation.NONE: CLS_NONE,
+    Annotation.BURST_CPU: CLS_BURST_CPU,
+    Annotation.BURST_DISK: CLS_BURST_DISK,
+    Annotation.NETWORK: CLS_NET,
+}
+
+_NEVER = -1.0e30          # "no telemetry sample yet" timestamp sentinel
+_INF = np.float64(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class VecSimConfig:
+    """Static (compile-time) sweep configuration. One `run_batch` call
+    covers scenarios sharing these; sweep over the rest via the batch axis."""
+    dt: float = 1.0
+    n_ticks: int = 4096
+    resource: str = "cpu"            # cpu | disk | joint (credit pool driving CASH)
+    scheduler: str = "cash"          # cash | stock | cash-joint
+    telemetry: str = "predicted"     # predicted | stale | oracle
+    shuffle: str = "none"            # none | random (stock / phase-3 node order)
+    actual_period: float = 300.0     # CloudWatch 5-min actuals
+    usage_period: float = 60.0       # CloudWatch 1-min utilization
+    impl: str = "auto"               # bucket-serve kernel path (ops.bucket_serve)
+    seed: int = 0                    # base key for shuffle="random"
+
+
+# ---------------------------------------------------------------------------
+# scenario construction: Python Node/Job objects -> arrays
+# ---------------------------------------------------------------------------
+
+def _bucket_fields(bucket) -> Tuple[float, float, float, float]:
+    return (float(bucket.baseline), float(bucket.burst),
+            float(bucket.capacity), float(bucket.balance))
+
+
+def scenario_task_order(jobs: Sequence[Job],
+                        submit: str = "parallel") -> List[Tuple[int, Task]]:
+    """(job index, task) pairs in scenario array order — the queue order the
+    engine schedules in. Use this to map the per-task ``start``/``finish``
+    output arrays back to Task objects (e.g. per-vertex phase sums)."""
+    if submit == "parallel":
+        order: List[Tuple[int, Task]] = []
+        lists = [list(j.tasks) for j in jobs]
+        for wave in range(max((len(l) for l in lists), default=0)):
+            for ji, lst in enumerate(lists):
+                if wave < len(lst):
+                    order.append((ji, lst[wave]))
+        return order
+    if submit == "sequential":
+        return [(ji, t) for ji, j in enumerate(jobs) for t in j.tasks]
+    raise ValueError(submit)
+
+
+def build_scenario(nodes: Sequence[Node], jobs: Sequence[Job], *,
+                   submit: str = "parallel") -> Dict[str, np.ndarray]:
+    """Freeze one scenario (a cluster + workload) into arrays.
+
+    ``submit="parallel"`` interleaves tasks round-robin across jobs exactly
+    like ``Simulation.submit_parallel`` (all jobs wave 0);
+    ``submit="sequential"`` gates job k+1 on job k finishing (wave = job
+    index), like ``Simulation.submit_sequential``. Task array order IS the
+    queue order, so schedulers index it directly. Only static task fields
+    are read — the same Job objects can still be run through the Python
+    oracle afterwards.
+    """
+    order = scenario_task_order(jobs, submit)
+    if submit == "parallel":
+        waves = np.zeros(len(order), np.int32)
+        n_waves = 1
+    else:
+        waves = np.array([ji for ji, _ in order], np.int32)
+        n_waves = max(len(jobs), 1)
+
+    tasks = [t for _, t in order]
+    T = len(tasks)
+    tid_to_idx = {t.tid: i for i, t in enumerate(tasks)}
+
+    # dependency groups: unique dep-sets -> one released-counter each.
+    # Both workload generators attach whole-stage dep sets, so G << T and
+    # readiness is two O(G x T) ops per tick instead of a T x T matmul.
+    group_of: Dict[frozenset, int] = {}
+    dep_group = np.full(T, -1, np.int32)
+    thresholds = np.ones(T, np.float64)
+    for i, (ji, t) in enumerate(order):
+        if t.depends_on:
+            key = frozenset(t.depends_on)
+            dep_group[i] = group_of.setdefault(key, len(group_of))
+            th = t.dep_threshold
+            thresholds[i] = jobs[ji].dep_threshold if th is None else th
+    G = len(group_of)
+    member = np.zeros((G, T), np.float64)
+    group_size = np.ones(G, np.float64)
+    for key, g in group_of.items():
+        idxs = [tid_to_idx[d] for d in key if d in tid_to_idx]
+        member[g, idxs] = 1.0
+        group_size[g] = float(len(key))
+
+    f = np.float64
+    sc: Dict[str, np.ndarray] = {
+        # --- tasks (T,) in queue order -------------------------------------
+        "work_cpu": np.array([t.work_cpu for t in tasks], f),
+        "work_disk": np.array([t.work_disk for t in tasks], f),
+        "work_net": np.array([t.work_net for t in tasks], f),
+        # the simulator caps per-slot CPU demand at one core
+        "dem_cpu": np.array([min(t.demand_cpu, 1.0) for t in tasks], f),
+        "dem_disk": np.array([t.demand_disk for t in tasks], f),
+        "dem_net": np.array([t.demand_net for t in tasks], f),
+        "cls": np.array([_ANN_CODE[t.annotation] for t in tasks], np.int32),
+        "wave": waves,
+        "job": np.array([ji for ji, _ in order], np.int32),
+        "dep_group": dep_group,
+        "dep_threshold": thresholds,
+        "task_pad": np.zeros(T, bool),
+        # --- dependency groups (G, T) / (G,) -------------------------------
+        "member": member,
+        "group_size": group_size,
+        # --- nodes (N,) -----------------------------------------------------
+        "slots": np.array([n.slots for n in nodes], np.int32),
+        "vcpus": np.array([n.spec.vcpus for n in nodes], f),
+        "cpu_unlimited": np.array([1.0 if n.cpu.unlimited else 0.0
+                                   for n in nodes], f),
+    }
+    for name, get in (("cpu", lambda n: n.cpu), ("disk", lambda n: n.disk),
+                      ("peak", lambda n: n.net.peak),
+                      ("sus", lambda n: n.net.sustained)):
+        cols = np.array([_bucket_fields(get(n)) for n in nodes], f)
+        sc[f"{name}_baseline"] = cols[:, 0]
+        sc[f"{name}_burst"] = cols[:, 1]
+        sc[f"{name}_capacity"] = cols[:, 2]
+        sc[f"{name}_balance0"] = cols[:, 3]
+    sc["n_waves"] = np.int32(n_waves)
+    sc["n_jobs"] = np.int32(len(jobs))
+    return sc
+
+
+def stack_scenarios(scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    """Pad every scenario to the sweep's max (tasks, nodes, groups, waves,
+    jobs) and stack on a leading axis. Padded tasks are born released with
+    class CLS_PAD; padded nodes have zero slots and inert buckets."""
+    Ts = [len(s["work_cpu"]) for s in scenarios]
+    Ns = [len(s["slots"]) for s in scenarios]
+    Gs = [s["member"].shape[0] for s in scenarios]
+    T, N, G = max(Ts), max(Ns), max(Gs)
+    W = max(int(s["n_waves"]) for s in scenarios)
+    J = max(int(s["n_jobs"]) for s in scenarios)
+
+    out: Dict[str, List[np.ndarray]] = {}
+    for s in scenarios:
+        t_pad, n_pad, g_pad = T - len(s["work_cpu"]), N - len(s["slots"]), \
+            G - s["member"].shape[0]
+
+        def pt(key, fill=0.0):
+            a = s[key]
+            return np.concatenate([a, np.full(t_pad, fill, a.dtype)]) if t_pad else a
+
+        def pn(key, fill=0.0):
+            a = s[key]
+            return np.concatenate([a, np.full(n_pad, fill, a.dtype)]) if n_pad else a
+
+        row = {k: pt(k) for k in ("work_cpu", "work_disk", "work_net",
+                                  "dem_cpu", "dem_disk", "dem_net",
+                                  "dep_threshold")}
+        row["cls"] = pt("cls", CLS_PAD)
+        row["wave"] = pt("wave", 0)
+        row["job"] = pt("job", J)            # padded tasks -> overflow segment
+        row["dep_group"] = pt("dep_group", -1)
+        row["task_pad"] = pt("task_pad", True)
+        mem = s["member"]
+        mem = np.pad(mem, ((0, g_pad), (0, t_pad)))
+        row["member"] = mem
+        row["group_size"] = np.concatenate(
+            [s["group_size"], np.ones(g_pad, s["group_size"].dtype)])
+        for k in ("slots", "vcpus", "cpu_unlimited"):
+            row[k] = pn(k)
+        for name in ("cpu", "disk", "peak", "sus"):
+            for fld in ("baseline", "burst", "capacity", "balance0"):
+                row[f"{name}_{fld}"] = pn(f"{name}_{fld}")
+        row["n_waves"] = np.int32(W)
+        row["n_jobs"] = s["n_jobs"]
+        for k, v in row.items():
+            out.setdefault(k, []).append(np.asarray(v))
+    batch = {k: np.stack(v) for k, v in out.items()}
+    batch["_meta"] = np.array([T, N, G, W, J])  # static dims (host side)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# placement primitives (Algorithm 1 in array form)
+# ---------------------------------------------------------------------------
+
+# Scheduling must re-rank nodes and queue prefixes every tick. The
+# formulations below deliberately avoid argsort / searchsorted / scatter —
+# under vmap those serialize per scenario on XLA:CPU and dominated the
+# sweep's wall clock. Everything task-sized stays O(T) elementwise (plus
+# ONE packed cumsum and one small matmul per tick); per-node bookkeeping is
+# (N, N) / (N, S) comparison matrices — N is a handful of nodes.
+
+def _bucket_rank(cum: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
+    """searchsorted(cum, rank, side='right') as a comparison-sum."""
+    return jnp.sum(cum[None, :] <= rank[:, None], axis=1, dtype=jnp.int32)
+
+
+def _node_orders(key_vals: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Node visit orders (descending, ascending) by credit key with nid
+    tie-break — `sorted(nodes, key=(+-credit, nid))` as comparison counts."""
+    n = key_vals.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    ck, cj = key_vals[None, :], key_vals[:, None]
+    tie = (ck == cj) & (ids[None, :] < ids[:, None])
+    rank_desc = jnp.sum((ck > cj) | tie, axis=1, dtype=jnp.int32)
+    rank_asc = jnp.sum((ck < cj) | tie, axis=1, dtype=jnp.int32)
+
+    def invert(rank):
+        m = rank[None, :] == ids[:, None]
+        return jnp.sum(jnp.where(m, ids[None, :], 0), axis=1).astype(jnp.int32)
+
+    return invert(rank_desc), invert(rank_asc)
+
+
+def _unpermute(order_ids: jnp.ndarray, vals_sorted: jnp.ndarray) -> jnp.ndarray:
+    """vals[order_ids[i]] = vals_sorted[i] without scatter: (N, N) one-hot."""
+    n = order_ids.shape[0]
+    m = order_ids[:, None] == jnp.arange(n, dtype=order_ids.dtype)[None, :]
+    return jnp.sum(jnp.where(m, vals_sorted[:, None], 0),
+                   axis=0).astype(vals_sorted.dtype)
+
+
+def _packed_ranks(*masks: jnp.ndarray) -> List[jnp.ndarray]:
+    """In-class queue ranks (cumsum of each mask, minus one). Per-tick (T,)
+    cumsums are the scan's costliest CPU primitive, so up to three masks are
+    packed into bit fields of a single int32 cumsum when T allows."""
+    t = masks[0].shape[0]
+    if t < 1024 and len(masks) <= 3:
+        combined = masks[0].astype(jnp.int32)
+        for i, m in enumerate(masks[1:], start=1):
+            combined = combined + (m.astype(jnp.int32) << (10 * i))
+        cum = jnp.cumsum(combined)
+        return [((cum >> (10 * i)) & 1023) - 1 for i in range(len(masks))]
+    stacked = jnp.stack(masks).astype(jnp.int32)
+    cum = jnp.cumsum(stacked, axis=-1) - 1
+    return [cum[i] for i in range(len(masks))]
+
+
+# Each placement phase is factored into (a) tiny per-node bookkeeping in
+# (N,)- / (N*smax,)-space and (b) a rank -> node LOOKUP TABLE over the slot
+# rank space (at most N*smax entries). The per-task work of a whole tick
+# then collapses to ONE packed cumsum plus ONE stacked table gather — on
+# CPU every unfused (T,)-wide op costs ~0.1 ms x ticks x sweeps, so the
+# breaker-op count is the figure of merit here, not FLOPs.
+
+def _pack_counts(order_ids: jnp.ndarray, free: jnp.ndarray,
+                 n_pend: jnp.ndarray):
+    """Phase 1/3 slot-fill bookkeeping: nodes visited in ``order_ids``
+    order, each packed before moving on. Returns (cumulative capacity in
+    visit order, per-node assigned count)."""
+    cap = free[order_ids]
+    cum = jnp.cumsum(cap)
+    taken_sorted = jnp.clip(n_pend - (cum - cap), 0, cap)
+    return cum, _unpermute(order_ids, taken_sorted)
+
+
+def _pack_table(order_ids: jnp.ndarray, cum: jnp.ndarray, ls: int) -> jnp.ndarray:
+    """rank -> node table for a slot-fill phase (rank r lands on the node
+    whose cumulative-capacity range covers r)."""
+    r = jnp.arange(ls, dtype=jnp.int32)
+    slot = _bucket_rank(cum, r)
+    return order_ids[jnp.clip(slot, 0, order_ids.shape[0] - 1)]
+
+
+def _rr_table(order_ids: jnp.ndarray, free: jnp.ndarray, n_pend: jnp.ndarray,
+              smax: int, ls: int):
+    """Phase 2 (at most one task per node per round, nodes visited in
+    ``order_ids`` order each round) as a rank -> node table: cell (j, s) of
+    the (node, round) grid has global rank `rounds-before + nodes-earlier-
+    this-round`; inverting that over the <= N*smax cells yields the table.
+    Returns (total assignable, table, per-node assigned count)."""
+    n = order_ids.shape[0]
+    cap = free[order_ids]                                   # (N,)
+    s_idx = jnp.arange(smax, dtype=cap.dtype)               # (S,)
+    gti = (cap[:, None] > s_idx[None, :]).astype(jnp.int32)  # (N, S)
+    c_s = jnp.sum(gti, axis=0, dtype=jnp.int32)             # (S,) round sizes
+    cumc = jnp.cumsum(c_s)
+    prior = jnp.cumsum(gti, axis=0) - gti                   # exclusive (N, S)
+    # invpos[p, s] = visit-order position of the p-th participant of round s
+    pp = jnp.arange(n, dtype=jnp.int32)
+    hit = (prior[None, :, :] == pp[:, None, None]) & (gti[None, :, :] > 0)
+    invpos = jnp.sum(jnp.where(hit, pp[None, :, None], 0), axis=1,
+                     dtype=jnp.int32)                       # (N, S)
+    r = jnp.arange(ls, dtype=jnp.int32)
+    s_r = jnp.clip(_bucket_rank(cumc, r), 0, smax - 1)
+    p_r = jnp.clip(r - (cumc[s_r] - c_s[s_r]), 0, n - 1)
+    table = order_ids[invpos[p_r, s_r]]
+    taken_sorted = jnp.sum((gti > 0) & ((cumc - c_s)[None, :] + prior < n_pend),
+                           axis=1, dtype=jnp.int32)
+    return cumc[-1], table, _unpermute(order_ids, taken_sorted)
+
+
+def _gather_phase_nodes(tables, totals, masks, ranks, ls: int):
+    """The single per-task placement op: stacked rank -> node gather over
+    all phase tables, masked to each phase's class and assignable range."""
+    if len(tables) == 1:
+        node = tables[0][jnp.clip(ranks[0], 0, ls - 1)]
+        ok = masks[0] & (ranks[0] < totals[0])
+        return jnp.where(ok, node, -1)
+    tabs = jnp.stack(tables)                                # (P, LS)
+    rk = jnp.stack(ranks)                                   # (P, T)
+    mk = jnp.stack(masks)
+    tot = jnp.stack(totals)
+    nodes = jnp.take_along_axis(tabs, jnp.clip(rk, 0, ls - 1), axis=1)
+    ok = mk & (rk < tot[:, None])
+    anodes = jnp.where(ok, nodes, -1)
+    assign = anodes[0]
+    for p in range(1, len(tables)):
+        assign = jnp.where(assign >= 0, assign, anodes[p])
+    return assign
+
+
+def _joint_split(free_sorted: jnp.ndarray, prefer_cpu: jnp.ndarray,
+                 n_cpu: jnp.ndarray, n_disk: jnp.ndarray):
+    """JointCashScheduler phase 1: per node (visited in joint-credit
+    descending order) alternate the two burst classes starting from the
+    richer pool. Returns per-node (cpu_take, disk_take)."""
+    def body(carry, inp):
+        rc, rd = carry
+        f, pref = inp
+        t = jnp.minimum(f, rc + rd)
+        ceil_h, floor_h = (t + 1) // 2, t // 2
+        want_cpu = jnp.where(pref, ceil_h, floor_h)
+        cpu_take = jnp.minimum(rc, jnp.maximum(want_cpu, t - rd))
+        disk_take = t - cpu_take
+        return (rc - cpu_take, rd - disk_take), (cpu_take, disk_take)
+
+    (_, _), (cpu_take, disk_take) = jax.lax.scan(
+        body, (n_cpu, n_disk), (free_sorted, prefer_cpu))
+    return cpu_take, disk_take
+
+
+def _take_ranges(order_ids: jnp.ndarray, takes: jnp.ndarray,
+                 mask: jnp.ndarray, rank: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Assign the k-th masked task to the node whose cumulative ``takes``
+    range covers k (nodes visited in ``order_ids`` order)."""
+    cum = jnp.cumsum(takes)
+    slot = _bucket_rank(cum, rank)
+    node = order_ids[jnp.clip(slot, 0, order_ids.shape[0] - 1)]
+    ok = mask & (rank < cum[-1])
+    n_pend = jnp.sum(mask.astype(jnp.int32))
+    taken_sorted = jnp.minimum(takes, jnp.clip(n_pend - (cum - takes), 0, None))
+    return jnp.where(ok, node, -1), _unpermute(order_ids, taken_sorted)
+
+
+# ---------------------------------------------------------------------------
+# the scan engine
+# ---------------------------------------------------------------------------
+
+def _telemetry_estimate(cfg: VecSimConfig, tel: Dict[str, jnp.ndarray],
+                        balance: jnp.ndarray, baseline: jnp.ndarray,
+                        capacity: jnp.ndarray, now: jnp.ndarray,
+                        mode: str) -> jnp.ndarray:
+    """Algorithm 2 / ablations, array form (mirrors core.credits)."""
+    if mode == "oracle":
+        return balance
+    has = tel["act_t"] > _NEVER / 2
+    if mode == "stale":
+        return jnp.where(has, tel["act_bal"], capacity)
+    # predicted: extrapolate from the 1-min utilization samples
+    use_ok = tel["use_t"] >= tel["act_t"]
+    dt_act = now - jnp.where(has, tel["act_t"], now)
+    est = tel["act_bal"] + jnp.where(use_ok,
+                                     (baseline - tel["use_rate"]) * dt_act, 0.0)
+    est = jnp.clip(est, 0.0, capacity)
+    return jnp.where(has, est, capacity)
+
+
+def _telemetry_observe(cfg: VecSimConfig, tel: Dict[str, jnp.ndarray],
+                       balance: jnp.ndarray, rate: jnp.ndarray,
+                       now: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """CloudWatch emulation: publish actuals / windowed usage on period
+    boundaries (mirrors core.credits.CloudWatchEmulator.observe)."""
+    accum = tel["accum"] + rate
+    pub_a = now - tel["act_t"] >= cfg.actual_period
+    pub_u = now - tel["use_t"] >= cfg.usage_period
+    span = jnp.maximum(now - tel["win_start"], 1e-9)
+    avg = accum / jnp.maximum(1.0, span)
+    return {
+        "act_bal": jnp.where(pub_a, balance, tel["act_bal"]),
+        "act_t": jnp.where(pub_a, now, tel["act_t"]),
+        "use_rate": jnp.where(pub_u, avg, tel["use_rate"]),
+        "use_t": jnp.where(pub_u, now, tel["use_t"]),
+        "accum": jnp.where(pub_u, 0.0, accum),
+        "win_start": jnp.where(pub_u, now, tel["win_start"]),
+    }
+
+
+def _fresh_telemetry(n: int, dtype) -> Dict[str, jnp.ndarray]:
+    z = jnp.zeros(n, dtype)
+    return {"act_bal": z, "act_t": jnp.full(n, _NEVER, dtype),
+            "use_rate": z, "use_t": jnp.full(n, _NEVER, dtype),
+            "accum": z, "win_start": z}
+
+
+def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
+                  active: Tuple[bool, bool, bool, bool, bool],
+                  sc: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """One scenario end-to-end; vmapped over the batch by `run_batch`.
+
+    ``active`` = (disk, net, burst-class, network-class, plain-class):
+    compile-time flags letting sweeps skip untouched buckets' serve paths
+    and statically empty scheduling phases entirely.
+    """
+    T = sc["work_cpu"].shape[0]
+    N = sc["slots"].shape[0]
+    G = sc["member"].shape[0]
+    dtype = sc["work_cpu"].dtype
+    dt = cfg.dt
+    joint = cfg.resource == "joint"
+    tel_mode = "predicted" if joint else cfg.telemetry
+    # stock never reads credits: skip telemetry state + estimates entirely
+    need_credits = cfg.scheduler != "stock"
+    act_disk = active[0] or cfg.resource in ("disk", "joint")
+    act_net = active[1]
+    p_burst, p_netcls, p_plain = active[2], active[3], active[4]
+
+    is_burst = (sc["cls"] == CLS_BURST_CPU) | (sc["cls"] == CLS_BURST_DISK)
+    is_net = sc["cls"] == CLS_NET
+    is_plain = sc["cls"] == CLS_NONE
+    ids = jnp.arange(N, dtype=jnp.int32)
+    zero_t = jnp.zeros(T, dtype)
+    zero_n = jnp.zeros(N, dtype)
+
+    # the scan carry holds only what this configuration can touch — an
+    # untouched (T,)-wide passenger costs a copy per tick per scenario
+    state = {
+        "done_cpu": zero_t,
+        "node_of": jnp.full(T, -1, jnp.int32),
+        "start": jnp.full(T, _INF, dtype), "finish": jnp.full(T, _INF, dtype),
+        "released": sc["task_pad"],
+        # incremental per-node occupancy: running count after placement and
+        # the pending releases booked during last tick's serve — recomputing
+        # them from node_of would cost a (T, N) reduction every tick
+        "run_cnt": jnp.zeros(N, jnp.int32),
+        "rel_cnt": jnp.zeros(N, jnp.int32),
+        "cpu_bal": sc["cpu_balance0"], "cpu_sur": zero_n,
+        "cpu_work_total": jnp.zeros((), dtype),
+        "busy_seconds": jnp.zeros((), dtype),
+    }
+    if act_disk:
+        state["done_disk"] = zero_t
+        state["disk_bal"] = sc["disk_balance0"]
+    if act_net:
+        state["done_net"] = zero_t
+        state["peak_bal"] = sc["peak_balance0"]
+        state["sus_bal"] = sc["sus_balance0"]
+    if n_waves > 1:
+        state["wave_adm"] = jnp.int32(0)
+        state["wave_t"] = jnp.zeros(n_waves, dtype).at[1:].set(jnp.inf)
+    if tel_mode != "oracle" and need_credits:
+        if joint or cfg.resource == "cpu":
+            state["tel_cpu"] = _fresh_telemetry(N, dtype)
+        if joint or cfg.resource == "disk":
+            state["tel_disk"] = _fresh_telemetry(N, dtype)
+    if cfg.shuffle == "random":
+        state["key"] = jax.random.PRNGKey(cfg.seed)
+
+    def tick(st, t):
+        now = t.astype(dtype) * dt
+
+        # ---- 1) release finished tasks (work completed last tick) --------
+        rem_cpu = sc["work_cpu"] - st["done_cpu"]
+        rem_disk = sc["work_disk"] - st["done_disk"] if act_disk else zero_t
+        rem_net = sc["work_net"] - st["done_net"] if act_net else zero_t
+        started = st["node_of"] >= 0
+        finished = rem_cpu <= 1e-9
+        if act_disk:
+            finished &= rem_disk <= 1e-9
+        if act_net:
+            finished &= rem_net <= 1e-9
+        newly = finished & started & ~st["released"]
+        released = st["released"] | newly
+        finish = jnp.where(newly, now, st["finish"])
+        run_cnt = st["run_cnt"] - st["rel_cnt"]     # occupancy after release
+
+        # ---- 2) sequential wave admission --------------------------------
+        wave_adm = wave_t = None
+        if n_waves > 1:
+            wave_adm, wave_t = st["wave_adm"], st["wave_t"]
+            pending = (~released) & (sc["wave"] <= wave_adm)
+            adv = (~jnp.any(pending)) & (wave_adm < n_waves - 1)
+            wave_adm = wave_adm + adv.astype(jnp.int32)
+            wave_t = jnp.where(adv & (jnp.arange(n_waves) == wave_adm),
+                               now, wave_t)
+
+        # ---- 3) telemetry estimates (pre-observe state, like Algorithm 2)
+        est_cpu = est_disk = None
+        if need_credits and (joint or cfg.resource == "cpu"):
+            est_cpu = _telemetry_estimate(cfg, st.get("tel_cpu"),
+                                          st["cpu_bal"], sc["cpu_baseline"],
+                                          sc["cpu_capacity"], now, tel_mode)
+        if need_credits and (joint or cfg.resource == "disk"):
+            est_disk = _telemetry_estimate(cfg, st.get("tel_disk"),
+                                           st["disk_bal"],
+                                           sc["disk_baseline"],
+                                           sc["disk_capacity"], now, tel_mode)
+        credits = est_disk if cfg.resource == "disk" else est_cpu
+
+        # ---- 4) placement ------------------------------------------------
+        dep_ok = jnp.ones(T, bool)
+        if G > 0:
+            done_cnt = sc["member"] @ released.astype(dtype)
+            g = jnp.clip(sc["dep_group"], 0, G - 1)
+            frac = done_cnt[g] / sc["group_size"][g]
+            dep_ok = (sc["dep_group"] < 0) | \
+                (frac + 1e-12 >= sc["dep_threshold"])
+        ready = (~started) & (~released) & dep_ok & (sc["cls"] != CLS_PAD)
+        if n_waves > 1:
+            ready &= sc["wave"] <= wave_adm
+
+        free = sc["slots"] - run_cnt
+
+        if cfg.shuffle == "random":
+            key, sub = jax.random.split(st["key"])
+            order3 = jax.random.permutation(sub, ids)
+        else:
+            key = None
+            order3 = ids
+
+        ls = N * smax                      # slot rank space (static)
+        if cfg.scheduler == "stock":
+            (r_all,) = _packed_ranks(ready)
+            n_all = r_all[-1] + 1
+            cum, taken = _pack_counts(order3, free, n_all)
+            assign = _gather_phase_nodes(
+                [_pack_table(order3, cum, ls)], [cum[-1]], [ready], [r_all], ls)
+        elif cfg.scheduler == "cash-joint" and joint:
+            cap_cpu = jnp.maximum(sc["cpu_capacity"], 1e-9)
+            cap_disk = jnp.maximum(sc["disk_capacity"], 1e-9)
+            norm_cpu, norm_disk = est_cpu / cap_cpu, est_disk / cap_disk
+            jcred = jnp.minimum(norm_cpu, norm_disk)
+            desc, asc = _node_orders(jcred)
+            prefer = (norm_cpu >= norm_disk)[desc]
+            m_cpu = ready & (sc["cls"] == CLS_BURST_CPU)
+            m_disk = ready & (sc["cls"] == CLS_BURST_DISK)
+            m_net, m_plain = ready & is_net, ready & is_plain
+            r_cpu, r_disk, r_net = _packed_ranks(m_cpu, m_disk, m_net)
+            (r_plain,) = _packed_ranks(m_plain)
+            ct, dtk = _joint_split(free[desc], prefer, r_cpu[-1] + 1,
+                                   r_disk[-1] + 1)
+            cum_c, cum_d = jnp.cumsum(ct), jnp.cumsum(dtk)
+            t1 = _unpermute(desc, ct) + _unpermute(desc, dtk)
+            free1 = free - t1
+            tot2, rrtab, t2 = _rr_table(asc, free1, r_net[-1] + 1, smax, ls)
+            free2 = free1 - t2
+            cum3, t3 = _pack_counts(order3, free2, r_plain[-1] + 1)
+            assign = _gather_phase_nodes(
+                [_pack_table(desc, cum_c, ls), _pack_table(desc, cum_d, ls),
+                 rrtab, _pack_table(order3, cum3, ls)],
+                [cum_c[-1], cum_d[-1], tot2, cum3[-1]],
+                [m_cpu, m_disk, m_net, m_plain],
+                [r_cpu, r_disk, r_net, r_plain], ls)
+            taken = t1 + t2 + t3
+        else:  # cash (single resource; also joint fleets under one pool)
+            desc, asc = _node_orders(credits)
+            # classes statically absent from the whole batch contribute no
+            # phase — a fleet sweep of pure burst tasks runs phase 1 only
+            phase_masks = []
+            if p_burst:
+                phase_masks.append(ready & is_burst)
+            if p_netcls:
+                phase_masks.append(ready & is_net)
+            if p_plain:
+                phase_masks.append(ready & is_plain)
+            pranks = _packed_ranks(*phase_masks) if phase_masks else []
+            tables, totals = [], []
+            cur_free, taken, i = free, jnp.zeros(N, jnp.int32), 0
+            if p_burst:
+                cum, tk = _pack_counts(desc, cur_free, pranks[i][-1] + 1)
+                tables.append(_pack_table(desc, cum, ls))
+                totals.append(cum[-1])
+                cur_free, taken, i = cur_free - tk, taken + tk, i + 1
+            if p_netcls:
+                tot2, rrtab, tk = _rr_table(asc, cur_free, pranks[i][-1] + 1,
+                                            smax, ls)
+                tables.append(rrtab)
+                totals.append(tot2)
+                cur_free, taken, i = cur_free - tk, taken + tk, i + 1
+            if p_plain:
+                cum, tk = _pack_counts(order3, cur_free, pranks[i][-1] + 1)
+                tables.append(_pack_table(order3, cum, ls))
+                totals.append(cum[-1])
+                taken = taken + tk
+            if tables:
+                assign = _gather_phase_nodes(tables, totals, phase_masks,
+                                             pranks, ls)
+            else:
+                assign = jnp.full(T, -1, jnp.int32)
+
+        placed = assign >= 0
+        node_of = jnp.where(placed, assign, st["node_of"])
+        start = jnp.where(placed, now, st["start"])
+        running = (node_of >= 0) & ~released
+        run_cnt = run_cnt + taken
+        nidx = jnp.clip(node_of, 0, N - 1)
+
+        # ---- 5) serve: aggregate demand -> buckets -> pro-rata work ------
+        # per-node reductions as ONE small matmul over a started-task
+        # one-hot; masks live in the matrix columns (vmapped scatters /
+        # where-sums here dominated the sweep before)
+        onehot = jnp.where((node_of[:, None] == ids[None, :]) &
+                           running[:, None], jnp.ones((), dtype), 0.0)
+        cols = [jnp.where(running & (rem_cpu > 0.0), sc["dem_cpu"], 0.0)]
+        if act_disk:
+            cols.append(jnp.where(running & (rem_disk > 0.0),
+                                  sc["dem_disk"], 0.0))
+        if act_net:
+            cols.append(jnp.where(running & (rem_net > 0.0),
+                                  sc["dem_net"], 0.0))
+        per_node = jax.lax.dot_general(
+            jnp.stack(cols), onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=dtype)                    # (C, N)
+        dem_cpu = per_node[0]
+
+        w_cpu, cpu_bal, sur_add = ops.bucket_serve(
+            st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
+            sc["cpu_capacity"], sc["cpu_unlimited"], dt=dt, impl=cfg.impl)
+
+        disk_bal = peak_bal = sus_bal = done_disk = done_net = None
+        w_disk = w_net = zero_n
+        if act_disk:
+            done_disk = st["done_disk"]
+            dem_disk = per_node[1]
+            w_disk, disk_bal, _ = ops.bucket_serve(
+                st["disk_bal"], dem_disk, sc["disk_baseline"],
+                sc["disk_burst"], sc["disk_capacity"], zero_n, dt=dt,
+                impl=cfg.impl)
+        if act_net:
+            done_net = st["done_net"]
+            dem_net = per_node[-1]
+            # dual network regulator: shape by the peak bucket, then charge
+            # the sustained bucket for the work actually delivered
+            w_pk, peak_bal, _ = ops.bucket_serve(
+                st["peak_bal"], dem_net, sc["peak_baseline"],
+                sc["peak_burst"], sc["peak_capacity"], zero_n, dt=dt,
+                impl=cfg.impl)
+            w_net, sus_bal, _ = ops.bucket_serve(
+                st["sus_bal"], w_pk / dt, sc["sus_baseline"],
+                sc["sus_burst"], sc["sus_capacity"], zero_n, dt=dt,
+                impl=cfg.impl)
+
+        # pro-rata distribution: gather every (work, demand) node column a
+        # task needs in ONE stacked gather, then pure elementwise
+        wd_rows = [w_cpu, dem_cpu]
+        if act_disk:
+            wd_rows += [w_disk, dem_disk]
+        if act_net:
+            wd_rows += [w_net, dem_net]
+        g = jnp.stack(wd_rows)[:, nidx]                      # (2C, T)
+
+        def distribute(done, work_tot, dem_task, rem, w_t, dem_t):
+            share = jnp.where(dem_t > 0.0, w_t * dem_task / dem_t, 0.0)
+            upd = running & (rem > 0.0) & (dem_t > 0.0)
+            return jnp.where(upd, jnp.minimum(work_tot, done + share), done)
+
+        done_cpu = distribute(st["done_cpu"], sc["work_cpu"], sc["dem_cpu"],
+                              rem_cpu, g[0], g[1])
+        fin = rem_cpu - (done_cpu - st["done_cpu"]) <= 1e-9
+        if act_disk:
+            done_disk = distribute(done_disk, sc["work_disk"], sc["dem_disk"],
+                                   rem_disk, g[2], g[3])
+            fin &= rem_disk - (done_disk - st["done_disk"]) <= 1e-9
+        if act_net:
+            done_net = distribute(done_net, sc["work_net"], sc["dem_net"],
+                                  rem_net, g[-2], g[-1])
+            fin &= rem_net - (done_net - st["done_net"]) <= 1e-9
+
+        # tasks finishing this serve release (and free their slot) next tick
+        fin = fin & running
+        rel_cnt = jax.lax.dot_general(
+            jnp.where(fin, jnp.ones((), dtype), 0.0), onehot,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=dtype).astype(jnp.int32)
+
+        # ---- 6) CloudWatch observe --------------------------------------
+        tel_cpu, tel_disk = st.get("tel_cpu"), st.get("tel_disk")
+        if tel_cpu is not None:
+            tel_cpu = _telemetry_observe(cfg, tel_cpu, cpu_bal, w_cpu / dt, now)
+        if tel_disk is not None:
+            tel_disk = _telemetry_observe(cfg, tel_disk, disk_bal,
+                                          w_disk / dt, now)
+
+        # mirror the initial carry exactly — inactive features stay out
+        new_st = {
+            "done_cpu": done_cpu,
+            "node_of": node_of, "start": start, "finish": finish,
+            "released": released, "run_cnt": run_cnt, "rel_cnt": rel_cnt,
+            "cpu_bal": cpu_bal, "cpu_sur": st["cpu_sur"] + sur_add,
+            "cpu_work_total": st["cpu_work_total"] + jnp.sum(w_cpu),
+            "busy_seconds": st["busy_seconds"]
+            + jnp.sum((run_cnt > 0).astype(dtype)) * dt,
+        }
+        if act_disk:
+            new_st["done_disk"] = done_disk
+            new_st["disk_bal"] = disk_bal
+        if act_net:
+            new_st["done_net"] = done_net
+            new_st["peak_bal"] = peak_bal
+            new_st["sus_bal"] = sus_bal
+        if n_waves > 1:
+            new_st["wave_adm"] = wave_adm
+            new_st["wave_t"] = wave_t
+        if tel_cpu is not None:
+            new_st["tel_cpu"] = tel_cpu
+        if tel_disk is not None:
+            new_st["tel_disk"] = tel_disk
+        if cfg.shuffle == "random":
+            new_st["key"] = key
+        return new_st, None
+
+    st, _ = jax.lax.scan(tick, state,
+                         jnp.arange(cfg.n_ticks, dtype=jnp.int32))
+
+    real = ~sc["task_pad"]
+    all_done = jnp.all(st["released"] | ~real)
+    # a task finishing work at tick k is released (and timestamped) at k+1 —
+    # exactly the Python loop, whose makespan is `now` at the break check
+    makespan = jnp.where(all_done,
+                         jnp.max(jnp.where(real, st["finish"], -jnp.inf)),
+                         cfg.n_ticks * dt)
+    if n_waves > 1:
+        submit = st["wave_t"][jnp.clip(sc["wave"], 0, n_waves - 1)]
+    else:
+        submit = jnp.zeros(T, dtype)
+    seg = jnp.where(real, sc["job"], n_jobs)
+    j_end = jax.ops.segment_max(jnp.where(real, st["finish"], -jnp.inf), seg,
+                                num_segments=n_jobs + 1)[:n_jobs]
+    j_sub = jax.ops.segment_min(jnp.where(real, submit, jnp.inf), seg,
+                                num_segments=n_jobs + 1)[:n_jobs]
+    j_cnt = jax.ops.segment_sum(real.astype(jnp.int32), seg,
+                                num_segments=n_jobs + 1)[:n_jobs]
+    return {
+        "makespan": makespan,
+        "all_done": all_done,
+        "job_completion": j_end - j_sub,
+        "job_mask": j_cnt > 0,
+        "surplus_credits": jnp.sum(st["cpu_sur"]),
+        "total_cpu_work": jnp.sum(jnp.where(real, st["done_cpu"], 0.0)),
+        "cpu_work_served": st["cpu_work_total"],
+        "node_busy_seconds": st["busy_seconds"],
+        "finish": st["finish"],
+        "start": st["start"],
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "smax", "n_waves",
+                                             "n_jobs", "active"))
+def _run_batch_jit(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
+                   active: Tuple[bool, bool, bool, bool, bool],
+                   arrays: Dict[str, jnp.ndarray]):
+    return jax.vmap(functools.partial(_simulate_one, cfg, smax,
+                                      n_waves, n_jobs, active))(arrays)
+
+
+def run_batch(batch: Dict[str, np.ndarray],
+              cfg: VecSimConfig) -> Dict[str, np.ndarray]:
+    """Run a stacked scenario batch under one static config. Returns arrays
+    with a leading scenario axis: makespan, all_done, job_completion /
+    job_mask, surplus_credits, per-task start/finish times, plus aggregate
+    cpu-work and busy-seconds counters."""
+    _, _, _, W, J = (int(x) for x in batch["_meta"])
+    arrays = {k: jnp.asarray(v) for k, v in batch.items()
+              if k not in ("_meta", "n_waves", "n_jobs")}
+    smax = int(batch["slots"].max()) if batch["slots"].size else 1
+    cls = batch["cls"]
+    active = (bool(batch["work_disk"].any() or batch["dem_disk"].any()),
+              bool(batch["work_net"].any() or batch["dem_net"].any()),
+              bool(((cls == CLS_BURST_CPU) | (cls == CLS_BURST_DISK)).any()),
+              bool((cls == CLS_NET).any()),
+              bool((cls == CLS_NONE).any()))
+    out = _run_batch_jit(cfg, max(smax, 1), W, J, active, arrays)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def run_scenarios(scenarios: Sequence[Dict[str, np.ndarray]],
+                  cfg: VecSimConfig) -> Dict[str, np.ndarray]:
+    """Convenience: stack + run in one call."""
+    return run_batch(stack_scenarios(scenarios), cfg)
+
+
+class IdentityRng:
+    """Drop-in for the schedulers' ``random.Random``: keeps node order
+    deterministic (nid ascending) so the Python oracle matches the
+    vectorized engine's ``shuffle="none"`` placement."""
+
+    def shuffle(self, x: list) -> None:  # noqa: D401 - rng protocol
+        return None

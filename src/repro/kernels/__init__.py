@@ -1,9 +1,11 @@
-"""Pallas TPU kernels (flash attention, decode attention, Mamba-2 SSD) with
-pure-jnp oracles (ref.py) and jit'd dispatch (ops.py)."""
+"""Pallas TPU kernels (flash attention, decode attention, Mamba-2 SSD,
+token-bucket serve) with pure-jnp oracles (ref.py) and jit'd dispatch
+(ops.py)."""
 from repro.kernels import ops, ref
+from repro.kernels.bucket_serve import bucket_serve_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
-__all__ = ["ops", "ref", "decode_attention_pallas", "flash_attention_pallas",
-           "ssd_scan_pallas"]
+__all__ = ["ops", "ref", "bucket_serve_pallas", "decode_attention_pallas",
+           "flash_attention_pallas", "ssd_scan_pallas"]

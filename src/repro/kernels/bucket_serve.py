@@ -1,0 +1,87 @@
+"""Token-bucket serve step — Pallas TPU kernel (CASH fleet simulator).
+
+One ``dt`` step of ``TokenBucket.serve`` for a whole fleet of buckets at
+once: the vectorized simulator (core.vecsim) serves every node's CPU / disk
+/ network regulator across all scenarios of a sweep in a single call, so
+the array is (scenarios x nodes) flattened. The math is pure VPU
+elementwise; the kernel tiles the flattened fleet into (SUBLANES x LANES)
+blocks resident in VMEM.
+
+Inputs broadcast elementwise: balance, demand (units/sec), baseline, burst,
+capacity, unlimited (0/1 mask). Returns (work, new_balance, surplus_add) —
+see kernels.ref.bucket_serve_ref for the semantics contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+
+LANES = 128
+SUBLANES = 8
+_BLOCK = LANES * SUBLANES
+
+
+def _bucket_kernel(bal_ref, dem_ref, base_ref, burst_ref, cap_ref, unl_ref,
+                   work_ref, nbal_ref, sur_ref, *, dt: float):
+    bal = bal_ref[...]
+    dem = dem_ref[...]
+    base = base_ref[...]
+    brst = burst_ref[...]
+    cap = cap_ref[...]
+    unl = unl_ref[...] > 0.5
+
+    rate = jnp.minimum(dem, brst)
+    drain = rate - base
+    bursting = drain > 0.0
+    safe_drain = jnp.where(bursting, drain, 1.0)
+    t_burst = jnp.where(unl, dt, jnp.minimum(dt, bal / safe_drain))
+    spent = drain * t_burst
+    over = jnp.where(unl, jnp.maximum(0.0, spent - bal), 0.0)
+    work_burst = rate * t_burst + jnp.minimum(dem, base) * (dt - t_burst)
+    bal_burst = jnp.maximum(0.0, bal - spent)
+
+    work_ref[...] = jnp.where(bursting, work_burst, rate * dt)
+    nbal_ref[...] = jnp.where(bursting, bal_burst,
+                              jnp.minimum(cap, bal - drain * dt))
+    sur_ref[...] = jnp.where(bursting, over, jnp.zeros_like(bal))
+
+
+def bucket_serve_pallas(balance: jax.Array, demand: jax.Array,
+                        baseline: jax.Array, burst: jax.Array,
+                        capacity: jax.Array, unlimited: jax.Array, *,
+                        dt: float, interpret: bool = False):
+    """Serve a fleet of buckets for one ``dt``. Any input shape; all inputs
+    are broadcast to ``balance``'s shape, flattened, padded to the
+    (8 x 128) tile and streamed block-by-block."""
+    shape = balance.shape
+    dtype = balance.dtype
+    n = balance.size
+
+    def prep(x):
+        x = jnp.broadcast_to(jnp.asarray(x, dtype), shape).reshape(-1)
+        pad = (-n) % _BLOCK
+        if pad:
+            # pad with inert buckets (all-zero: idle, nothing accrues)
+            x = jnp.concatenate([x, jnp.zeros((pad,), dtype)])
+        return x.reshape(-1, LANES)
+
+    args = [prep(x) for x in
+            (balance, demand, baseline, burst, capacity, unlimited)]
+    rows = args[0].shape[0]
+    grid = (rows // SUBLANES,)
+    spec = pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_bucket_kernel, dt=dt),
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), dtype)] * 3,
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    return tuple(o.reshape(-1)[:n].reshape(shape) for o in out)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bucket_serve import bucket_serve_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -86,8 +87,23 @@ def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                            interpret=(impl == "interpret"))
 
 
+def bucket_serve(balance: jax.Array, demand: jax.Array, baseline: jax.Array,
+                 burst: jax.Array, capacity: jax.Array, unlimited: jax.Array,
+                 *, dt: float, impl: str = "auto"):
+    """One token-bucket serve step for a fleet of buckets (core.vecsim hot
+    path). Returns (work, new_balance, surplus_add)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.bucket_serve_ref(balance, demand, baseline, burst,
+                                    capacity, unlimited, dt=dt)
+    return bucket_serve_pallas(balance, demand, baseline, burst, capacity,
+                               unlimited, dt=dt,
+                               interpret=(impl == "interpret"))
+
+
 attention_jit = jax.jit(attention, static_argnames=(
     "causal", "impl", "block_q", "block_k"))
 decode_attention_jit = jax.jit(decode_attention, static_argnames=(
     "impl", "block_k"))
 ssd_jit = jax.jit(ssd, static_argnames=("chunk", "impl"))
+bucket_serve_jit = jax.jit(bucket_serve, static_argnames=("dt", "impl"))

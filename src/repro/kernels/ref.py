@@ -118,6 +118,42 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Token-bucket serve (CASH fleet simulator, paper SS2)
+# ---------------------------------------------------------------------------
+
+def bucket_serve_ref(balance: jax.Array, demand: jax.Array, baseline: jax.Array,
+                     burst: jax.Array, capacity: jax.Array,
+                     unlimited: jax.Array, *, dt: float):
+    """Vectorized ``TokenBucket.serve`` (core.token_bucket): one ``dt`` step
+    for arrays of buckets. All arguments broadcast elementwise; ``unlimited``
+    is a boolean (or 0/1) mask selecting T3-unlimited surplus accounting.
+
+    Returns ``(work, new_balance, surplus_add)`` — work completed
+    (units x sec), the post-step balance in [0, capacity], and the surplus
+    credits booked beyond the bucket this step (zero unless ``unlimited``).
+    The arithmetic mirrors the scalar reference branch-for-branch so a
+    float64 run is bit-identical to the Python simulator.
+    """
+    unl = unlimited.astype(bool) if hasattr(unlimited, "astype") else unlimited
+    rate = jnp.minimum(demand, burst)
+    drain = rate - baseline                    # net credit flow (neg = accrue)
+    bursting = drain > 0.0
+    safe_drain = jnp.where(bursting, drain, 1.0)
+    # bursting: spend credits until the bucket empties (unlimited never stops)
+    t_burst = jnp.where(unl, dt, jnp.minimum(dt, balance / safe_drain))
+    spent = drain * t_burst
+    over = jnp.where(unl, jnp.maximum(0.0, spent - balance), 0.0)
+    work_burst = rate * t_burst + jnp.minimum(demand, baseline) * (dt - t_burst)
+    bal_burst = jnp.maximum(0.0, balance - spent)
+    # accruing (demand <= baseline, incl. idle): earn the shortfall
+    work = jnp.where(bursting, work_burst, rate * dt)
+    new_balance = jnp.where(bursting, bal_burst,
+                            jnp.minimum(capacity, balance - drain * dt))
+    surplus_add = jnp.where(bursting, over, jnp.zeros_like(balance))
+    return work, new_balance, surplus_add
+
+
+# ---------------------------------------------------------------------------
 # Mamba-2 SSD
 # ---------------------------------------------------------------------------
 

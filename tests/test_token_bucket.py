@@ -89,6 +89,26 @@ class TestServeSemantics:
         nb = network_dual_bucket()
         assert nb.peak.burst > nb.peak.baseline
 
+    def test_dual_bucket_charges_sustained_for_delivered_work_only(self):
+        """Regression: when the peak bucket throttles, the sustained bucket
+        must be charged for the work actually delivered, not for the full
+        demand (which drained it for work never done)."""
+        from repro.core.token_bucket import DualTokenBucket, TokenBucket
+        peak = TokenBucket(baseline=1.0, burst=10.0, capacity=10.0,
+                           balance=0.0)      # empty: throttles to 1.0/s
+        sustained = TokenBucket(baseline=1.0, burst=10.0, capacity=1000.0,
+                                balance=500.0)
+        dual = DualTokenBucket(sustained=sustained, peak=peak)
+        work = dual.serve(10.0, 4.0)
+        # peak is empty -> delivers baseline 1.0/s for 4s
+        assert work == pytest.approx(4.0)
+        # sustained saw a 1.0/s delivered rate == its earn rate: no drain
+        assert sustained.balance == pytest.approx(500.0)
+
+    def test_dual_bucket_zero_dt(self):
+        nb = network_dual_bucket()
+        assert nb.serve(1e9, 0.0) == 0.0
+
 
 @given(
     baseline=st.floats(0.5, 10.0),

@@ -1,0 +1,297 @@
+"""Vectorized fleet simulator (core.vecsim) vs the Python `Simulation`
+oracle, plus bucket-serve kernel properties.
+
+Under float64 the `lax.scan` engine must reproduce the oracle's makespan,
+per-job completion times and surplus credits within 1e-6*dt on CASH /
+stock / joint scenarios (the engine is written to match tick-for-tick; the
+tolerance only absorbs float reassociation). The oracle runs with an
+identity-shuffle rng so its node order matches `shuffle="none"`.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.scheduler import (
+    CashScheduler,
+    JointCashScheduler,
+    StockScheduler,
+)
+from repro.core.simulator import Job, SimConfig, Simulation
+from repro.core.token_bucket import TokenBucket
+from repro.core import vecsim
+from repro.kernels import ops, ref
+
+TOL = 1e-6  # * dt (dt = 1.0 below)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+# ---------------------------------------------------------------------------
+# scenario generators (deterministic; rebuilt fresh for oracle and engine)
+# ---------------------------------------------------------------------------
+
+def _mixed_jobs(seed: int, n_jobs: int = 3, tasks_per: int = 5, *,
+                net: bool = True, disk: bool = True):
+    rng = np.random.RandomState(seed)
+    tid = [10_000 * (seed + 1)]
+
+    def nt(**kw):
+        tid[0] += 1
+        return Task(tid=tid[0], job=kw.pop("job"), **kw)
+
+    jobs = []
+    for j in range(n_jobs):
+        maps = []
+        for k in range(tasks_per):
+            if disk and k % 3 == 2:
+                maps.append(nt(job=f"j{j}", vertex="root_input",
+                               work_disk=float(rng.uniform(2000, 6000)),
+                               demand_disk=float(rng.uniform(500, 2500)),
+                               work_cpu=float(rng.uniform(10, 30)),
+                               demand_cpu=float(rng.uniform(0.2, 0.8)),
+                               annotation=Annotation.BURST_DISK))
+            else:
+                maps.append(nt(job=f"j{j}", vertex="map",
+                               work_cpu=float(rng.uniform(20, 60)),
+                               demand_cpu=float(rng.uniform(0.3, 0.9)),
+                               annotation=Annotation.BURST_CPU))
+        extra = []
+        if net:
+            extra.append(nt(job=f"j{j}", vertex="shuffle",
+                            work_net=float(rng.uniform(1e9, 3e9)),
+                            demand_net=float(rng.uniform(3e8, 3e9)),
+                            work_cpu=float(rng.uniform(3, 8)),
+                            demand_cpu=0.3,
+                            depends_on=[m.tid for m in maps],
+                            dep_threshold=0.4,
+                            annotation=Annotation.NETWORK))
+        extra.append(nt(job=f"j{j}", vertex="reduce",
+                        work_cpu=float(rng.uniform(5, 15)),
+                        demand_cpu=float(rng.uniform(0.2, 0.6)),
+                        depends_on=[m.tid for m in maps]))
+        jobs.append(Job(name=f"j{j}", tasks=maps + extra))
+    return jobs
+
+
+def _cluster(n_nodes: int, unlimited: bool = False, frac: float = 0.3):
+    return make_cluster(n_nodes, "t3.large", cpu_initial_fraction=frac,
+                        disk_initial_credits=200_000.0, unlimited=unlimited)
+
+
+_SCHED = {"cash": CashScheduler, "stock": StockScheduler,
+          "cash-joint": JointCashScheduler}
+
+
+def _run_oracle(jobs, scheduler, *, resource="cpu", telemetry="predicted",
+                n_nodes=4, unlimited=False, sequential=False):
+    nodes = _cluster(n_nodes, unlimited)
+    cfg = SimConfig(max_time=20_000.0, resource=resource, telemetry=telemetry)
+    sim = Simulation(nodes, _SCHED[scheduler](vecsim.IdentityRng()), cfg)
+    (sim.submit_sequential if sequential else sim.submit_parallel)(jobs)
+    return sim.run()
+
+
+def _run_vec(scenarios, scheduler, *, resource="cpu", telemetry="predicted",
+             sequential=False, impl="xla", n_ticks=2000):
+    cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler=scheduler,
+                              resource=resource, telemetry=telemetry,
+                              impl=impl)
+    return vecsim.run_scenarios(scenarios, cfg)
+
+
+def _assert_equivalent(out, i, oracle, jobs):
+    assert bool(out["all_done"][i]), "vectorized run did not finish"
+    assert out["makespan"][i] == pytest.approx(oracle.makespan, abs=TOL)
+    for ji, j in enumerate(jobs):
+        assert out["job_mask"][i][ji]
+        assert out["job_completion"][i][ji] == pytest.approx(
+            oracle.job_completion[j.name], abs=TOL)
+    assert out["surplus_credits"][i] == pytest.approx(
+        oracle.surplus_credits, abs=TOL)
+    assert out["total_cpu_work"][i] == pytest.approx(
+        oracle.total_cpu_work, rel=1e-9, abs=TOL)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: engine vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["cash", "stock"])
+def test_matches_oracle_mixed_workload(scheduler):
+    """CASH/stock on a mixed cpu+disk+network DAG workload."""
+    jobs = _mixed_jobs(3)
+    oracle = _run_oracle(_mixed_jobs(3), scheduler)
+    sc = vecsim.build_scenario(_cluster(4), jobs)
+    out = _run_vec([sc], scheduler)
+    _assert_equivalent(out, 0, oracle, jobs)
+
+
+@pytest.mark.parametrize("telemetry", ["stale", "oracle"])
+def test_matches_oracle_telemetry_modes(telemetry):
+    """SS5.1 ablation modes (predicted is covered by every other test)."""
+    jobs = _mixed_jobs(5, net=False)
+    oracle = _run_oracle(_mixed_jobs(5, net=False), "cash",
+                         telemetry=telemetry)
+    sc = vecsim.build_scenario(_cluster(4), jobs)
+    out = _run_vec([sc], "cash", telemetry=telemetry)
+    _assert_equivalent(out, 0, oracle, jobs)
+
+
+def test_matches_oracle_disk_resource():
+    """Scheduler driven by the EBS credit pool (paper SS6.5)."""
+    jobs = _mixed_jobs(4)
+    oracle = _run_oracle(_mixed_jobs(4), "cash", resource="disk")
+    sc = vecsim.build_scenario(_cluster(4), jobs)
+    out = _run_vec([sc], "cash", resource="disk")
+    _assert_equivalent(out, 0, oracle, jobs)
+
+
+def test_matches_oracle_joint():
+    """JointCashScheduler with both credit pools (paper SS8 extension)."""
+    jobs = _mixed_jobs(6)
+    oracle = _run_oracle(_mixed_jobs(6), "cash-joint", resource="joint")
+    sc = vecsim.build_scenario(_cluster(4), jobs)
+    out = _run_vec([sc], "cash-joint", resource="joint")
+    _assert_equivalent(out, 0, oracle, jobs)
+
+
+def test_matches_oracle_unlimited_surplus():
+    """T3-unlimited: surplus credits must match to 1e-6*dt. Buckets start
+    empty so bursting overdrafts immediately."""
+    jobs = _mixed_jobs(7, net=False, disk=False)
+    nodes = _cluster(4, unlimited=True, frac=0.0)
+    sim = Simulation(nodes, CashScheduler(vecsim.IdentityRng()),
+                     SimConfig(max_time=20_000.0))
+    sim.submit_parallel(_mixed_jobs(7, net=False, disk=False))
+    oracle = sim.run()
+    assert oracle.surplus_credits > 0.0  # scenario must actually overdraft
+    sc = vecsim.build_scenario(_cluster(4, unlimited=True, frac=0.0), jobs)
+    out = _run_vec([sc], "cash")
+    _assert_equivalent(out, 0, oracle, jobs)
+
+
+def test_matches_oracle_sequential_submission():
+    """Wave-gated job admission (submit_sequential)."""
+    jobs = _mixed_jobs(8, net=False)
+    oracle = _run_oracle(_mixed_jobs(8, net=False), "cash", sequential=True)
+    sc = vecsim.build_scenario(_cluster(3), jobs, submit="sequential")
+    out = _run_vec([sc], "cash", sequential=True)
+    _assert_equivalent(out, 0, oracle, jobs)
+
+
+def test_heterogeneous_batch_matches_per_scenario_oracles():
+    """Stacking pads tasks/nodes/groups — padded scenarios must still agree
+    with their own oracle, and padding must not leak across the batch."""
+    specs = [(11, 2, 3, 2), (12, 3, 6, 4), (13, 4, 4, 3)]  # seed,jobs,tasks,N
+    scenarios, oracles, alljobs = [], [], []
+    for seed, n_jobs, tasks_per, n_nodes in specs:
+        jobs = _mixed_jobs(seed, n_jobs=n_jobs, tasks_per=tasks_per)
+        oracles.append(_run_oracle(
+            _mixed_jobs(seed, n_jobs=n_jobs, tasks_per=tasks_per), "cash",
+            n_nodes=n_nodes))
+        scenarios.append(vecsim.build_scenario(_cluster(n_nodes), jobs))
+        alljobs.append(jobs)
+    out = _run_vec(scenarios, "cash")
+    for i, (oracle, jobs) in enumerate(zip(oracles, alljobs)):
+        _assert_equivalent(out, i, oracle, jobs)
+        # padded job slots must be masked out
+        assert not out["job_mask"][i][len(jobs):].any()
+
+
+# ---------------------------------------------------------------------------
+# bucket-serve kernel: scalar-oracle equivalence + invariants
+# ---------------------------------------------------------------------------
+
+@given(
+    baseline=st.floats(0.0, 10.0),
+    headroom=st.floats(0.0, 10.0),
+    balance_frac=st.floats(0.0, 1.0),
+    demand=st.floats(0.0, 30.0),
+    dt=st.floats(0.1, 100.0),
+    unlimited=st.booleans(),
+)
+@settings(max_examples=100, deadline=None)
+def test_bucket_serve_ref_matches_scalar_bucket(baseline, headroom,
+                                                balance_frac, demand, dt,
+                                                unlimited):
+    """kernels.ref.bucket_serve_ref == TokenBucket.serve, branch for branch."""
+    cap = 10_000.0
+    b = TokenBucket(baseline=baseline, burst=baseline + headroom,
+                    capacity=cap, balance=cap * balance_frac,
+                    unlimited=unlimited)
+    before = b.balance
+    work_py = b.serve(demand, dt)
+    w, nb, sur = ref.bucket_serve_ref(
+        np.float64(before), np.float64(demand), np.float64(baseline),
+        np.float64(baseline + headroom), np.float64(cap),
+        np.float64(1.0 if unlimited else 0.0), dt=dt)
+    assert float(w) == pytest.approx(work_py, rel=1e-12, abs=1e-9)
+    assert float(nb) == pytest.approx(b.balance, rel=1e-12, abs=1e-9)
+    assert float(sur) == pytest.approx(b.surplus_used, rel=1e-12, abs=1e-9)
+
+
+@given(seed=st.integers(0, 50), dt=st.floats(0.25, 4.0))
+@settings(max_examples=25, deadline=None)
+def test_bucket_serve_invariants(seed, dt):
+    """Fleet-wide invariants: balance in [0, cap], work <= min(demand,
+    burst)*dt, surplus only where unlimited."""
+    rng = np.random.RandomState(seed)
+    n = 64
+    baseline = rng.uniform(0.0, 5.0, n)
+    burst = baseline + rng.uniform(0.0, 5.0, n)
+    cap = rng.uniform(10.0, 1000.0, n)
+    bal = cap * rng.uniform(0.0, 1.0, n)
+    dem = rng.uniform(0.0, 12.0, n)
+    unl = (rng.uniform(size=n) < 0.5).astype(np.float64)
+    w, nb, sur = ref.bucket_serve_ref(bal, dem, baseline, burst, cap, unl,
+                                      dt=float(dt))
+    w, nb, sur = np.asarray(w), np.asarray(nb), np.asarray(sur)
+    assert (nb >= -1e-9).all() and (nb <= cap + 1e-9).all()
+    assert (w <= np.minimum(dem, burst) * dt + 1e-9).all()
+    assert (w >= -1e-12).all()
+    assert (sur >= -1e-12).all()
+    assert (sur[unl < 0.5] == 0.0).all()
+    # credit conservation where the bucket is not saturated or overdrafted
+    interior = (nb > 1e-9) & (nb < cap - 1e-9) & (sur == 0.0)
+    np.testing.assert_allclose(nb[interior],
+                               (bal + baseline * dt - w)[interior],
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_bucket_serve_pallas_interpret_matches_xla():
+    """The Pallas kernel (interpret mode on CPU) must agree with the XLA
+    reference, including the ragged tail past a (8x128) tile."""
+    rng = np.random.RandomState(0)
+    n = 1200  # not a multiple of 1024: exercises padding
+    baseline = rng.uniform(0.0, 5.0, n)
+    burst = baseline + rng.uniform(0.0, 5.0, n)
+    cap = rng.uniform(10.0, 1000.0, n)
+    bal = cap * rng.uniform(0.0, 1.0, n)
+    dem = rng.uniform(0.0, 12.0, n)
+    unl = (rng.uniform(size=n) < 0.5).astype(np.float64)
+    out_ref = ops.bucket_serve(bal, dem, baseline, burst, cap, unl,
+                               dt=1.0, impl="xla")
+    out_pal = ops.bucket_serve(bal, dem, baseline, burst, cap, unl,
+                               dt=1.0, impl="interpret")
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_vecsim_interpret_impl_smoke():
+    """The whole engine runs with the Pallas kernel in interpret mode."""
+    jobs = _mixed_jobs(2, n_jobs=1, tasks_per=3, net=False, disk=False)
+    sc = vecsim.build_scenario(_cluster(2), jobs)
+    out_x = _run_vec([sc], "cash", impl="xla", n_ticks=150)
+    out_i = _run_vec([sc], "cash", impl="interpret", n_ticks=150)
+    assert bool(out_i["all_done"][0])
+    assert out_i["makespan"][0] == pytest.approx(float(out_x["makespan"][0]))
