@@ -91,12 +91,14 @@ _VEC_MODES = {
 
 
 def run_batched(fast: bool = False) -> dict:
-    """Vectorized mixed-workload sweep: each scheduler/resource mode is one
-    compile over its seed batch (the modes themselves are compile-time
-    static, so four small batches instead of 12 Python runs)."""
+    """Vectorized mixed-workload sweep as a `repro.sweep` grid: the "mode"
+    axis maps through `configure` to (scheduler, resource) — four compile
+    groups — while the shared per-seed scenarios are built once and reused
+    by every mode (the spec memoizes builders on their parameters)."""
     import statistics
     import time
 
+    from repro import sweep
     from repro.core import vecsim
     from repro.core.cluster import make_cluster as _mk
 
@@ -105,7 +107,7 @@ def run_batched(fast: bool = False) -> dict:
     n_ticks = 6_000 if fast else 12_000
     t0 = time.time()
 
-    def scenario(seed: int):
+    def builder(seed):
         reset_tids()
         nodes = _mk(n_nodes, "t3.2xlarge", ebs_size_gb=170.0,
                     cpu_initial_fraction=0.3, disk_initial_credits=0.0)
@@ -114,14 +116,19 @@ def run_batched(fast: bool = False) -> dict:
                                          seed=seed + 7)
         return vecsim.build_scenario(nodes, jobs + cpu_jobs[:2])
 
-    scenarios = [scenario(s) for s in seeds]
-    batch = vecsim.stack_scenarios(scenarios)
+    spec = sweep.SweepSpec(
+        builder,
+        axes={"mode": list(_VEC_MODES), "seed": seeds},
+        base=vecsim.VecSimConfig(n_ticks=n_ticks),
+        configure=lambda c: dict(
+            zip(("scheduler", "resource"), _VEC_MODES[c["mode"]])),
+    )
+    result = sweep.run_sweep(spec)
+    assert bool(result.scalars()["all_done"].all()), "sweep did not finish"
     out = {}
-    for mode, (sched, resource) in _VEC_MODES.items():
-        res = vecsim.run_batch(batch, vecsim.VecSimConfig(
-            n_ticks=n_ticks, scheduler=sched, resource=resource))
-        assert bool(res["all_done"].all()), (mode, "did not finish")
-        out[mode] = statistics.mean(float(m) for m in res["makespan"])
+    for mode in _VEC_MODES:
+        out[mode] = statistics.mean(
+            float(m) for m in result.metric("makespan", mode=mode))
         emit(f"joint/batched/{mode}/makespan_s", 0.0, f"{out[mode]:.0f}")
     for mode in ("cash-cpu", "cash-disk", "cash-joint"):
         emit(f"joint/batched/{mode}/improvement_vs_stock", 0.0,

@@ -35,8 +35,8 @@ def run() -> dict:
 
 
 def run_batched(fast: bool = False) -> dict:
-    """Billing savings from the vectorized fig9 sweep (shared batch — the
-    makespans are computed once and reused here)."""
+    """Billing savings from the vectorized fig9 sweep (the shared
+    `repro.sweep` grid — its makespans are computed once and reused here)."""
     from benchmarks import fig9_query_completion
 
     b = fig9_query_completion.run_batched(fast)

@@ -59,13 +59,17 @@ _CPU_BATCH_CACHE: dict = {}
 
 
 def run_cpu_sweep_batched(fast: bool = False) -> dict:
-    """Vectorized sweep over the Fig-7 labels (core.vecsim): the four
-    stock-scheduled fleets (emr / naive / reordered / unlimited) stack into
-    ONE jitted batch; cash compiles separately. Deterministic node order
-    (shuffle="none"), so numbers track — not bit-match — the Python path.
-    Cached: fig8's batched path reuses the same sweep."""
+    """Vectorized sweep over the Fig-7 labels, expressed as a `repro.sweep`
+    grid: one "label" scenario axis whose `configure` hook routes the four
+    stock-scheduled fleets (emr / naive / reordered / unlimited) into ONE
+    compile group and cash into another. Runs with per-tick timeline
+    emission (`sample_period=10`, the Python simulator's default) so fig8's
+    batched path gets its credit/utilization series from the same run.
+    Deterministic node order (shuffle="none"), so numbers track — not
+    bit-match — the Python path. Cached: fig8 reuses the same sweep."""
     import time
 
+    from repro import sweep
     from repro.core import vecsim
     from repro.core.experiments import build_cpu_vec_scenario
 
@@ -74,20 +78,29 @@ def run_cpu_sweep_batched(fast: bool = False) -> dict:
     n_nodes, scale = (6, 0.4) if fast else (10, 1.0)
     n_ticks = 9_000 if fast else 18_000
     t0 = time.time()
-    built = {label: build_cpu_vec_scenario(label, n_nodes=n_nodes, scale=scale)
-             for label in LABELS}
-    stock_labels = [l for l in LABELS if built[l][1] == "stock"]
-    res = {}
-    for sched, labels in (("stock", stock_labels), ("cash", ["cash"])):
-        batch = vecsim.stack_scenarios([built[l][0] for l in labels])
-        out = vecsim.run_batch(batch, vecsim.VecSimConfig(
-            n_ticks=n_ticks, scheduler=sched))
-        for i, label in enumerate(labels):
-            res[label] = {k: out[k][i] for k in out}
-    sweep = {"res": res, "built": built, "n_nodes": n_nodes,
-             "wall": time.time() - t0}
-    _CPU_BATCH_CACHE[fast] = sweep
-    return sweep
+
+    jobs_of: dict = {}
+
+    def builder(label):
+        scenario, _, jobs = build_cpu_vec_scenario(label, n_nodes=n_nodes,
+                                                   scale=scale)
+        jobs_of[label] = jobs
+        return scenario
+
+    spec = sweep.SweepSpec(
+        builder,
+        axes={"label": LABELS},
+        base=vecsim.VecSimConfig(n_ticks=n_ticks, sample_period=10.0),
+        configure=lambda c: {
+            "scheduler": "cash" if c["label"] == "cash" else "stock"},
+    )
+    result = sweep.run_sweep(spec)
+    res = {p.coord_dict["label"]: result.point_outputs(p.index)
+           for p in result.points}
+    out = {"res": res, "jobs": jobs_of, "n_nodes": n_nodes,
+           "wall": time.time() - t0, "result": result}
+    _CPU_BATCH_CACHE[fast] = out
+    return out
 
 
 def run_batched(fast: bool = False) -> dict:
@@ -96,13 +109,13 @@ def run_batched(fast: bool = False) -> dict:
     from repro.core import vecsim
 
     sweep = run_cpu_sweep_batched(fast)
-    res, built, wall = sweep["res"], sweep["built"], sweep["wall"]
+    res, jobs_of, wall = sweep["res"], sweep["jobs"], sweep["wall"]
 
     cums = {}
     for label in LABELS:
         r = res[label]
         assert bool(r["all_done"]), (label, "did not finish in n_ticks")
-        order = vecsim.scenario_task_order(built[label][2], "sequential")
+        order = vecsim.scenario_task_order(jobs_of[label], "sequential")
         ph = phase_elapsed_from_vec(order, r["start"], r["finish"])
         cums[label] = sum(ph.get(p, 0.0) for p in CPU_PHASES)
         emit(f"fig7/batched/{label}/makespan_s", 0.0,

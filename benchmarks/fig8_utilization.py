@@ -40,27 +40,45 @@ def run() -> dict:
 
 
 def run_batched(fast: bool = False) -> dict:
-    """Vectorized utilization metrics: average CPU utilization from the
-    engine's aggregate served-work counter (cpu_work_served / (makespan x
-    total vCPUs)), reusing fig7's shared CPU sweep (one compile + run for
-    both figures). The credit-balance stddev *timeline* of Fig 8(b) needs
-    per-tick sampling the scan does not emit yet — ROADMAP open item."""
+    """Vectorized Fig-8 from the engine's *streamed timeline* (scan ys
+    sampled at `sample_period`, same cadence as `Simulation.run`): average
+    CPU utilization from the sampled utilization series and the late-run
+    credit-balance stddev of Fig 8(b) from the sampled cluster credit
+    series — the same assertions `run()` makes on the Python timeline,
+    now on the batched path. Reuses fig7's shared CPU sweep (one compile +
+    run for both figures)."""
     from benchmarks.fig7_cpu_burst import run_cpu_sweep_batched
-    from repro.core.cluster import INSTANCE_TYPES
 
     sweep = run_cpu_sweep_batched(fast)
-    utils = {}
+    stds, utils = {}, {}
     for label in LABELS:
         r = sweep["res"][label]
         assert bool(r["all_done"]), (label, "did not finish")
-        itype = "m5.2xlarge" if label == "emr" else "t3.2xlarge"
-        total_vcpus = sweep["n_nodes"] * INSTANCE_TYPES[itype].vcpus
-        utils[label] = (float(r["cpu_work_served"])
-                        / (float(r["makespan"]) * total_vcpus))
+        # the Python loop stops sampling once the workload drains; mask the
+        # vec timeline the same way so the series align sample-for-sample
+        live = r["timeline_t"] < float(r["makespan"])
+        std_series = [float(v) for v in r["timeline"]["cpu_credit_std"][live]]
+        util_series = [float(v) for v in r["timeline"]["cpu_util"][live]]
+        half = len(std_series) // 2
+        stds[label] = statistics.mean(std_series[half:])
+        utils[label] = statistics.mean(util_series)
         emit(f"fig8/batched/{label}/avg_cpu_util", 0.0, f"{utils[label]:.3f}")
+        emit(f"fig8/batched/{label}/credit_std_late", 0.0,
+             f"{stds[label]:.0f}")
         emit(f"fig8/batched/{label}/surplus_credits", 0.0,
              f"{float(r['surplus_credits']):.0f}")
-    return utils
+    checks = {
+        # 8(b): CASH keeps credit consumption even; unlimited/reordered do not
+        "cash_lowest_credit_std": stds["cash"] <= min(stds["reordered"],
+                                                      stds["unlimited"]),
+        "unlimited_high_std": stds["unlimited"] > stds["cash"] * 1.5,
+        # 8(a): CASH utilization >= reordered (better load balancing)
+        "cash_util_not_worse": utils["cash"] >= utils["reordered"] - 0.01,
+    }
+    for k, ok in checks.items():
+        emit(f"fig8/batched/check/{k}", 0.0, "PASS" if ok else "FAIL")
+    assert all(checks.values()), (checks, stds, utils)
+    return {"stds": stds, "utils": utils}
 
 
 if __name__ == "__main__":

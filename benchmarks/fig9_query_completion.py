@@ -40,13 +40,15 @@ _BATCHED_CACHE: dict = {}
 
 
 def run_batched(fast: bool = False) -> dict:
-    """Vectorized TPC-DS sweep: (setups x seeds) stack into one batch per
-    scheduler — 9 (or 3 fast) scenarios per compile instead of 9 Python
-    runs per scheduler. fig11's batched path reuses these numbers."""
+    """Vectorized TPC-DS sweep as a `repro.sweep` grid: scheduler (static
+    axis -> two compile groups) x setups x seeds, each (setup, seed)
+    scenario built once and shared by both groups. fig11's batched path
+    reuses these numbers."""
     import time
 
     import numpy as np
 
+    from repro import sweep
     from repro.core import vecsim
     from repro.core.experiments import build_disk_vec_scenario
 
@@ -56,23 +58,30 @@ def run_batched(fast: bool = False) -> dict:
     seeds = (1,) if fast else (1, 2, 3)
     n_ticks = 4_000 if fast else 6_000
     t0 = time.time()
-    built = [build_disk_vec_scenario(s, seed) for s in setups
-             for seed in seeds]
-    batch = vecsim.stack_scenarios([sc for sc, _ in built])
+
+    def builder(setup, seed):
+        return build_disk_vec_scenario(setup, seed)[0]
+
+    spec = sweep.SweepSpec(
+        builder,
+        axes={"scheduler": ("stock", "cash"), "setup": setups, "seed": seeds},
+        base=vecsim.VecSimConfig(n_ticks=n_ticks, resource="disk"),
+    )
+    result = sweep.run_sweep(spec)
+    assert bool(result.scalars()["all_done"].all()), "sweep did not finish"
     pair: dict = {}
     for sched in ("stock", "cash"):
-        out = vecsim.run_batch(batch, vecsim.VecSimConfig(
-            n_ticks=n_ticks, scheduler=sched, resource="disk"))
-        assert bool(out["all_done"].all()), (sched, "did not finish")
-        jc = np.where(out["job_mask"], out["job_completion"], np.nan)
-        qct = np.nanmean(jc, axis=1)
         per = {}
-        for si, setup in enumerate(setups):
-            sl = slice(si * len(seeds), (si + 1) * len(seeds))
-            per[setup] = {
-                "makespan": float(out["makespan"][sl].mean()),
-                "avg_qct": float(qct[sl].mean()),
-            }
+        for setup in setups:
+            pts = result.select(scheduler=sched, setup=setup)
+            mks, qcts = [], []
+            for p in pts:
+                out = result.point_outputs(p.index)
+                mks.append(float(out["makespan"]))
+                jc = np.where(out["job_mask"], out["job_completion"], np.nan)
+                qcts.append(float(np.nanmean(jc)))
+            per[setup] = {"makespan": float(np.mean(mks)),
+                          "avg_qct": float(np.mean(qcts))}
         pair[sched] = per
     impr = {}
     for setup in setups:

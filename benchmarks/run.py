@@ -3,18 +3,55 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 
 ``--fast`` is the CI smoke mode: every figure benchmark runs its *batched*
-(core.vecsim) path at reduced scale, plus a reduced vecsim throughput
-measurement; the Python-loop figure drivers are skipped. Both modes write
-``BENCH_vecsim.json`` (Python-loop vs vectorized throughput) so the perf
-trajectory is tracked PR over PR.
+(core.vecsim via repro.sweep) path at reduced scale, plus a reduced vecsim
+throughput measurement and the `sweep/smoke` sharded-runner check; the
+Python-loop figure drivers are skipped. Unless the caller already forced a
+device count, the driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` *before* JAX
+initializes so the sweep runner's >= 2-way scenario-axis sharding is
+exercised even on single-accelerator CI hosts.
+
+Both modes write ``BENCH_vecsim.json`` (Python-loop vs vectorized
+throughput). The file keeps one section per mode — ``{"fast": {...},
+"full": {...}}`` — so a fast CI run never overwrites the full-mode numbers
+and the perf trajectory stays comparable PR over PR.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import traceback
+
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=2"
+
+
+def _force_host_devices() -> None:
+    """Expose >= 2 host-platform devices for sweep sharding. Must run
+    before JAX initializes its backends; respects an explicit user flag."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_FORCE_DEVICES}".strip()
+
+
+def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
+    """Merge this run's stats into the per-mode BENCH layout, migrating the
+    pre-PR-4 flat schema (a single run dict with a "mode" field) in place."""
+    doc: dict = {}
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            prev = {}
+        if "sweep" in prev and "mode" in prev:      # old flat schema
+            doc[prev["mode"]] = {k: v for k, v in prev.items()
+                                 if k != "mode"}
+        else:
+            doc = {k: v for k, v in prev.items() if k in ("fast", "full")}
+    doc[mode] = stats
+    return doc
 
 
 def main(argv=None) -> None:
@@ -24,6 +61,7 @@ def main(argv=None) -> None:
     parser.add_argument("--out", default="BENCH_vecsim.json",
                         help="where to write the vecsim throughput JSON")
     args = parser.parse_args(argv)
+    _force_host_devices()
 
     from benchmarks import (
         ablation_joint,
@@ -35,6 +73,7 @@ def main(argv=None) -> None:
         fig11_cost,
         kernels_bench,
         roofline,
+        sweep_smoke,
         tables,
         vecsim_bench,
     )
@@ -44,6 +83,7 @@ def main(argv=None) -> None:
         ("fig9/batched", fig9_query_completion.run_batched),
         ("fig11/batched", fig11_cost.run_batched),
         ("joint/batched", ablation_joint.run_batched),
+        ("sweep/smoke", sweep_smoke.run),
     ]
     if args.fast:
         mods = [(n, lambda fn=fn: fn(fast=True)) for n, fn in batched]
@@ -70,12 +110,14 @@ def main(argv=None) -> None:
             failures.append((name, e))
             traceback.print_exc()
 
-    # vecsim throughput JSON: the tracked perf metric from this PR onward
+    # vecsim throughput JSON: the tracked perf metric, one section per mode
     try:
         stats = vecsim_bench.run(fast=args.fast)
-        stats["mode"] = "fast" if args.fast else "full"
-        pathlib.Path(args.out).write_text(json.dumps(stats, indent=2) + "\n")
-        print(f"wrote {args.out}", file=sys.stderr)
+        mode = "fast" if args.fast else "full"
+        out_path = pathlib.Path(args.out)
+        doc = _merged_bench(out_path, mode, stats)
+        out_path.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"wrote {args.out} [{mode}]", file=sys.stderr)
     except Exception as e:  # noqa: BLE001
         failures.append(("vecsim_bench", e))
         traceback.print_exc()

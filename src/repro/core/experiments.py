@@ -33,43 +33,37 @@ class CpuExperimentResult:
         return sum(self.cumulative(p) for p in CPU_PHASES)
 
 
-def run_cpu_experiment(label: str, n_nodes: int = 10, seed: int = 0,
-                       scale: float = 1.0) -> CpuExperimentResult:
-    """labels: emr | naive | reordered | unlimited | cash (paper SS6.2.1-6.2.4)."""
+def _cpu_setup(label: str, n_nodes: int, seed: int, scale: float):
+    """Shared label -> (nodes, jobs, scheduler_name) table for the SS6.2 CPU
+    experiments — the single source both the Python driver and the vecsim
+    builder read, so the two paths cannot desynchronize."""
     reset_tids()
     slots = 8
     if label == "emr":
         nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=200.0)
-        sched = StockScheduler()
-        order = CPU_EXPERIMENT_ORDERS["naive"]
-        jobs = make_cpu_suite(order, n_nodes, slots, seed=seed, scale=scale,
-                              emr_optimized=True)
-    elif label == "naive":
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
+                              seed=seed, scale=scale, emr_optimized=True)
+    elif label in ("naive", "unlimited"):
         nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
-                             cpu_initial_fraction=0.0)
-        sched = StockScheduler()
+                             cpu_initial_fraction=0.0,
+                             unlimited=(label == "unlimited"))
         jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
                               seed=seed, scale=scale)
-    elif label == "reordered":
+    elif label in ("reordered", "cash"):
         nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
                              cpu_initial_fraction=0.0)
-        sched = StockScheduler()
-        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes, slots,
-                              seed=seed, scale=scale)
-    elif label == "unlimited":
-        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
-                             cpu_initial_fraction=0.0, unlimited=True)
-        sched = StockScheduler()
-        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
-                              seed=seed, scale=scale)
-    elif label == "cash":
-        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
-                             cpu_initial_fraction=0.0)
-        sched = CashScheduler()
-        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes, slots,
-                              seed=seed, scale=scale)
+        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes,
+                              slots, seed=seed, scale=scale)
     else:
         raise ValueError(label)
+    return nodes, jobs, ("cash" if label == "cash" else "stock")
+
+
+def run_cpu_experiment(label: str, n_nodes: int = 10, seed: int = 0,
+                       scale: float = 1.0) -> CpuExperimentResult:
+    """labels: emr | naive | reordered | unlimited | cash (paper SS6.2.1-6.2.4)."""
+    nodes, jobs, sched_name = _cpu_setup(label, n_nodes, seed, scale)
+    sched = CashScheduler() if sched_name == "cash" else StockScheduler()
     sim = Simulation(nodes, sched, SimConfig(resource="cpu"))
     sim.submit_sequential(jobs)
     res = sim.run()
@@ -117,14 +111,18 @@ def run_disk_experiment(setup: str, scheduler: str, seed: int = 0,
 
 # ---------------------------------------------------------------------------
 # Vectorized (core.vecsim) scenario builders — same setups as the Python
-# drivers above, frozen to arrays for batched sweeps. The batched paths run
+# drivers above, frozen to arrays for batched sweeps (see `repro.sweep` for
+# declaring grids over them and running sharded). The batched paths run
 # with shuffle="none" (deterministic node order) whereas the Python drivers
 # shuffle with Random(0); results are the same experiment, not bit-equal.
+# ``rng_seed`` labels the scenario's shuffle stream for shuffle="random"
+# sweeps (folded into the engine key; keeps seed sweeps one compile).
 # ---------------------------------------------------------------------------
 
 def build_cpu_vec_scenario(label: str, n_nodes: int = 10, seed: int = 0,
-                           scale: float = 1.0):
-    """vecsim scenario for ``run_cpu_experiment``'s setup.
+                           scale: float = 1.0, rng_seed: int = 0):
+    """vecsim scenario for ``run_cpu_experiment``'s setup (same
+    `_cpu_setup` table).
 
     Returns (scenario, scheduler_name, jobs) — labels using the stock
     scheduler (emr / naive / reordered / unlimited) stack into one batch;
@@ -132,30 +130,12 @@ def build_cpu_vec_scenario(label: str, n_nodes: int = 10, seed: int = 0,
     """
     from repro.core import vecsim
 
-    reset_tids()
-    slots = 8
-    if label == "emr":
-        nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=200.0)
-        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
-                              seed=seed, scale=scale, emr_optimized=True)
-    elif label in ("naive", "unlimited"):
-        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
-                             cpu_initial_fraction=0.0,
-                             unlimited=(label == "unlimited"))
-        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["naive"], n_nodes, slots,
-                              seed=seed, scale=scale)
-    elif label in ("reordered", "cash"):
-        nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=200.0,
-                             cpu_initial_fraction=0.0)
-        jobs = make_cpu_suite(CPU_EXPERIMENT_ORDERS["reordered"], n_nodes,
-                              slots, seed=seed, scale=scale)
-    else:
-        raise ValueError(label)
-    sched = "cash" if label == "cash" else "stock"
-    return vecsim.build_scenario(nodes, jobs, submit="sequential"), sched, jobs
+    nodes, jobs, sched = _cpu_setup(label, n_nodes, seed, scale)
+    return (vecsim.build_scenario(nodes, jobs, submit="sequential",
+                                  rng_seed=rng_seed), sched, jobs)
 
 
-def build_disk_vec_scenario(setup: str, seed: int = 0):
+def build_disk_vec_scenario(setup: str, seed: int = 0, rng_seed: int = 0):
     """vecsim scenario for ``run_disk_experiment``'s setup (scheduler and
     telemetry stay compile-time static — pass them via VecSimConfig)."""
     from repro.core import vecsim
@@ -165,7 +145,7 @@ def build_disk_vec_scenario(setup: str, seed: int = 0):
     nodes = make_cluster(n_nodes, "m5.2xlarge", ebs_size_gb=ebs,
                          disk_initial_credits=0.0)
     jobs = make_tpcds_suite(db, n_nodes, 8, seed=seed)
-    return vecsim.build_scenario(nodes, jobs), jobs
+    return vecsim.build_scenario(nodes, jobs, rng_seed=rng_seed), jobs
 
 
 def run_disk_pair(setup: str, seeds: Sequence[int] = (1, 2, 3)) -> Dict[str, Dict[str, float]]:

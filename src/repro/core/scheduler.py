@@ -136,12 +136,20 @@ class JointCashScheduler(SchedulerBase):
     and wins. The joint policy therefore keeps the credit-descending node
     order but fills each node by ALTERNATING burst classes (anti-affinity of
     complementary demands), steering each class's share toward the node's
-    richer pool."""
+    richer pool.
+
+    Ablation knobs (mirrored by ``vecsim.VecSimConfig``):
+    ``anti_affinity=False`` packs the preferred class exhaustively before
+    the other per node; ``cpu_weight`` skews the min-rule joint credit —
+    ``min(2w·cpu, 2(1-w)·disk)`` — with ``w=0.5`` the plain min."""
 
     name = "cash-joint"
 
-    def __init__(self, rng: Optional[random.Random] = None):
+    def __init__(self, rng: Optional[random.Random] = None, *,
+                 anti_affinity: bool = True, cpu_weight: float = 0.5):
         self.rng = rng or random.Random(0)
+        self.anti_affinity = anti_affinity
+        self.cpu_weight = cpu_weight
         self._inner = CashScheduler(self.rng)
 
     def schedule(self, queue: List[Task], nodes: Sequence[Node],
@@ -159,19 +167,22 @@ class JointCashScheduler(SchedulerBase):
         rest = [t for t in pending
                 if not t.burst_intensive and not t.network_annotated]
 
+        w = self.cpu_weight
+        wc, wd = (1.0, 1.0) if w == 0.5 else (2.0 * w, 2.0 * (1.0 - w))
+
         def norm(pool, n, cap):
             return pool.get(n.nid, 0.0) / max(cap, 1e-9)
 
-        joint = {n.nid: min(norm(credits_cpu, n, n.cpu.capacity),
-                            norm(credits_disk, n, n.disk.capacity))
+        joint = {n.nid: min(wc * norm(credits_cpu, n, n.cpu.capacity),
+                            wd * norm(credits_disk, n, n.disk.capacity))
                  for n in nodes}
 
         # Phase 1: descending joint credits; interleave the two burst
         # classes per node, preferring the class whose pool is richer there
         node_desc = sorted(nodes, key=lambda n: (-joint[n.nid], n.nid))
         for node in node_desc:
-            prefer_cpu = (norm(credits_cpu, node, node.cpu.capacity)
-                          >= norm(credits_disk, node, node.disk.capacity))
+            prefer_cpu = (wc * norm(credits_cpu, node, node.cpu.capacity)
+                          >= wd * norm(credits_disk, node, node.disk.capacity))
             take_cpu = prefer_cpu
             while node.free_slots > 0 and (cpu_burst or disk_burst):
                 src = cpu_burst if (take_cpu and cpu_burst) or not disk_burst \
@@ -179,7 +190,8 @@ class JointCashScheduler(SchedulerBase):
                 task = src.pop(0)
                 node.assign(task, now)
                 assignments.append((task, node))
-                take_cpu = not take_cpu
+                if self.anti_affinity:
+                    take_cpu = not take_cpu
 
         # Phase 2: network tasks ascending, <=1 per node per round
         node_asc = sorted(nodes, key=lambda n: (joint[n.nid], n.nid))

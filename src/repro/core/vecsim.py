@@ -19,7 +19,12 @@ XLA kernel) with pro-rata work distribution -> CloudWatch observe. The
 semantics mirror `Simulation.run` tick-for-tick; under float64
 (`jax_enable_x64`) the engine reproduces the Python oracle's makespan,
 per-job completion times and surplus credits exactly (see
-tests/test_vecsim.py). The single deliberate deviation: the Python
+tests/test_vecsim.py). One caveat: the engine computes time as ``t * dt``
+while the Python loop accumulates ``now += dt``, so exact parity holds for
+``dt`` values whose products are exact in binary (1.0, 0.5, 2.0, ... — all
+in-repo configs); a drifting dt like 0.1 can land telemetry publish
+boundaries one tick apart. (`sample_tick_indices` deliberately reproduces
+the accumulation drift so *timeline sampling* stays aligned regardless.) The single deliberate deviation: the Python
 schedulers shuffle node order with a Mersenne-Twister rng in stock /
 phase-3 placement; the vectorized engine offers `shuffle="none"`
 (deterministic nid order — pass the Python scheduler an identity-shuffle
@@ -28,9 +33,13 @@ permutation per tick).
 
 Scenario sweeps batch over (credit seeds x fleet mixes x scheduler modes x
 telemetry modes): build one `Scenario` per configuration with
-`build_scenario`, group them by (scheduler, telemetry, shuffle) — those are
+`build_scenario`, group them by static `VecSimConfig` — every field is
 compile-time static — `stack_scenarios`, and `run_batch` jit-compiles one
-scan for the whole group.
+scan for the whole group. `repro.sweep` orchestrates all of that for grids
+(spec -> compile groups -> sharded/chunked/resumable execution -> tidy
+artifacts); with `sample_period > 0` the scan also streams per-tick
+timeline ys (credit mean/std, utilization, queue depth) sampled exactly
+where `Simulation.run` records its timeline.
 """
 from __future__ import annotations
 
@@ -75,6 +84,29 @@ class VecSimConfig:
     usage_period: float = 60.0       # CloudWatch 1-min utilization
     impl: str = "auto"               # bucket-serve kernel path (ops.bucket_serve)
     seed: int = 0                    # base key for shuffle="random"
+    sample_period: float = 0.0       # timeline ys emission period (0 = off)
+    joint_anti_affinity: bool = True  # cash-joint: interleave burst classes
+    joint_cpu_weight: float = 0.5    # cash-joint pool weight (0.5 = min-rule)
+
+
+def sample_tick_indices(n_ticks: int, dt: float,
+                        sample_period: float) -> Tuple[int, ...]:
+    """Tick indices at which `Simulation.run` records a timeline sample:
+    greedy `now >= next_sample` with `next_sample += sample_period` per hit.
+    Static (host-side) — the engine gathers its per-tick scan ys at exactly
+    these positions so the batched timeline aligns sample-for-sample with
+    the Python simulator's. ``now`` is *accumulated* (`now += dt`), not
+    computed as `t * dt`, to reproduce the Python loop's float drift for dt
+    values that are not exactly representable (e.g. 0.1)."""
+    idx: List[int] = []
+    next_sample = 0.0
+    now = 0.0
+    for t in range(n_ticks):
+        if now >= next_sample:
+            idx.append(t)
+            next_sample += sample_period
+        now += dt
+    return tuple(idx)
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +137,8 @@ def scenario_task_order(jobs: Sequence[Job],
 
 
 def build_scenario(nodes: Sequence[Node], jobs: Sequence[Job], *,
-                   submit: str = "parallel") -> Dict[str, np.ndarray]:
+                   submit: str = "parallel",
+                   rng_seed: int = 0) -> Dict[str, np.ndarray]:
     """Freeze one scenario (a cluster + workload) into arrays.
 
     ``submit="parallel"`` interleaves tasks round-robin across jobs exactly
@@ -115,6 +148,10 @@ def build_scenario(nodes: Sequence[Node], jobs: Sequence[Job], *,
     queue order, so schedulers index it directly. Only static task fields
     are read — the same Job objects can still be run through the Python
     oracle afterwards.
+
+    ``rng_seed`` is a *per-scenario* stream id for ``shuffle="random"``:
+    the engine folds it into ``PRNGKey(cfg.seed)``, so a seed sweep batches
+    into ONE compile instead of one per VecSimConfig.seed value.
     """
     order = scenario_task_order(jobs, submit)
     if submit == "parallel":
@@ -172,6 +209,9 @@ def build_scenario(nodes: Sequence[Node], jobs: Sequence[Job], *,
         "vcpus": np.array([n.spec.vcpus for n in nodes], f),
         "cpu_unlimited": np.array([1.0 if n.cpu.unlimited else 0.0
                                    for n in nodes], f),
+        "node_pad": np.zeros(len(nodes), bool),
+        # --- per-scenario scalars -------------------------------------------
+        "rng_seed": np.int32(rng_seed),
     }
     for name, get in (("cpu", lambda n: n.cpu), ("disk", lambda n: n.disk),
                       ("peak", lambda n: n.net.peak),
@@ -225,11 +265,13 @@ def stack_scenarios(scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.
             [s["group_size"], np.ones(g_pad, s["group_size"].dtype)])
         for k in ("slots", "vcpus", "cpu_unlimited"):
             row[k] = pn(k)
+        row["node_pad"] = pn("node_pad", True)
         for name in ("cpu", "disk", "peak", "sus"):
             for fld in ("baseline", "burst", "capacity", "balance0"):
                 row[f"{name}_{fld}"] = pn(f"{name}_{fld}")
         row["n_waves"] = np.int32(W)
         row["n_jobs"] = s["n_jobs"]
+        row["rng_seed"] = s.get("rng_seed", np.int32(0))
         for k, v in row.items():
             out.setdefault(k, []).append(np.asarray(v))
     batch = {k: np.stack(v) for k, v in out.items()}
@@ -369,16 +411,22 @@ def _gather_phase_nodes(tables, totals, masks, ranks, ls: int):
 
 
 def _joint_split(free_sorted: jnp.ndarray, prefer_cpu: jnp.ndarray,
-                 n_cpu: jnp.ndarray, n_disk: jnp.ndarray):
+                 n_cpu: jnp.ndarray, n_disk: jnp.ndarray,
+                 alternate: bool = True):
     """JointCashScheduler phase 1: per node (visited in joint-credit
     descending order) alternate the two burst classes starting from the
-    richer pool. Returns per-node (cpu_take, disk_take)."""
+    richer pool. ``alternate=False`` (the anti-affinity ablation) packs the
+    preferred class exhaustively before the other, like running Algorithm 1
+    phase 1 per class. Returns per-node (cpu_take, disk_take)."""
     def body(carry, inp):
         rc, rd = carry
         f, pref = inp
         t = jnp.minimum(f, rc + rd)
-        ceil_h, floor_h = (t + 1) // 2, t // 2
-        want_cpu = jnp.where(pref, ceil_h, floor_h)
+        if alternate:
+            ceil_h, floor_h = (t + 1) // 2, t // 2
+            want_cpu = jnp.where(pref, ceil_h, floor_h)
+        else:
+            want_cpu = jnp.where(pref, t, jnp.zeros_like(t))
         cpu_take = jnp.minimum(rc, jnp.maximum(want_cpu, t - rd))
         disk_take = t - cpu_take
         return (rc - cpu_take, rd - disk_take), (cpu_take, disk_take)
@@ -386,19 +434,6 @@ def _joint_split(free_sorted: jnp.ndarray, prefer_cpu: jnp.ndarray,
     (_, _), (cpu_take, disk_take) = jax.lax.scan(
         body, (n_cpu, n_disk), (free_sorted, prefer_cpu))
     return cpu_take, disk_take
-
-
-def _take_ranges(order_ids: jnp.ndarray, takes: jnp.ndarray,
-                 mask: jnp.ndarray, rank: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Assign the k-th masked task to the node whose cumulative ``takes``
-    range covers k (nodes visited in ``order_ids`` order)."""
-    cum = jnp.cumsum(takes)
-    slot = _bucket_rank(cum, rank)
-    node = order_ids[jnp.clip(slot, 0, order_ids.shape[0] - 1)]
-    ok = mask & (rank < cum[-1])
-    n_pend = jnp.sum(mask.astype(jnp.int32))
-    taken_sorted = jnp.minimum(takes, jnp.clip(n_pend - (cum - takes), 0, None))
-    return jnp.where(ok, node, -1), _unpermute(order_ids, taken_sorted)
 
 
 # ---------------------------------------------------------------------------
@@ -512,7 +547,12 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         if joint or cfg.resource == "disk":
             state["tel_disk"] = _fresh_telemetry(N, dtype)
     if cfg.shuffle == "random":
-        state["key"] = jax.random.PRNGKey(cfg.seed)
+        # per-scenario stream: fold the batched rng_seed into the static
+        # base key, so a seed sweep is ONE compile (cfg stays constant)
+        state["key"] = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                          sc["rng_seed"])
+
+    emit_tl = cfg.sample_period > 0.0
 
     def tick(st, t):
         now = t.astype(dtype) * dt
@@ -587,6 +627,10 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             cap_cpu = jnp.maximum(sc["cpu_capacity"], 1e-9)
             cap_disk = jnp.maximum(sc["disk_capacity"], 1e-9)
             norm_cpu, norm_disk = est_cpu / cap_cpu, est_disk / cap_disk
+            if cfg.joint_cpu_weight != 0.5:
+                # weighted min-rule; w = 0.5 reduces to the plain min
+                norm_cpu = norm_cpu * (2.0 * cfg.joint_cpu_weight)
+                norm_disk = norm_disk * (2.0 * (1.0 - cfg.joint_cpu_weight))
             jcred = jnp.minimum(norm_cpu, norm_disk)
             desc, asc = _node_orders(jcred)
             prefer = (norm_cpu >= norm_disk)[desc]
@@ -596,7 +640,8 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             r_cpu, r_disk, r_net = _packed_ranks(m_cpu, m_disk, m_net)
             (r_plain,) = _packed_ranks(m_plain)
             ct, dtk = _joint_split(free[desc], prefer, r_cpu[-1] + 1,
-                                   r_disk[-1] + 1)
+                                   r_disk[-1] + 1,
+                                   alternate=cfg.joint_anti_affinity)
             cum_c, cum_d = jnp.cumsum(ct), jnp.cumsum(dtk)
             t1 = _unpermute(desc, ct) + _unpermute(desc, dtk)
             free1 = free - t1
@@ -765,10 +810,39 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             new_st["tel_disk"] = tel_disk
         if cfg.shuffle == "random":
             new_st["key"] = key
-        return new_st, None
 
-    st, _ = jax.lax.scan(tick, state,
-                         jnp.arange(cfg.n_ticks, dtype=jnp.int32))
+        # ---- 7) streaming timeline ys (static switch: off -> zero cost) --
+        ys = None
+        if emit_tl:
+            # sampled AFTER serve+observe, exactly where Simulation.run
+            # records its timeline row (cluster_stats on post-serve state)
+            nmask = ~sc["node_pad"]
+            n_real = jnp.maximum(
+                jnp.sum(jnp.where(nmask, jnp.ones((), dtype), 0.0)), 1.0)
+            total_vcpus = jnp.maximum(jnp.sum(sc["vcpus"]), 1e-9)
+
+            def _mstd(x):
+                m = jnp.sum(jnp.where(nmask, x, 0.0)) / n_real
+                m2 = jnp.sum(jnp.where(nmask, x * x, 0.0)) / n_real
+                return m, jnp.sqrt(jnp.maximum(0.0, m2 - m * m))
+
+            # effective balance: unlimited overdraft counts negative (Fig 8b)
+            cm, cs = _mstd(cpu_bal - new_st["cpu_sur"])
+            ys = {
+                "cpu_util": jnp.sum(w_cpu) / dt / total_vcpus,
+                "cpu_credit_mean": cm, "cpu_credit_std": cs,
+                "queue_depth": jnp.sum(
+                    (ready & (assign < 0)).astype(jnp.int32)),
+            }
+            if act_disk:
+                dm, ds = _mstd(disk_bal)
+                ys["disk_credit_mean"] = dm
+                ys["disk_credit_std"] = ds
+                ys["iops"] = jnp.sum(w_disk) / dt / n_real
+        return new_st, ys
+
+    st, ys = jax.lax.scan(tick, state,
+                          jnp.arange(cfg.n_ticks, dtype=jnp.int32))
 
     real = ~sc["task_pad"]
     all_done = jnp.all(st["released"] | ~real)
@@ -788,7 +862,7 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                                 num_segments=n_jobs + 1)[:n_jobs]
     j_cnt = jax.ops.segment_sum(real.astype(jnp.int32), seg,
                                 num_segments=n_jobs + 1)[:n_jobs]
-    return {
+    out = {
         "makespan": makespan,
         "all_done": all_done,
         "job_completion": j_end - j_sub,
@@ -800,6 +874,12 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         "finish": st["finish"],
         "start": st["start"],
     }
+    if emit_tl:
+        sidx = jnp.asarray(sample_tick_indices(cfg.n_ticks, cfg.dt,
+                                               cfg.sample_period),
+                           dtype=jnp.int32)
+        out["timeline"] = {k: v[sidx] for k, v in ys.items()}
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "smax", "n_waves",
@@ -811,15 +891,12 @@ def _run_batch_jit(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                                       n_waves, n_jobs, active))(arrays)
 
 
-def run_batch(batch: Dict[str, np.ndarray],
-              cfg: VecSimConfig) -> Dict[str, np.ndarray]:
-    """Run a stacked scenario batch under one static config. Returns arrays
-    with a leading scenario axis: makespan, all_done, job_completion /
-    job_mask, surplus_credits, per-task start/finish times, plus aggregate
-    cpu-work and busy-seconds counters."""
+def batch_statics(batch: Dict[str, np.ndarray]):
+    """Compile-time statics a stacked batch implies: ``(smax, n_waves,
+    n_jobs, active)`` — the extra static arguments of the jitted engine.
+    Exposed for external runners (repro.sweep) that shard the scenario axis
+    themselves."""
     _, _, _, W, J = (int(x) for x in batch["_meta"])
-    arrays = {k: jnp.asarray(v) for k, v in batch.items()
-              if k not in ("_meta", "n_waves", "n_jobs")}
     smax = int(batch["slots"].max()) if batch["slots"].size else 1
     cls = batch["cls"]
     active = (bool(batch["work_disk"].any() or batch["dem_disk"].any()),
@@ -827,8 +904,38 @@ def run_batch(batch: Dict[str, np.ndarray],
               bool(((cls == CLS_BURST_CPU) | (cls == CLS_BURST_DISK)).any()),
               bool((cls == CLS_NET).any()),
               bool((cls == CLS_NONE).any()))
-    out = _run_batch_jit(cfg, max(smax, 1), W, J, active, arrays)
-    return {k: np.asarray(v) for k, v in out.items()}
+    return max(smax, 1), W, J, active
+
+
+def batch_arrays(batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """The batch entries the engine actually maps over (host-side metadata
+    stripped)."""
+    return {k: v for k, v in batch.items()
+            if k not in ("_meta", "n_waves", "n_jobs")}
+
+
+def finalize_outputs(out, cfg: VecSimConfig) -> Dict[str, np.ndarray]:
+    """Device outputs -> numpy, plus the host-side timeline time axis."""
+    res = jax.tree_util.tree_map(np.asarray, out)
+    if cfg.sample_period > 0.0:
+        res["timeline_t"] = np.asarray(
+            sample_tick_indices(cfg.n_ticks, cfg.dt, cfg.sample_period),
+            dtype=np.float64) * cfg.dt
+    return res
+
+
+def run_batch(batch: Dict[str, np.ndarray],
+              cfg: VecSimConfig) -> Dict[str, np.ndarray]:
+    """Run a stacked scenario batch under one static config. Returns arrays
+    with a leading scenario axis: makespan, all_done, job_completion /
+    job_mask, surplus_credits, per-task start/finish times, aggregate
+    cpu-work and busy-seconds counters, and (when ``cfg.sample_period > 0``)
+    a ``timeline`` dict of sampled per-tick series plus its ``timeline_t``
+    time axis."""
+    smax, W, J, active = batch_statics(batch)
+    arrays = {k: jnp.asarray(v) for k, v in batch_arrays(batch).items()}
+    out = _run_batch_jit(cfg, smax, W, J, active, arrays)
+    return finalize_outputs(out, cfg)
 
 
 def run_scenarios(scenarios: Sequence[Dict[str, np.ndarray]],

@@ -1,0 +1,24 @@
+"""repro.sweep — sweep orchestration over the batched fleet simulator.
+
+Dataflow: **spec** (declare a cartesian grid over `VecSimConfig` fields +
+scenario-builder params) → **group** (partition points by static config;
+one jit compile each) → **shard** (scenario axis across local devices via
+`jax.pmap`, chunked + resumable) → **stream** (per-tick timeline ys at
+`sample_period`) → **aggregate** (`SweepResult` JSON/NPZ artifact keyed by
+grid coordinates).
+"""
+from repro.sweep.results import GroupResult, SweepResult
+from repro.sweep.runner import RunnerOptions, device_count, run_group, run_sweep
+from repro.sweep.spec import CompileGroup, SweepPoint, SweepSpec
+
+__all__ = [
+    "CompileGroup",
+    "GroupResult",
+    "RunnerOptions",
+    "SweepPoint",
+    "SweepResult",
+    "SweepSpec",
+    "device_count",
+    "run_group",
+    "run_sweep",
+]

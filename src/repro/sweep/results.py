@@ -1,0 +1,209 @@
+"""Results layer: aggregate per-scenario engine outputs (+ optional
+timelines) across compile groups into one artifact keyed by grid
+coordinates.
+
+A sweep's outputs are ragged across groups — per-task `start`/`finish`
+arrays pad to each group's max task count, `job_completion` to its max job
+count, timelines exist only when the group's config sampled them. The
+`SweepResult` therefore keeps full arrays per group and assembles the
+*scalar* metrics (makespan, all_done, surplus, …) into flat per-point
+columns in grid order, which is what calibration sweeps consume.
+
+Persistence is a JSON + NPZ pair: ``<prefix>.json`` holds the grid (axes,
+coordinates, configs, scalar metric table, run metadata) — human-diffable
+and keyed by coordinates; ``<prefix>.npz`` holds every dense array under
+``g<gi>/<name>`` keys. `SweepResult.load` round-trips both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.vecsim import VecSimConfig
+from repro.sweep.spec import SweepPoint
+
+# per-scenario scalar outputs assembled into the flat metric table
+SCALAR_OUTPUTS = ("makespan", "all_done", "surplus_credits",
+                  "total_cpu_work", "cpu_work_served", "node_busy_seconds")
+
+# outputs that are group-level (no leading scenario axis). Identified by
+# NAME, never by shape — a shape heuristic misfires whenever the sample
+# count happens to equal the group's scenario count.
+GROUP_LEVEL_OUTPUTS = frozenset({"timeline_t"})
+
+
+def flatten_outputs(outputs: Dict[str, Any],
+                    prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten the (possibly nested: ``timeline``) output dict to
+    slash-separated keys — the NPZ/checkpoint wire format."""
+    flat: Dict[str, np.ndarray] = {}
+    for k, v in outputs.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            flat.update(flatten_outputs(v, prefix=f"{key}/"))
+        else:
+            flat[key] = np.asarray(v)
+    return flat
+
+
+def unflatten_outputs(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+@dataclasses.dataclass
+class GroupResult:
+    """One compile group's points + the engine outputs for its scenarios
+    (leading axis = position within the group)."""
+    cfg: VecSimConfig
+    points: List[SweepPoint]
+    outputs: Dict[str, Any]
+
+
+class SweepResult:
+    def __init__(self, axes: Dict[str, Sequence[Any]],
+                 groups: List[GroupResult],
+                 meta: Optional[Dict[str, Any]] = None):
+        self.axes = {k: list(v) for k, v in axes.items()}
+        self.groups = groups
+        self.meta = dict(meta or {})
+        # global point index -> (group idx, row within group)
+        self._where: Dict[int, Tuple[int, int]] = {}
+        for gi, g in enumerate(groups):
+            for row, p in enumerate(g.points):
+                self._where[p.index] = (gi, row)
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def n_points(self) -> int:
+        return len(self._where)
+
+    @property
+    def points(self) -> List[SweepPoint]:
+        """All points in grid (expansion) order."""
+        pts = [p for g in self.groups for p in g.points]
+        return sorted(pts, key=lambda p: p.index)
+
+    def scalars(self) -> Dict[str, np.ndarray]:
+        """Per-point scalar metric columns in grid order."""
+        cols: Dict[str, np.ndarray] = {}
+        order = self.points
+        for name in SCALAR_OUTPUTS:
+            if not all(name in g.outputs for g in self.groups):
+                continue
+            vals = []
+            for p in order:
+                gi, row = self._where[p.index]
+                vals.append(self.groups[gi].outputs[name][row])
+            cols[name] = np.asarray(vals)
+        return cols
+
+    def point_outputs(self, index: int) -> Dict[str, Any]:
+        """Every output (scalars, per-task arrays, timeline row) for one
+        grid point."""
+        gi, row = self._where[index]
+        g = self.groups[gi]
+        out: Dict[str, Any] = {}
+        for k, v in g.outputs.items():
+            if k in GROUP_LEVEL_OUTPUTS:    # e.g. the timeline_t time axis
+                out[k] = v
+            elif isinstance(v, dict):
+                out[k] = {kk: vv[row] for kk, vv in v.items()}
+            else:
+                out[k] = v[row]
+        return out
+
+    def select(self, **coords: Any) -> List[SweepPoint]:
+        """Points whose coordinates match every given axis value."""
+        return [p for p in self.points
+                if all(p.coord_dict.get(k) == v for k, v in coords.items())]
+
+    def metric(self, name: str, **coords: Any) -> np.ndarray:
+        """A scalar output filtered by coordinates, in grid order."""
+        pts = self.select(**coords)
+        vals = []
+        for p in pts:
+            gi, row = self._where[p.index]
+            vals.append(self.groups[gi].outputs[name][row])
+        return np.asarray(vals)
+
+    # ------------------------------------------------------------ persistence
+    def to_tidy(self) -> Dict[str, Any]:
+        """JSON-able artifact: grid + per-point coordinate/metric rows."""
+        scalars = self.scalars()
+        rows = []
+        for i, p in enumerate(self.points):
+            gi, _ = self._where[p.index]
+            rows.append({
+                "index": p.index,
+                "coords": p.coord_dict,
+                "group": gi,
+                "metrics": {k: _jsonify(v[i]) for k, v in scalars.items()},
+            })
+        return {
+            "axes": {k: [_jsonify(v) for v in vs]
+                     for k, vs in self.axes.items()},
+            "groups": [dataclasses.asdict(g.cfg) for g in self.groups],
+            "points": rows,
+            "meta": self.meta,
+        }
+
+    def save(self, prefix: str) -> Tuple[pathlib.Path, pathlib.Path]:
+        """Write ``<prefix>.json`` (tidy grid) + ``<prefix>.npz`` (dense
+        arrays, ``g<gi>/<name>`` keys)."""
+        prefix_p = pathlib.Path(prefix)
+        jpath = prefix_p.with_suffix(".json")
+        npath = prefix_p.with_suffix(".npz")
+        jpath.parent.mkdir(parents=True, exist_ok=True)
+        jpath.write_text(json.dumps(self.to_tidy(), indent=2,
+                                    sort_keys=True) + "\n")
+        dense: Dict[str, np.ndarray] = {}
+        for gi, g in enumerate(self.groups):
+            dense.update(flatten_outputs(g.outputs, prefix=f"g{gi}/"))
+            dense[f"g{gi}/_point_index"] = np.asarray(
+                [p.index for p in g.points])
+        np.savez_compressed(npath, **dense)
+        return jpath, npath
+
+    @classmethod
+    def load(cls, prefix: str) -> "SweepResult":
+        prefix_p = pathlib.Path(prefix)
+        tidy = json.loads(prefix_p.with_suffix(".json").read_text())
+        with np.load(prefix_p.with_suffix(".npz")) as z:
+            dense = {k: z[k] for k in z.files}
+        cfgs = [VecSimConfig(**d) for d in tidy["groups"]]
+        by_group: List[Dict[str, np.ndarray]] = [dict() for _ in cfgs]
+        for k, v in dense.items():
+            gi, _, rest = k.partition("/")
+            by_group[int(gi[1:])][rest] = v
+        groups = []
+        for gi, cfg in enumerate(cfgs):
+            flat = by_group[gi]
+            idxs = flat.pop("_point_index")
+            rows = [r for r in tidy["points"] if r["group"] == gi]
+            rows.sort(key=lambda r: list(idxs).index(r["index"]))
+            points = [SweepPoint(index=r["index"],
+                                 coords=tuple(r["coords"].items()), cfg=cfg)
+                      for r in rows]
+            groups.append(GroupResult(cfg, points, unflatten_outputs(flat)))
+        return cls(tidy["axes"], groups, tidy.get("meta"))
+
+
+def _jsonify(v: Any) -> Any:
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    return v

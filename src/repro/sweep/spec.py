@@ -1,0 +1,196 @@
+"""Sweep spec/grid layer: declare a cartesian grid over `VecSimConfig`
+fields and scenario-builder parameters, expand it, and partition the points
+into *compile groups* by static configuration.
+
+CASH's headline results are all sweeps — credit seeds × fleet mixes ×
+schedulers × telemetry modes driven through the batched engine
+(`core.vecsim`). Every `VecSimConfig` field is compile-time static, so a
+grid mixes two kinds of axes:
+
+  * **static axes** — names matching a `VecSimConfig` field (``scheduler``,
+    ``telemetry``, ``resource``, ``joint_anti_affinity``, …). Each distinct
+    combination is its own jit compilation; the spec groups points so each
+    group compiles exactly once.
+  * **scenario axes** — anything else; values are forwarded to the
+    ``builder`` callable, which freezes one scenario
+    (`vecsim.build_scenario` output) per distinct parameter combination.
+    Builders are memoized on those parameters, so a grid that crosses the
+    same scenarios with many static configs (e.g. stock vs cash on the same
+    fleets) builds each scenario once.
+
+An axis name the builder's signature explicitly accepts is a *scenario*
+axis even when it collides with a `VecSimConfig` field name (``seed`` is
+the common case: a workload seed, not the engine's shuffle-key seed); set
+colliding config fields through ``configure`` or ``base`` instead.
+
+Non-cartesian static config (fig7's "label" axis choosing the scheduler)
+goes through ``configure``: a callable mapping the point's coordinates to
+`VecSimConfig` field overrides, applied after the static axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import itertools
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.vecsim import VecSimConfig
+
+CFG_FIELDS = frozenset(f.name for f in dataclasses.fields(VecSimConfig))
+
+Scenario = Dict[str, np.ndarray]
+Builder = Callable[..., Scenario]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One cell of the expanded grid."""
+    index: int                       # position in expansion (row-major) order
+    coords: Tuple[Tuple[str, Any], ...]   # full axis-name -> value mapping
+    cfg: VecSimConfig                # resolved static configuration
+
+    @property
+    def coord_dict(self) -> Dict[str, Any]:
+        return dict(self.coords)
+
+
+@dataclasses.dataclass
+class CompileGroup:
+    """Points sharing one static `VecSimConfig` — one jit compile, one (or
+    a few chunked) batched dispatches."""
+    cfg: VecSimConfig
+    points: List[SweepPoint]
+    scenarios: List[Scenario]
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+
+class SweepSpec:
+    """Cartesian sweep declaration.
+
+    Parameters
+    ----------
+    builder:
+        ``builder(**scenario_params) -> scenario dict`` (the output of
+        `vecsim.build_scenario`). Receives the point's non-`VecSimConfig`
+        coordinates, filtered to the builder's signature unless it takes
+        ``**kwargs``.
+    axes:
+        Ordered mapping of axis name -> sequence of values. Expansion is
+        row-major (last axis fastest), like ``itertools.product``.
+    base:
+        `VecSimConfig` defaults for fields no axis covers.
+    configure:
+        Optional ``configure(coords: dict) -> dict`` returning extra
+        `VecSimConfig` field overrides derived from the coordinates.
+    """
+
+    def __init__(self, builder: Builder, axes: Mapping[str, Sequence[Any]],
+                 *, base: Optional[VecSimConfig] = None,
+                 configure: Optional[Callable[[Dict[str, Any]],
+                                              Dict[str, Any]]] = None):
+        if not axes:
+            raise ValueError("a sweep needs at least one axis")
+        self.builder = builder
+        self.axes: Dict[str, List[Any]] = {k: list(v) for k, v in axes.items()}
+        for name, vals in self.axes.items():
+            if not vals:
+                raise ValueError(f"axis {name!r} has no values")
+        self.base = base or VecSimConfig()
+        self.configure = configure
+        self._builder_params = self._accepted_params(builder)
+        # an axis that feeds neither the builder nor the config is a typo
+        # that would silently duplicate the whole grid; only a `configure`
+        # hook (whose reads we cannot introspect) can consume extra axes
+        if configure is None and self._builder_params is not None:
+            unknown = [n for n in self.axes
+                       if n not in CFG_FIELDS and n not in self._builder_params]
+            if unknown:
+                raise ValueError(
+                    f"axes {unknown} match neither a builder parameter nor "
+                    "a VecSimConfig field (add a `configure` hook if they "
+                    "are meant to derive config)")
+
+    @staticmethod
+    def _accepted_params(builder: Builder) -> Optional[frozenset]:
+        """Parameter names the builder accepts, or None for **kwargs."""
+        try:
+            sig = inspect.signature(builder)
+        except (TypeError, ValueError):
+            return None
+        if any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in sig.parameters.values()):
+            return None
+        return frozenset(sig.parameters)
+
+    # ------------------------------------------------------------- expansion
+    @property
+    def n_points(self) -> int:
+        n = 1
+        for vals in self.axes.values():
+            n *= len(vals)
+        return n
+
+    def expand(self) -> List[SweepPoint]:
+        """All grid points in row-major axis order, with resolved configs."""
+        names = list(self.axes)
+        points: List[SweepPoint] = []
+        taken = self._builder_params or frozenset()
+        for i, combo in enumerate(itertools.product(*self.axes.values())):
+            coords = dict(zip(names, combo))
+            overrides = {k: v for k, v in coords.items()
+                         if k in CFG_FIELDS and k not in taken}
+            if self.configure is not None:
+                derived = self.configure(dict(coords))
+                bad = set(derived) - CFG_FIELDS
+                if bad:
+                    raise ValueError(
+                        f"configure returned non-VecSimConfig fields: {bad}")
+                overrides.update(derived)
+            cfg = dataclasses.replace(self.base, **overrides)
+            points.append(SweepPoint(index=i, coords=tuple(coords.items()),
+                                     cfg=cfg))
+        return points
+
+    def scenario_params(self, point: SweepPoint) -> Dict[str, Any]:
+        """The coordinates forwarded to the builder for this point."""
+        if self._builder_params is not None:
+            return {k: v for k, v in point.coords
+                    if k in self._builder_params}
+        return {k: v for k, v in point.coords if k not in CFG_FIELDS}
+
+    def groups(self) -> List[CompileGroup]:
+        """Expand and partition by static config, building each distinct
+        scenario once (memoized on the builder parameters)."""
+        cache: Dict[Tuple[Tuple[str, Any], ...], Scenario] = {}
+        grouped: Dict[VecSimConfig, CompileGroup] = {}
+        for point in self.expand():
+            params = self.scenario_params(point)
+            key = tuple(sorted(params.items()))
+            if key not in cache:
+                cache[key] = self.builder(**params)
+            g = grouped.get(point.cfg)
+            if g is None:
+                g = grouped[point.cfg] = CompileGroup(point.cfg, [], [])
+            g.points.append(point)
+            g.scenarios.append(cache[key])
+        return list(grouped.values())
+
+    # --------------------------------------------------------- fingerprinting
+    def fingerprint(self) -> str:
+        """Stable id of the grid shape + static base — guards checkpoint
+        resume against running a different spec into the same directory.
+        Axis values are stringified; builders are intentionally excluded
+        (two specs over the same grid may close over equivalent builders)."""
+        import hashlib
+
+        h = hashlib.sha256()
+        h.update(repr(dataclasses.asdict(self.base)).encode())
+        for name, vals in self.axes.items():
+            h.update(name.encode())
+            for v in vals:
+                h.update(repr(v).encode())
+        return h.hexdigest()[:16]

@@ -1,0 +1,469 @@
+"""repro.sweep (spec -> group -> shard -> stream -> aggregate) + the
+engine features it rides on: streamed timeline ys, per-scenario rng
+streams, and the joint-scheduler ablation knobs.
+
+Covers the ROADMAP items this subsystem absorbs:
+  * timeline sampling on the batched path (float64 parity with the Python
+    simulator's sampled series, sample-for-sample);
+  * scenario-axis sharding (bitwise parity with the single-device vmap
+    path, exercised in a subprocess with forced host-platform devices);
+  * `shuffle="random"` statistical parity (makespan distribution over
+    seeds vs the Python Mersenne shuffle — distributional, not exact);
+  * `cash-joint` at saturation scale (oracle equivalence sweep + the
+    anti-affinity x pool-weight ablation grid as a `SweepSpec` grid).
+
+No `hypothesis` usage — everything here is deterministic.
+"""
+import os
+import pathlib
+import random
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import sweep
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.scheduler import JointCashScheduler, StockScheduler
+from repro.core.simulator import Job, SimConfig, Simulation
+from repro.core.workloads import make_hibench_workload, make_tpcds_suite, reset_tids
+from repro.core import vecsim
+
+TOL = 1e-6
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+# ---------------------------------------------------------------------------
+# scenario generators
+# ---------------------------------------------------------------------------
+
+def _small_jobs(seed: int, n_tasks: int = 8, disk: bool = False):
+    rng = np.random.RandomState(seed)
+    tasks = []
+    for k in range(n_tasks):
+        if disk and k % 3 == 2:
+            tasks.append(Task(
+                tid=1000 * seed + k, job=f"j{seed}", vertex="root_input",
+                work_disk=float(rng.uniform(2000, 6000)),
+                demand_disk=float(rng.uniform(500, 2500)),
+                work_cpu=float(rng.uniform(10, 30)),
+                demand_cpu=float(rng.uniform(0.2, 0.8)),
+                annotation=Annotation.BURST_DISK))
+        else:
+            tasks.append(Task(
+                tid=1000 * seed + k, job=f"j{seed}", vertex="map",
+                work_cpu=float(rng.uniform(20, 60)),
+                demand_cpu=float(rng.uniform(0.3, 0.9)),
+                annotation=Annotation.BURST_CPU if k % 2
+                else Annotation.NONE))
+    return [Job(name=f"j{seed}", tasks=tasks)]
+
+
+def _small_cluster(n_nodes: int = 3, frac: float = 0.3):
+    return make_cluster(n_nodes, "t3.large", cpu_initial_fraction=frac,
+                        disk_initial_credits=200_000.0)
+
+
+def _small_scenario(seed: int, **kw):
+    return vecsim.build_scenario(_small_cluster(), _small_jobs(seed, **kw),
+                                 rng_seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# spec layer
+# ---------------------------------------------------------------------------
+
+def test_sample_tick_indices_match_python_cadence():
+    # dt=1, period=10 -> every 10th tick; dt=0.5 -> every 20th
+    assert vecsim.sample_tick_indices(35, 1.0, 10.0) == (0, 10, 20, 30)
+    assert vecsim.sample_tick_indices(50, 0.5, 10.0) == (0, 20, 40)
+    # non-divisible period: greedy "first tick past next_sample"
+    assert vecsim.sample_tick_indices(16, 1.0, 2.5) == (0, 3, 5, 8, 10, 13, 15)
+    # non-dyadic dt: the helper accumulates `now += dt` like the Python
+    # loop, reproducing its float drift (0.1 summed 100x < 10.0 -> tick 101)
+    assert vecsim.sample_tick_indices(250, 0.1, 10.0) == (0, 101, 200)
+
+
+def test_spec_axis_routing_and_grouping():
+    calls = []
+
+    def builder(seed):
+        calls.append(seed)
+        return _small_scenario(seed)
+
+    spec = sweep.SweepSpec(
+        builder,
+        axes={"scheduler": ["cash", "stock"], "telemetry": ["predicted"],
+              "seed": [1, 2, 3]},
+        base=vecsim.VecSimConfig(n_ticks=100),
+    )
+    points = spec.expand()
+    assert len(points) == 6 == spec.n_points
+    # "seed" collides with VecSimConfig.seed but the builder accepts it ->
+    # scenario axis: the engine seed stays at base for every point
+    assert all(p.cfg.seed == 0 for p in points)
+    assert {p.cfg.scheduler for p in points} == {"cash", "stock"}
+    groups = spec.groups()
+    assert sorted(len(g) for g in groups) == [3, 3]
+    # memoized: 3 distinct scenarios built once each, shared by both groups
+    assert sorted(calls) == [1, 2, 3]
+
+
+def test_spec_configure_derives_static_fields():
+    modes = {"a": ("cash", "cpu"), "b": ("cash-joint", "joint")}
+    spec = sweep.SweepSpec(
+        lambda seed: _small_scenario(seed),
+        axes={"mode": list(modes), "seed": [5]},
+        configure=lambda c: dict(zip(("scheduler", "resource"),
+                                     modes[c["mode"]])),
+    )
+    cfgs = {p.coord_dict["mode"]: p.cfg for p in spec.expand()}
+    assert cfgs["a"].scheduler == "cash" and cfgs["a"].resource == "cpu"
+    assert cfgs["b"].scheduler == "cash-joint" and cfgs["b"].resource == "joint"
+    with pytest.raises(ValueError):
+        sweep.SweepSpec(lambda seed: _small_scenario(seed),
+                        axes={"seed": [1]},
+                        configure=lambda c: {"not_a_field": 1}).expand()
+
+
+def test_spec_rejects_unconsumed_axis():
+    """A typo'd axis (neither builder param nor config field) would
+    silently duplicate the grid — without a configure hook it must raise."""
+    with pytest.raises(ValueError, match="telemety"):
+        sweep.SweepSpec(lambda seed: _small_scenario(seed),
+                        axes={"seed": [1], "telemety": ["predicted"]})
+    # ...but a configure hook may consume arbitrary axes (fig7's "label")
+    sweep.SweepSpec(lambda seed: _small_scenario(seed),
+                    axes={"seed": [1], "mode": ["a"]},
+                    configure=lambda c: {})
+
+
+# ---------------------------------------------------------------------------
+# streamed timeline: float64 parity with the Python simulator's samples
+# ---------------------------------------------------------------------------
+
+def test_timeline_matches_python_sampled_series():
+    jobs = _small_jobs(3, n_tasks=10, disk=True)
+    sim = Simulation(_small_cluster(), StockScheduler(vecsim.IdentityRng()),
+                     SimConfig(max_time=20_000.0))
+    sim.submit_parallel(_small_jobs(3, n_tasks=10, disk=True))
+    res = sim.run()
+    tl = res.timeline
+    assert len(tl["t"]) > 5
+
+    sc = vecsim.build_scenario(_small_cluster(), jobs)
+    out = vecsim.run_scenarios([sc], vecsim.VecSimConfig(
+        n_ticks=2000, scheduler="stock", sample_period=10.0))
+    assert bool(out["all_done"][0])
+    s = len(tl["t"])
+    assert np.allclose(out["timeline_t"][:s], tl["t"])
+    for key in ("cpu_util", "cpu_credit_mean", "cpu_credit_std",
+                "disk_credit_mean", "disk_credit_std", "iops"):
+        np.testing.assert_allclose(out["timeline"][key][0][:s], tl[key],
+                                   rtol=1e-9, atol=TOL, err_msg=key)
+    # the Python loop stops sampling at the makespan; past it the vec
+    # cluster is idle — utilization must be zero there
+    past = out["timeline_t"] >= out["makespan"][0]
+    assert np.all(out["timeline"]["cpu_util"][0][past] == 0.0)
+    # queue depth drains to zero by completion
+    assert out["timeline"]["queue_depth"][0][-1] == 0
+
+
+def test_timeline_off_outputs_unchanged():
+    sc = _small_scenario(4)
+    out_off = vecsim.run_scenarios([sc], vecsim.VecSimConfig(n_ticks=400))
+    out_on = vecsim.run_scenarios([sc], vecsim.VecSimConfig(
+        n_ticks=400, sample_period=25.0))
+    assert "timeline" not in out_off and "timeline" in out_on
+    for k in ("makespan", "finish", "surplus_credits"):
+        np.testing.assert_array_equal(out_off[k], out_on[k])
+
+
+# ---------------------------------------------------------------------------
+# runner: chunked + resumable; sharded bitwise parity (subprocess)
+# ---------------------------------------------------------------------------
+
+def _seed_spec(n_ticks=400, sample_period=0.0):
+    return sweep.SweepSpec(
+        lambda seed: _small_scenario(seed),
+        axes={"scheduler": ["cash", "stock"], "seed": [1, 2, 3, 4, 5]},
+        base=vecsim.VecSimConfig(n_ticks=n_ticks,
+                                 sample_period=sample_period),
+    )
+
+
+def test_chunked_run_bitwise_equals_unchunked():
+    spec = _seed_spec(sample_period=50.0)
+    whole = sweep.run_sweep(spec, shards=1)
+    chunked = sweep.run_sweep(spec, shards=1, chunk_size=2)
+    for k, v in whole.scalars().items():
+        np.testing.assert_array_equal(v, chunked.scalars()[k], err_msg=k)
+    for g_w, g_c in zip(whole.groups, chunked.groups):
+        np.testing.assert_array_equal(g_w.outputs["finish"],
+                                      g_c.outputs["finish"])
+        np.testing.assert_array_equal(
+            g_w.outputs["timeline"]["cpu_credit_std"],
+            g_c.outputs["timeline"]["cpu_credit_std"])
+
+
+def test_checkpoint_resume_skips_completed_chunks(tmp_path):
+    spec = _seed_spec()
+    first = sweep.run_sweep(spec, shards=1, chunk_size=2,
+                            checkpoint_dir=str(tmp_path))
+    assert first.meta["resumed_scenarios"] == 0
+    second = sweep.run_sweep(spec, shards=1, chunk_size=2,
+                             checkpoint_dir=str(tmp_path))
+    assert second.meta["resumed_scenarios"] == second.meta["n_points"]
+    np.testing.assert_array_equal(first.scalars()["makespan"],
+                                  second.scalars()["makespan"])
+    # a different chunk layout would mis-slice the saved chunks — refuse
+    with pytest.raises(ValueError):
+        sweep.run_sweep(spec, shards=1, chunk_size=3,
+                        checkpoint_dir=str(tmp_path))
+    # a different spec must refuse the same checkpoint directory
+    other = sweep.SweepSpec(lambda seed: _small_scenario(seed),
+                            axes={"seed": [9]})
+    with pytest.raises(ValueError):
+        sweep.run_sweep(other, shards=1, checkpoint_dir=str(tmp_path))
+
+
+def test_results_save_load_roundtrip(tmp_path):
+    spec = _seed_spec(sample_period=100.0)
+    res = sweep.run_sweep(spec, shards=1)
+    res.save(str(tmp_path / "artifact"))
+    assert (tmp_path / "artifact.json").exists()
+    back = sweep.SweepResult.load(str(tmp_path / "artifact"))
+    for k, v in res.scalars().items():
+        np.testing.assert_array_equal(v, back.scalars()[k], err_msg=k)
+    pts = back.select(scheduler="cash", seed=3)
+    assert len(pts) == 1
+    orig = res.point_outputs(pts[0].index)
+    loaded = back.point_outputs(pts[0].index)
+    np.testing.assert_array_equal(orig["finish"], loaded["finish"])
+    np.testing.assert_array_equal(orig["timeline"]["cpu_util"],
+                                  loaded["timeline"]["cpu_util"])
+
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    assert len(jax.local_devices()) >= 2, jax.local_devices()
+    import numpy as np
+    from repro import sweep
+    from repro.core import vecsim
+    from repro.core.annotations import Annotation, Task
+    from repro.core.cluster import make_cluster
+    from repro.core.simulator import Job
+
+    def scenario(seed):
+        rng = np.random.RandomState(seed)
+        tasks = [Task(tid=100 * seed + k, job="j", vertex="map",
+                      work_cpu=float(rng.uniform(20, 60)),
+                      demand_cpu=float(rng.uniform(0.3, 0.9)),
+                      annotation=Annotation.BURST_CPU if k % 2
+                      else Annotation.NONE)
+                 for k in range(6)]
+        nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                             cpu_initial_fraction=0.3)
+        return vecsim.build_scenario(nodes, [Job(name="j", tasks=tasks)],
+                                     rng_seed=seed)
+
+    spec = sweep.SweepSpec(lambda seed: scenario(seed),
+                           axes={"seed": list(range(6))},
+                           base=vecsim.VecSimConfig(n_ticks=200,
+                                                    sample_period=20.0))
+    groups = spec.groups()
+    a = sweep.run_sweep(groups, shards=1)
+    b = sweep.run_sweep(groups, shards=2)
+    sa, sb = a.scalars(), b.scalars()
+    for k in sa:
+        assert np.array_equal(sa[k], sb[k]), k
+    ga, gb = a.groups[0].outputs, b.groups[0].outputs
+    assert np.array_equal(ga["finish"], gb["finish"])
+    assert np.array_equal(ga["timeline"]["cpu_credit_std"],
+                          gb["timeline"]["cpu_credit_std"])
+    print("BITWISE_OK")
+""")
+
+
+def test_sharded_bitwise_equals_vmap_subprocess():
+    """>=2-way scenario-axis sharding must reproduce the vmap path bit for
+    bit. Forced host-platform devices require a fresh process (XLA reads
+    the flag at backend init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=300)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "BITWISE_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# shuffle="random": statistical parity with the Python Mersenne shuffle
+# ---------------------------------------------------------------------------
+
+def _shuffle_cluster(n: int = 4):
+    """Credit-asymmetric fleet: half the nodes fully depleted, half full —
+    random placement materially moves the makespan."""
+    nodes = make_cluster(n, "t3.large", cpu_initial_fraction=0.0)
+    for i, nd in enumerate(nodes):
+        nd.cpu.balance = 0.0 if i < n // 2 else nd.cpu.capacity
+    return nodes
+
+
+def _shuffle_jobs():
+    """Fewer tasks than slots: placement is one-shot, so the shuffle alone
+    decides which node serves which task (no backfill to wash it out)."""
+    rng = np.random.RandomState(7)
+    tasks = [Task(tid=100 + k, job="j0", vertex="map",
+                  work_cpu=float(rng.uniform(100, 800)), demand_cpu=1.0,
+                  annotation=Annotation.BURST_CPU)
+             for k in range(6)]
+    return [Job(name="j0", tasks=tasks)]
+
+
+def test_shuffle_random_distributional_parity():
+    """ROADMAP: the vec engine's counter-based permutations vs the Python
+    Mersenne shuffle — compare the makespan distribution over seeds, not
+    trajectories. Deterministic (fixed seed sets on both sides)."""
+    n_seeds = 24
+    py = []
+    for s in range(n_seeds):
+        sim = Simulation(_shuffle_cluster(), StockScheduler(random.Random(s)),
+                         SimConfig(max_time=8_000.0))
+        sim.submit_parallel(_shuffle_jobs())
+        py.append(sim.run().makespan)
+    py = np.asarray(py)
+    assert py.std() > 0.0, "scenario must be shuffle-sensitive"
+
+    scens = [vecsim.build_scenario(_shuffle_cluster(), _shuffle_jobs(),
+                                   rng_seed=s) for s in range(n_seeds)]
+    out = vecsim.run_scenarios(scens, vecsim.VecSimConfig(
+        n_ticks=4_000, scheduler="stock", shuffle="random"))
+    assert bool(out["all_done"].all())
+    vm = out["makespan"]
+    assert vm.std() > 0.0
+
+    # same support and matching first two moments (loose: 24 draws)
+    assert abs(vm.mean() - py.mean()) / py.mean() < 0.10
+    assert 0.5 < vm.std() / py.std() < 2.0
+    assert vm.min() >= py.min() - TOL and vm.max() <= py.max() + TOL
+
+
+def test_shuffle_random_seed_streams_differ_within_batch():
+    """Distinct per-scenario rng_seed values must yield distinct streams in
+    ONE compiled batch (the single-compile seed-sweep feature)."""
+    scens = [vecsim.build_scenario(_shuffle_cluster(), _shuffle_jobs(),
+                                   rng_seed=s) for s in range(8)]
+    out = vecsim.run_scenarios(scens, vecsim.VecSimConfig(
+        n_ticks=4_000, scheduler="stock", shuffle="random"))
+    assert len(set(np.round(out["makespan"], 6))) > 1
+
+
+# ---------------------------------------------------------------------------
+# cash-joint at saturation scale + the ablation grid (ROADMAP)
+# ---------------------------------------------------------------------------
+
+def _saturated_setup(seed: int, n_nodes: int = 5):
+    """Mixed disk-burst TPC-DS + cpu-burst HiBench at full cluster
+    saturation (the ablation_joint regime, shrunk to test scale)."""
+    reset_tids()
+    nodes = make_cluster(n_nodes, "t3.2xlarge", ebs_size_gb=170.0,
+                         cpu_initial_fraction=0.3, disk_initial_credits=0.0)
+    jobs = make_tpcds_suite(300.0, n_nodes, 8, seed=seed)
+    cpu_jobs = make_hibench_workload("sql_aggregation", n_nodes, 8,
+                                     seed=seed + 7)
+    return nodes, jobs + cpu_jobs[:2]
+
+
+def _joint_oracle(seed: int, **sched_kw):
+    nodes, jobs = _saturated_setup(seed)
+    sim = Simulation(nodes,
+                     JointCashScheduler(vecsim.IdentityRng(), **sched_kw),
+                     SimConfig(max_time=20_000.0, resource="joint"))
+    sim.submit_parallel(jobs)
+    return sim.run(), jobs
+
+
+def test_joint_saturation_equivalence_sweep():
+    """Batched-vs-oracle equivalence for cash-joint at saturation scale
+    (~400 tasks, every slot contended), expressed as a seed-axis
+    `SweepSpec` — the subsystem's first real consumer."""
+    seeds = (1, 2)
+    oracles = {s: _joint_oracle(s) for s in seeds}
+
+    def builder(seed):
+        nodes, jobs = _saturated_setup(seed)
+        return vecsim.build_scenario(nodes, jobs)
+
+    n_ticks = int(max(o.makespan for o, _ in oracles.values())) + 50
+    spec = sweep.SweepSpec(
+        builder, axes={"seed": list(seeds)},
+        base=vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash-joint",
+                                 resource="joint"),
+    )
+    result = sweep.run_sweep(spec, shards=1)
+    assert bool(result.scalars()["all_done"].all())
+    for s in seeds:
+        (pt,) = result.select(seed=s)
+        out = result.point_outputs(pt.index)
+        oracle, jobs = oracles[s]
+        assert out["makespan"] == pytest.approx(oracle.makespan, abs=TOL)
+        assert out["surplus_credits"] == pytest.approx(
+            oracle.surplus_credits, abs=TOL)
+        for ji, j in enumerate(jobs):
+            assert out["job_completion"][ji] == pytest.approx(
+                oracle.job_completion[j.name], abs=TOL)
+
+
+def test_joint_ablation_grid():
+    """Anti-affinity on/off x pool weights as a `SweepSpec` grid over the
+    static ablation knobs; the two off-default corners are oracle-checked
+    (the Python JointCashScheduler grew the same knobs)."""
+    seed = 3
+
+    def builder(n_tasks):
+        return vecsim.build_scenario(_small_cluster(4),
+                                     _small_jobs(seed, n_tasks, disk=True))
+
+    spec = sweep.SweepSpec(
+        builder,
+        axes={"joint_anti_affinity": [True, False],
+              "joint_cpu_weight": [0.3, 0.5, 0.7],
+              "n_tasks": [12]},
+        base=vecsim.VecSimConfig(n_ticks=1_500, scheduler="cash-joint",
+                                 resource="joint"),
+    )
+    assert len(spec.groups()) == 6
+    result = sweep.run_sweep(spec, shards=1)
+    scal = result.scalars()
+    assert bool(scal["all_done"].all())
+    assert np.isfinite(scal["makespan"]).all()
+
+    for aa, w in ((False, 0.3), (True, 0.7)):
+        sim = Simulation(_small_cluster(4),
+                         JointCashScheduler(vecsim.IdentityRng(),
+                                            anti_affinity=aa, cpu_weight=w),
+                         SimConfig(max_time=20_000.0, resource="joint"))
+        sim.submit_parallel(_small_jobs(seed, 12, disk=True))
+        oracle = sim.run()
+        (pt,) = result.select(joint_anti_affinity=aa, joint_cpu_weight=w)
+        out = result.point_outputs(pt.index)
+        assert out["makespan"] == pytest.approx(oracle.makespan, abs=TOL)
+        assert out["surplus_credits"] == pytest.approx(
+            oracle.surplus_credits, abs=TOL)
