@@ -50,7 +50,12 @@ def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
                                  if k != "mode"}
         else:
             doc = {k: v for k, v in prev.items() if k in ("fast", "full")}
-    doc[mode] = stats
+    # mesh topology rides in THIS mode's meta: sharded throughput numbers
+    # are only comparable across machines with the same device layout, and
+    # the other mode's section may have been written on different hardware
+    from repro.sweep import mesh_topology
+
+    doc[mode] = dict(stats, meta=mesh_topology())
     return doc
 
 

@@ -14,8 +14,9 @@ arrays and advances *hundreds of scenarios at once*:
 
 One tick = release -> sequential-wave admission -> telemetry estimate ->
 three-phase placement (credit-sorted argsort + masked scatter of slot
-assignments) -> token-bucket serve (kernels.ops.bucket_serve, the Pallas /
-XLA kernel) with pro-rata work distribution -> CloudWatch observe. The
+assignments) -> fused token-bucket serve + pro-rata work distribution
+(kernels.ops.bucket_serve_distribute, the Pallas / XLA kernel: one kernel
+per pool instead of serve-then-gather) -> CloudWatch observe. The
 semantics mirror `Simulation.run` tick-for-tick; under float64
 (`jax_enable_x64`) the engine reproduces the Python oracle's makespan,
 per-job completion times and surplus credits exactly (see
@@ -698,10 +699,13 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         run_cnt = run_cnt + taken
         nidx = jnp.clip(node_of, 0, N - 1)
 
-        # ---- 5) serve: aggregate demand -> buckets -> pro-rata work ------
+        # ---- 5) serve + distribute: aggregate demand -> fused kernel -----
         # per-node reductions as ONE small matmul over a started-task
         # one-hot; masks live in the matrix columns (vmapped scatters /
-        # where-sums here dominated the sweep before)
+        # where-sums here dominated the sweep before). Each active pool
+        # then runs ops.bucket_serve_distribute — the token-bucket serve
+        # AND the per-task pro-rata share gather fused into one kernel, so
+        # nothing round-trips through a serve-then-gather pair
         onehot = jnp.where((node_of[:, None] == ids[None, :]) &
                            running[:, None], jnp.ones((), dtype), 0.0)
         cols = [jnp.where(running & (rem_cpu > 0.0), sc["dem_cpu"], 0.0)]
@@ -716,57 +720,55 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             preferred_element_type=dtype)                    # (C, N)
         dem_cpu = per_node[0]
 
-        w_cpu, cpu_bal, sur_add = ops.bucket_serve(
+        share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
             st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
-            sc["cpu_capacity"], sc["cpu_unlimited"], dt=dt, impl=cfg.impl)
+            sc["cpu_capacity"], sc["cpu_unlimited"], nidx, sc["dem_cpu"],
+            dt=dt, impl=cfg.impl)
 
         disk_bal = peak_bal = sus_bal = done_disk = done_net = None
         w_disk = w_net = zero_n
+        share_disk = share_net = None
         if act_disk:
             done_disk = st["done_disk"]
             dem_disk = per_node[1]
-            w_disk, disk_bal, _ = ops.bucket_serve(
+            share_disk, w_disk, disk_bal, _ = ops.bucket_serve_distribute(
                 st["disk_bal"], dem_disk, sc["disk_baseline"],
-                sc["disk_burst"], sc["disk_capacity"], zero_n, dt=dt,
-                impl=cfg.impl)
+                sc["disk_burst"], sc["disk_capacity"], zero_n, nidx,
+                sc["dem_disk"], dt=dt, impl=cfg.impl)
         if act_net:
             done_net = st["done_net"]
             dem_net = per_node[-1]
             # dual network regulator: shape by the peak bucket, then charge
-            # the sustained bucket for the work actually delivered
+            # the sustained bucket for the work actually delivered; shares
+            # pro-rate against the ORIGINAL aggregate demand, not the
+            # peak-shaped rate the sustained bucket is served at
             w_pk, peak_bal, _ = ops.bucket_serve(
                 st["peak_bal"], dem_net, sc["peak_baseline"],
                 sc["peak_burst"], sc["peak_capacity"], zero_n, dt=dt,
                 impl=cfg.impl)
-            w_net, sus_bal, _ = ops.bucket_serve(
+            share_net, w_net, sus_bal, _ = ops.bucket_serve_distribute(
                 st["sus_bal"], w_pk / dt, sc["sus_baseline"],
-                sc["sus_burst"], sc["sus_capacity"], zero_n, dt=dt,
-                impl=cfg.impl)
+                sc["sus_burst"], sc["sus_capacity"], zero_n, nidx,
+                sc["dem_net"], dt=dt, impl=cfg.impl, dist_demand=dem_net)
 
-        # pro-rata distribution: gather every (work, demand) node column a
-        # task needs in ONE stacked gather, then pure elementwise
-        wd_rows = [w_cpu, dem_cpu]
-        if act_disk:
-            wd_rows += [w_disk, dem_disk]
-        if act_net:
-            wd_rows += [w_net, dem_net]
-        g = jnp.stack(wd_rows)[:, nidx]                      # (2C, T)
-
-        def distribute(done, work_tot, dem_task, rem, w_t, dem_t):
-            share = jnp.where(dem_t > 0.0, w_t * dem_task / dem_t, 0.0)
-            upd = running & (rem > 0.0) & (dem_t > 0.0)
+        # fold each pool's fused share into the done counters. The share is
+        # already zero wherever the node's aggregate demand is — and done is
+        # capped at work_tot every step — so gating on the task's own
+        # liveness alone reproduces the old dem>0-masked update bit for bit
+        def apply_share(done, work_tot, rem, share):
+            upd = running & (rem > 0.0)
             return jnp.where(upd, jnp.minimum(work_tot, done + share), done)
 
-        done_cpu = distribute(st["done_cpu"], sc["work_cpu"], sc["dem_cpu"],
-                              rem_cpu, g[0], g[1])
+        done_cpu = apply_share(st["done_cpu"], sc["work_cpu"], rem_cpu,
+                               share_cpu)
         fin = rem_cpu - (done_cpu - st["done_cpu"]) <= 1e-9
         if act_disk:
-            done_disk = distribute(done_disk, sc["work_disk"], sc["dem_disk"],
-                                   rem_disk, g[2], g[3])
+            done_disk = apply_share(done_disk, sc["work_disk"], rem_disk,
+                                    share_disk)
             fin &= rem_disk - (done_disk - st["done_disk"]) <= 1e-9
         if act_net:
-            done_net = distribute(done_net, sc["work_net"], sc["dem_net"],
-                                  rem_net, g[-2], g[-1])
+            done_net = apply_share(done_net, sc["work_net"], rem_net,
+                                   share_net)
             fin &= rem_net - (done_net - st["done_net"]) <= 1e-9
 
         # tasks finishing this serve release (and free their slot) next tick
@@ -875,20 +877,47 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         "start": st["start"],
     }
     if emit_tl:
-        sidx = jnp.asarray(sample_tick_indices(cfg.n_ticks, cfg.dt,
-                                               cfg.sample_period),
-                           dtype=jnp.int32)
-        out["timeline"] = {k: v[sidx] for k, v in ys.items()}
+        # full per-tick series: `batched_engine` gathers the sample ticks
+        # ONCE per batch (still inside the compiled/sharded program)
+        out["timeline"] = ys
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "smax", "n_waves",
-                                             "n_jobs", "active"))
+def batched_engine(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
+                   active: Tuple[bool, bool, bool, bool, bool]):
+    """The whole-batch device program: the vmapped tick engine plus every
+    batch-level reduction that used to live host-side — the timeline's
+    sample-tick gather happens here, on the batch, so a sharded dispatch
+    (`repro.sweep.mesh` wraps this SAME callable in `shard_map`) keeps
+    sampled sweeps device-resident end to end. Both the single-device jit
+    path and the mesh path execute this one function — their bitwise
+    parity is structural, not coincidental."""
+    sim = functools.partial(_simulate_one, cfg, smax, n_waves, n_jobs,
+                            active)
+
+    def engine(arrays: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        out = jax.vmap(sim)(arrays)
+        if cfg.sample_period > 0.0:
+            sidx = jnp.asarray(sample_tick_indices(cfg.n_ticks, cfg.dt,
+                                                   cfg.sample_period),
+                               dtype=jnp.int32)
+            out["timeline"] = {k: v[:, sidx]
+                               for k, v in out["timeline"].items()}
+        return out
+
+    return engine
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_engine(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
+                   active: Tuple[bool, bool, bool, bool, bool]):
+    return jax.jit(batched_engine(cfg, smax, n_waves, n_jobs, active))
+
+
 def _run_batch_jit(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                    active: Tuple[bool, bool, bool, bool, bool],
                    arrays: Dict[str, jnp.ndarray]):
-    return jax.vmap(functools.partial(_simulate_one, cfg, smax,
-                                      n_waves, n_jobs, active))(arrays)
+    return _jitted_engine(cfg, smax, n_waves, n_jobs, active)(arrays)
 
 
 def batch_statics(batch: Dict[str, np.ndarray]):

@@ -28,13 +28,17 @@ _BLOCK = LANES * SUBLANES
 
 def _bucket_kernel(bal_ref, dem_ref, base_ref, burst_ref, cap_ref, unl_ref,
                    work_ref, nbal_ref, sur_ref, *, dt: float):
-    bal = bal_ref[...]
-    dem = dem_ref[...]
-    base = base_ref[...]
-    brst = burst_ref[...]
-    cap = cap_ref[...]
-    unl = unl_ref[...] > 0.5
+    work, nbal, sur = _serve_math(
+        bal_ref[...], dem_ref[...], base_ref[...], burst_ref[...],
+        cap_ref[...], unl_ref[...] > 0.5, dt=dt)
+    work_ref[...] = work
+    nbal_ref[...] = nbal
+    sur_ref[...] = sur
 
+
+def _serve_math(bal, dem, base, brst, cap, unl, *, dt: float):
+    """The bucket-serve arithmetic, shared by both kernels (must mirror
+    kernels.ref.bucket_serve_ref branch for branch)."""
     rate = jnp.minimum(dem, brst)
     drain = rate - base
     bursting = drain > 0.0
@@ -44,11 +48,10 @@ def _bucket_kernel(bal_ref, dem_ref, base_ref, burst_ref, cap_ref, unl_ref,
     over = jnp.where(unl, jnp.maximum(0.0, spent - bal), 0.0)
     work_burst = rate * t_burst + jnp.minimum(dem, base) * (dt - t_burst)
     bal_burst = jnp.maximum(0.0, bal - spent)
-
-    work_ref[...] = jnp.where(bursting, work_burst, rate * dt)
-    nbal_ref[...] = jnp.where(bursting, bal_burst,
-                              jnp.minimum(cap, bal - drain * dt))
-    sur_ref[...] = jnp.where(bursting, over, jnp.zeros_like(bal))
+    work = jnp.where(bursting, work_burst, rate * dt)
+    nbal = jnp.where(bursting, bal_burst, jnp.minimum(cap, bal - drain * dt))
+    sur = jnp.where(bursting, over, jnp.zeros_like(bal))
+    return work, nbal, sur
 
 
 def bucket_serve_pallas(balance: jax.Array, demand: jax.Array,
@@ -85,3 +88,100 @@ def bucket_serve_pallas(balance: jax.Array, demand: jax.Array,
         interpret=interpret,
     )(*args)
     return tuple(o.reshape(-1)[:n].reshape(shape) for o in out)
+
+
+# ---------------------------------------------------------------------------
+# fused serve + pro-rata distribution
+# ---------------------------------------------------------------------------
+
+def _serve_distribute_kernel(bal_ref, dem_ref, base_ref, burst_ref, cap_ref,
+                             unl_ref, dd_ref, nidx_ref, tdem_ref,
+                             share_ref, work_ref, nbal_ref, sur_ref, *,
+                             dt: float):
+    """Grid runs over task tiles; the (small) node fleet rides along whole
+    in VMEM. Each tile recomputes the node serve (a handful of elementwise
+    ops) and gathers its tasks' (work, dist-demand) node columns as a
+    one-hot matmul — exact, since every row has a single unit entry and the
+    other products are exact zeros. Only tile 0 writes the node outputs."""
+    work, nbal, sur = _serve_math(
+        bal_ref[...], dem_ref[...], base_ref[...], burst_ref[...],
+        cap_ref[...], unl_ref[...] > 0.5, dt=dt)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _write_nodes():
+        work_ref[...] = work
+        nbal_ref[...] = nbal
+        sur_ref[...] = sur
+
+    npad = work.shape[-1]
+    nidx = nidx_ref[...]
+    tdem = tdem_ref[...]
+    tb = nidx.shape[0] * nidx.shape[1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (tb, npad), 1)
+              == nidx.reshape(tb, 1)).astype(tdem.dtype)
+    node_cols = jnp.concatenate(
+        [work.reshape(npad, 1), dd_ref[...].reshape(npad, 1)], axis=1)
+    g = jnp.dot(onehot, node_cols, preferred_element_type=tdem.dtype)
+    w_t = g[:, 0].reshape(nidx.shape)
+    dd_t = g[:, 1].reshape(nidx.shape)
+    share_ref[...] = jnp.where(dd_t > 0.0, w_t * tdem / dd_t,
+                               jnp.zeros_like(tdem))
+
+
+def bucket_serve_distribute_pallas(balance: jax.Array, demand: jax.Array,
+                                   baseline: jax.Array, burst: jax.Array,
+                                   capacity: jax.Array, unlimited: jax.Array,
+                                   nidx: jax.Array, dem_task: jax.Array, *,
+                                   dt: float, dist_demand=None,
+                                   interpret: bool = False):
+    """Fused serve + pro-rata distribution (see
+    kernels.ref.bucket_serve_distribute_ref for the semantics contract).
+    Node arrays are 1-D ``(N,)`` (broadcast to ``balance``'s shape), task
+    arrays 1-D ``(T,)``; returns ``(share, work, new_balance,
+    surplus_add)`` with the serve and the per-task gather in ONE kernel."""
+    nshape = balance.shape
+    dtype = balance.dtype
+    n = balance.size
+    t = dem_task.size
+    npad = -(-n // LANES) * LANES
+
+    def prep_node(x):
+        x = jnp.broadcast_to(jnp.asarray(x, dtype), nshape).reshape(-1)
+        if npad - n:
+            # inert padding buckets: all-zero, so serve math stays finite
+            # and the one-hot matmul's zero products stay exact
+            x = jnp.concatenate([x, jnp.zeros((npad - n,), dtype)])
+        return x.reshape(1, npad)
+
+    def prep_task(x, fill_dtype):
+        x = jnp.asarray(x, fill_dtype).reshape(-1)
+        pad = (-t) % _BLOCK
+        if pad:
+            # padded tasks point at node 0 with zero demand -> zero share
+            x = jnp.concatenate([x, jnp.zeros((pad,), fill_dtype)])
+        return x.reshape(-1, LANES)
+
+    dd = demand if dist_demand is None else dist_demand
+    node_args = [prep_node(x) for x in
+                 (balance, demand, baseline, burst, capacity, unlimited, dd)]
+    task_args = [prep_task(nidx, jnp.int32), prep_task(dem_task, dtype)]
+    rows = task_args[0].shape[0]
+    grid = (rows // SUBLANES,)
+    node_spec = pl.BlockSpec((1, npad), lambda i: (0, 0))
+    task_spec = pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+    share, work, nbal, sur = pl.pallas_call(
+        functools.partial(_serve_distribute_kernel, dt=dt),
+        grid=grid,
+        in_specs=[node_spec] * 7 + [task_spec] * 2,
+        out_specs=[task_spec] + [node_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), dtype)]
+        + [jax.ShapeDtypeStruct((1, npad), dtype)] * 3,
+        # every tile maps the SAME node output block (tile 0 writes it):
+        # the grid must run sequentially, not as parallel workers
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*node_args, *task_args)
+    tshape = dem_task.shape
+    unflat = tuple(o.reshape(-1)[:n].reshape(nshape)
+                   for o in (work, nbal, sur))
+    return (share.reshape(-1)[:t].reshape(tshape),) + unflat

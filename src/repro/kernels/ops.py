@@ -18,7 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bucket_serve import bucket_serve_pallas
+from repro.kernels.bucket_serve import (
+    bucket_serve_distribute_pallas,
+    bucket_serve_pallas,
+)
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -101,9 +104,33 @@ def bucket_serve(balance: jax.Array, demand: jax.Array, baseline: jax.Array,
                                interpret=(impl == "interpret"))
 
 
+def bucket_serve_distribute(balance: jax.Array, demand: jax.Array,
+                            baseline: jax.Array, burst: jax.Array,
+                            capacity: jax.Array, unlimited: jax.Array,
+                            nidx: jax.Array, dem_task: jax.Array, *,
+                            dt: float, impl: str = "auto",
+                            dist_demand: Optional[jax.Array] = None):
+    """Fused token-bucket serve + pro-rata work distribution (core.vecsim
+    hot path): one serve step over the node fleet AND each task's share of
+    its node's delivered work in a single kernel, so the sharded sweep's
+    serve stays device-resident with no serve-then-gather round trip.
+    Returns (share, work, new_balance, surplus_add)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.bucket_serve_distribute_ref(
+            balance, demand, baseline, burst, capacity, unlimited, nidx,
+            dem_task, dt=dt, dist_demand=dist_demand)
+    return bucket_serve_distribute_pallas(
+        balance, demand, baseline, burst, capacity, unlimited, nidx,
+        dem_task, dt=dt, dist_demand=dist_demand,
+        interpret=(impl == "interpret"))
+
+
 attention_jit = jax.jit(attention, static_argnames=(
     "causal", "impl", "block_q", "block_k"))
 decode_attention_jit = jax.jit(decode_attention, static_argnames=(
     "impl", "block_k"))
 ssd_jit = jax.jit(ssd, static_argnames=("chunk", "impl"))
 bucket_serve_jit = jax.jit(bucket_serve, static_argnames=("dt", "impl"))
+bucket_serve_distribute_jit = jax.jit(bucket_serve_distribute,
+                                      static_argnames=("dt", "impl"))

@@ -153,6 +153,37 @@ def bucket_serve_ref(balance: jax.Array, demand: jax.Array, baseline: jax.Array,
     return work, new_balance, surplus_add
 
 
+def bucket_serve_distribute_ref(balance: jax.Array, demand: jax.Array,
+                                baseline: jax.Array, burst: jax.Array,
+                                capacity: jax.Array, unlimited: jax.Array,
+                                nidx: jax.Array, dem_task: jax.Array, *,
+                                dt: float,
+                                dist_demand: Optional[jax.Array] = None):
+    """Fused token-bucket serve + pro-rata work distribution.
+
+    One ``dt`` serve step over the node fleet (``bucket_serve_ref``)
+    followed by each task's share of its node's delivered work, in one op:
+    ``share[t] = work[nidx[t]] * dem_task[t] / dist_demand[nidx[t]]`` (zero
+    where the node's aggregate demand is zero). ``nidx`` (T,) maps tasks to
+    their (clipped) node; ``dist_demand`` is the per-node aggregate demand
+    the pro-rata rule divides by and defaults to ``demand`` — the network
+    dual regulator serves the sustained bucket at the peak-shaped rate but
+    distributes against the *original* aggregate demand, so the two differ
+    there.
+
+    Returns ``(share, work, new_balance, surplus_add)``; the task never
+    sees node-level state, so a sharded sweep's serve step stays one kernel
+    instead of serve-then-gather. Bitwise-identical to the unfused
+    serve + stacked-gather formulation under float64.
+    """
+    work, new_balance, surplus_add = bucket_serve_ref(
+        balance, demand, baseline, burst, capacity, unlimited, dt=dt)
+    dd = demand if dist_demand is None else dist_demand
+    w_t, dd_t = work[nidx], dd[nidx]
+    share = jnp.where(dd_t > 0.0, w_t * dem_task / dd_t, 0.0)
+    return share, work, new_balance, surplus_add
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD
 # ---------------------------------------------------------------------------

@@ -39,7 +39,7 @@ from repro.distributed import sharding as SH
 from repro.kernels import ops as KOPS
 from repro.launch import specs as SP
 from repro.launch.hlo_analysis import collective_bytes
-from repro.launch.mesh import make_production_mesh
+from repro.sweep.mesh import make_production_mesh
 from repro.models import model as MD
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 from repro.train.step import jit_serve_step, jit_train_step

@@ -2,23 +2,43 @@
 
 Dataflow: **spec** (declare a cartesian grid over `VecSimConfig` fields +
 scenario-builder params) → **group** (partition points by static config;
-one jit compile each) → **shard** (scenario axis across local devices via
-`jax.pmap`, chunked + resumable) → **stream** (per-tick timeline ys at
-`sample_period`) → **aggregate** (`SweepResult` JSON/NPZ artifact keyed by
+one jit compile each) → **mesh** (scenario axis over a named device mesh
+via `shard_map`, chunked + work-queue checkpointed so several hosts drain
+one grid) → **stream** (per-tick timeline ys at `sample_period`, gathered
+device-side) → **aggregate** (`SweepResult` JSON/NPZ artifact keyed by
 grid coordinates).
 """
+from repro.sweep.mesh import (
+    SCENARIO_AXIS,
+    make_local_mesh,
+    make_production_mesh,
+    mesh_topology,
+    scenario_mesh,
+)
 from repro.sweep.results import GroupResult, SweepResult
-from repro.sweep.runner import RunnerOptions, device_count, run_group, run_sweep
+from repro.sweep.runner import (
+    RunnerOptions,
+    WorkQueue,
+    device_count,
+    run_group,
+    run_sweep,
+)
 from repro.sweep.spec import CompileGroup, SweepPoint, SweepSpec
 
 __all__ = [
     "CompileGroup",
     "GroupResult",
     "RunnerOptions",
+    "SCENARIO_AXIS",
     "SweepPoint",
     "SweepResult",
     "SweepSpec",
+    "WorkQueue",
     "device_count",
+    "make_local_mesh",
+    "make_production_mesh",
+    "mesh_topology",
     "run_group",
     "run_sweep",
+    "scenario_mesh",
 ]

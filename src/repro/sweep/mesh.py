@@ -1,0 +1,134 @@
+"""Mesh-native scenario-axis execution: a named ``scenario`` axis over the
+local devices, with the batched tick engine dispatched through `shard_map`.
+
+This is the device layer under `sweep.runner`: the runner stacks, chunks
+and checkpoints; this module owns *where the arrays live*. A group's
+stacked batch ``[B, ...]`` pads the scenario axis to a multiple of the
+shard count (repeating scenario 0 — scenarios are independent under
+``vmap``, so padding never perturbs real rows) and runs ONE jitted
+`shard_map` of `vecsim.batched_engine` over a 1-D `jax.sharding.Mesh`
+whose only axis is ``scenario``: each device scans its ``B/D`` block while
+the others run theirs, and the timeline's sample-tick gather happens
+*inside* the sharded program, so sampled sweeps stay device-resident end
+to end. Because the sharded path wraps the SAME `batched_engine` callable
+the single-device jit path runs, per-scenario results are bitwise
+identical between the two (asserted by `tests/test_sweep.py` and the
+``sweep/smoke`` benchmark under forced host-platform device counts).
+
+The module also hosts the production mesh constructors (absorbed from the
+seed's ``launch/mesh.py``): the serving dry-run builds its ``(data,
+model)`` / ``(pod, data, model)`` meshes from here too, keeping every mesh
+shape the repo uses in one place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.core import vecsim
+
+SCENARIO_AXIS = "scenario"
+
+
+def device_count() -> int:
+    """Local devices available for scenario-axis sharding (force >1 on CPU
+    hosts with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    return len(jax.local_devices())
+
+
+@functools.lru_cache(maxsize=None)
+def scenario_mesh(n_shards: Optional[int] = None) -> Mesh:
+    """A 1-D mesh named ``scenario`` over the first ``n_shards`` local
+    devices (all of them by default)."""
+    devs = jax.local_devices()
+    n = len(devs) if n_shards is None else n_shards
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_shards={n} outside [1, {len(devs)}] "
+                         "local devices")
+    return Mesh(np.asarray(devs[:n]), (SCENARIO_AXIS,))
+
+
+def mesh_topology() -> Dict[str, Any]:
+    """What the sweep ran on — recorded next to throughput numbers so
+    sharded results stay comparable across machines."""
+    return {
+        "devices": device_count(),
+        "platform": jax.default_backend(),
+        "jax": jax.__version__,
+        "axis": SCENARIO_AXIS,
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_engine(cfg: vecsim.VecSimConfig, smax: int, n_waves: int,
+                    n_jobs: int, active: Tuple[bool, ...], n_shards: int,
+                    donate: bool):
+    """jit(shard_map(batched_engine)) over the scenario mesh — one compile
+    per (static config, shard count)."""
+    engine = vecsim.batched_engine(cfg, smax, n_waves, n_jobs, active)
+    spec = PartitionSpec(SCENARIO_AXIS)
+    fn = shard_map(engine, mesh=scenario_mesh(n_shards),
+                   in_specs=spec, out_specs=spec)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def pad_rows(arrays: Dict[str, np.ndarray],
+             target: int) -> Dict[str, np.ndarray]:
+    """Pad the leading scenario axis to exactly ``target`` rows by
+    repeating row 0 — scenarios are independent under ``vmap``, so padding
+    never perturbs real rows. The ONE home of that invariant: shard
+    padding and the runner's ragged-tail chunk padding both call this."""
+    b = int(next(iter(arrays.values())).shape[0])
+    pad = target - b
+    if pad <= 0:
+        return arrays
+
+    def grow(v: np.ndarray) -> np.ndarray:
+        v = np.asarray(v)
+        return np.concatenate([v, np.repeat(v[:1], pad, axis=0)])
+
+    return {k: grow(v) for k, v in arrays.items()}
+
+
+def pad_scenario_axis(arrays: Dict[str, np.ndarray],
+                      n_shards: int) -> Tuple[Dict[str, np.ndarray], int]:
+    """Pad the scenario axis to a multiple of ``n_shards``. Returns
+    ``(padded arrays, real B)``."""
+    b = int(next(iter(arrays.values())).shape[0])
+    return pad_rows(arrays, b + (-b) % n_shards), b
+
+
+def run_sharded(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
+                statics, n_shards: int, *,
+                donate: bool = False) -> Dict[str, Any]:
+    """Dispatch one stacked batch over ``n_shards`` devices. Returns raw
+    engine outputs (numpy, padding rows dropped) — the caller finalizes."""
+    smax, n_waves, n_jobs, active = statics
+    padded, n_real = pad_scenario_axis(
+        {k: np.asarray(v) for k, v in arrays.items()}, n_shards)
+    fn = _sharded_engine(cfg, smax, n_waves, n_jobs, active, n_shards,
+                         donate)
+    out = fn(padded)
+    return jax.tree_util.tree_map(lambda v: np.asarray(v)[:n_real], out)
+
+
+# ---------------------------------------------------------------------------
+# production mesh shapes (absorbed from the seed's launch/mesh.py)
+# ---------------------------------------------------------------------------
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Brief-mandated serving/training mesh shapes."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Mesh over whatever devices exist (CPU smoke / single host)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,35 +1,42 @@
-"""Sharded sweep runner: chunked, resumable execution of compile groups
-with the *scenario axis* sharded across local devices.
+"""Sharded sweep runner: chunked, resumable, multi-host-drainable
+execution of compile groups with the *scenario axis* sharded over a named
+device mesh.
 
-Layout: a group's stacked batch ``[B, ...]`` pads the scenario axis to a
-multiple of the shard count ``D`` (repeating scenario 0 — scenarios are
-independent under ``vmap``, so padding never perturbs real rows), reshapes
-to ``[D, B/D, ...]`` and dispatches one ``jax.pmap`` of the vmapped tick
-engine: device ``d`` scans its ``B/D`` scenarios while the others run
-theirs. ``shards=1`` (or a single-device platform) falls back to the plain
-jitted ``vmap`` path — bitwise-identical per-scenario results, which
-`tests/test_sweep.py` and the ``sweep/smoke`` benchmark assert.
+Layout: a group's stacked batch ``[B, ...]`` dispatches through
+`repro.sweep.mesh` — one jitted `shard_map` of the batched tick engine
+over a 1-D ``scenario`` mesh: device ``d`` scans its ``B/D`` block while
+the others run theirs, timeline sampling included, so sampled sweeps stay
+device-resident end to end. ``shards=1`` (or a single-device platform)
+falls back to the plain jitted ``vmap`` path — both paths execute the
+SAME `vecsim.batched_engine` callable, so per-scenario results are
+bitwise-identical (asserted by `tests/test_sweep.py` and the
+``sweep/smoke`` benchmark).
 
 Chunking slices the *stacked* group batch, so every chunk shares the
 group's padded dims and static flags: one compile per group regardless of
 chunk count, and chunked results concatenate (and bit-match) the unchunked
-run. With ``checkpoint_dir`` set, each finished chunk persists as an NPZ;
-re-running the same spec resumes after the last completed chunk — the
-1k+-scenario calibration-sweep workflow.
+run. With ``checkpoint_dir`` set the chunk store is a **work queue**:
+finished chunks persist as atomically-renamed NPZs and in-flight chunks
+are guarded by claim-file leases, so several host processes pointed at the
+same directory drain one calibration grid concurrently with zero
+double-compute — and any of them resumes cleanly after a crash.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import hashlib
 import json
+import os
 import pathlib
 import time
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+import uuid
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
-import jax
 import numpy as np
 
 from repro.core import vecsim
+from repro.sweep import mesh
+from repro.sweep.mesh import device_count
 from repro.sweep.results import (
     GROUP_LEVEL_OUTPUTS,
     GroupResult,
@@ -40,31 +47,19 @@ from repro.sweep.results import (
 from repro.sweep.spec import CompileGroup, SweepSpec
 
 
-def device_count() -> int:
-    """Local devices available for scenario-axis sharding (force >1 on CPU
-    hosts with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
-    return len(jax.local_devices())
-
-
 @dataclasses.dataclass(frozen=True)
 class RunnerOptions:
     shards: Optional[int] = None     # None = all local devices; 1 = vmap path
     chunk_size: Optional[int] = None  # scenarios per dispatch (None = group)
-    checkpoint_dir: Optional[str] = None  # resumable chunk store
+    checkpoint_dir: Optional[str] = None  # resumable multi-host work queue
     donate: bool = False             # donate chunk arrays (no-op on CPU)
+    lease_s: float = 900.0           # claim lease before takeover
+    poll_s: float = 0.1              # wait between passes over peers' chunks
 
 
 # --------------------------------------------------------------------------
-# sharded dispatch
+# sharded dispatch (device layer lives in repro.sweep.mesh)
 # --------------------------------------------------------------------------
-
-@functools.lru_cache(maxsize=None)
-def _pmapped_engine(cfg: vecsim.VecSimConfig, smax: int, n_waves: int,
-                    n_jobs: int, active: Tuple[bool, ...], donate: bool):
-    fn = jax.vmap(functools.partial(vecsim._simulate_one, cfg, smax,
-                                    n_waves, n_jobs, active))
-    return jax.pmap(fn, donate_argnums=(0,) if donate else ())
-
 
 def _resolve_shards(shards: Optional[int], n_scenarios: int) -> int:
     if shards is None:
@@ -75,32 +70,6 @@ def _resolve_shards(shards: Optional[int], n_scenarios: int) -> int:
         raise ValueError(f"shards={shards} exceeds the {device_count()} "
                          "available devices")
     return max(1, min(shards, n_scenarios))
-
-
-def _shard_arrays(arrays: Dict[str, np.ndarray],
-                  n_shards: int) -> Tuple[Dict[str, np.ndarray], int]:
-    """Pad the scenario axis to a multiple of ``n_shards`` (repeating row 0)
-    and fold it into ``[D, B/D, ...]``. Returns (sharded arrays, real B)."""
-    b = int(next(iter(arrays.values())).shape[0])
-    per = -(-b // n_shards)
-    pad = n_shards * per - b
-
-    def fold(v: np.ndarray) -> np.ndarray:
-        v = np.asarray(v)
-        if pad:
-            v = np.concatenate([v, np.repeat(v[:1], pad, axis=0)])
-        return v.reshape((n_shards, per) + v.shape[1:])
-
-    return {k: fold(v) for k, v in arrays.items()}, b
-
-
-def _unshard(out: Any, n_real: int) -> Any:
-    """[D, B/D, ...] outputs -> [B, ...] with padding rows dropped."""
-    def unfold(v):
-        v = np.asarray(v)
-        return v.reshape((-1,) + v.shape[2:])[:n_real]
-
-    return jax.tree_util.tree_map(unfold, out)
 
 
 def run_group(batch: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig, *,
@@ -123,34 +92,90 @@ def _run_arrays(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
         out = vecsim._run_batch_jit(cfg, smax, n_waves, n_jobs, active,
                                     {k: np.asarray(v)
                                      for k, v in arrays.items()})
-        return vecsim.finalize_outputs(out, cfg)
-    sharded, n_real = _shard_arrays(arrays, n_shards)
-    fn = _pmapped_engine(cfg, smax, n_waves, n_jobs, active, donate)
-    out = _unshard(fn(sharded), n_real)
+    else:
+        out = mesh.run_sharded(arrays, cfg, statics, n_shards,
+                               donate=donate)
     return vecsim.finalize_outputs(out, cfg)
 
 
 # --------------------------------------------------------------------------
-# chunked, resumable sweep execution
+# work-queue checkpoint store (multi-host drainable)
 # --------------------------------------------------------------------------
 
-class _Checkpoint:
-    """Per-chunk NPZ store guarded by a spec fingerprint manifest."""
+_MANIFEST_WHAT = {
+    "spec": "spec axes/base (a different sweep grid)",
+    "chunk_size": "chunk_size (saved chunks would slice the stacked "
+                  "batch differently)",
+    "layout": "resolved group configs / scenario content (a changed "
+              "`configure` hook or an edited builder)",
+}
 
-    def __init__(self, directory: Union[str, pathlib.Path], fingerprint: str):
+
+class WorkQueue:
+    """Per-(group, chunk) NPZ store several host processes can drain.
+
+    Three on-disk facts, all transitioned atomically:
+
+      * ``manifest.json`` — the sweep fingerprint plus its components
+        (spec, chunk_size, group layout), written tmp-then-rename; a
+        mismatch refuses the directory and names *what* changed.
+      * ``group*_chunk*.npz`` — a finished chunk, written tmp-then-rename
+        so readers never observe a torn file.
+      * ``group*_chunk*.claim`` — an in-flight lease, created with
+        ``O_CREAT|O_EXCL`` (atomic test-and-set); a claim older than
+        ``lease_s`` is presumed dead and stolen by renaming it aside
+        (exactly one stealer's rename succeeds).
+
+    Leftover ``*.tmp.npz`` from a crashed mid-save are ignored by readers
+    (loads address final paths only) and swept on startup once stale.
+    """
+
+    def __init__(self, directory: Union[str, pathlib.Path],
+                 fingerprint: str,
+                 components: Optional[Dict[str, str]] = None, *,
+                 lease_s: float = 900.0, poll_s: float = 0.1):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
-        manifest = self.dir / "manifest.json"
-        if manifest.exists():
-            prev = json.loads(manifest.read_text())
-            if prev.get("fingerprint") != fingerprint:
-                raise ValueError(
-                    f"checkpoint dir {self.dir} holds a different sweep "
-                    f"(fingerprint {prev.get('fingerprint')!r} != "
-                    f"{fingerprint!r}); point it elsewhere or clear it")
-        else:
-            manifest.write_text(json.dumps({"fingerprint": fingerprint}))
+        self.lease_s = lease_s
+        self.poll_s = poll_s
+        self.owner = f"{os.getpid()}-{uuid.uuid4().hex[:8]}"
+        self._check_manifest(fingerprint, components or {})
+        self._sweep_stale_tmp()
 
+    # ------------------------------------------------------------- manifest
+    def _check_manifest(self, fingerprint: str,
+                        components: Dict[str, str]) -> None:
+        path = self.dir / "manifest.json"
+        if path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("fingerprint") == fingerprint:
+                return
+            old = prev.get("components", {})
+            changed = [k for k in components
+                       if old.get(k) != components[k]] or ["fingerprint"]
+            what = "; ".join(_MANIFEST_WHAT.get(k, k) for k in changed)
+            raise ValueError(
+                f"checkpoint dir {self.dir} holds a different sweep — "
+                f"changed: {what} (fingerprint {prev.get('fingerprint')!r}"
+                f" != {fingerprint!r}); point it elsewhere or clear it")
+        doc = {"fingerprint": fingerprint, "components": components}
+        tmp = path.with_name(f"manifest.{self.owner}.tmp.json")
+        tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        tmp.replace(path)  # atomic: concurrent writers race to same bytes
+
+    def _sweep_stale_tmp(self) -> None:
+        """Drop ``*.tmp.*`` debris from crashed saves. Age-gated on the
+        lease so a live peer's in-flight tmp is never yanked away."""
+        now = time.time()
+        for pat in ("*.tmp.npz", "*.tmp.json", "*.claim.stale.*"):
+            for f in self.dir.glob(pat):
+                try:
+                    if now - f.stat().st_mtime > self.lease_s:
+                        f.unlink(missing_ok=True)
+                except FileNotFoundError:
+                    pass
+
+    # ---------------------------------------------------------------- chunks
     def _path(self, gi: int, ci: int) -> pathlib.Path:
         return self.dir / f"group{gi:03d}_chunk{ci:04d}.npz"
 
@@ -163,9 +188,60 @@ class _Checkpoint:
 
     def save(self, gi: int, ci: int, outputs: Dict[str, Any]) -> None:
         p = self._path(gi, ci)
-        tmp = p.with_suffix(".tmp.npz")
+        # owner-unique tmp name: two workers can never collide mid-save
+        tmp = p.with_name(f"{p.stem}.{self.owner}.tmp.npz")
         np.savez_compressed(tmp, **flatten_outputs(outputs))
         tmp.replace(p)
+
+    # ---------------------------------------------------------------- claims
+    def _claim_path(self, gi: int, ci: int) -> pathlib.Path:
+        return self.dir / f"group{gi:03d}_chunk{ci:04d}.claim"
+
+    def try_claim(self, gi: int, ci: int) -> bool:
+        """Atomically claim (group, chunk) for this process. False means a
+        live peer holds it — poll `load` for its finished NPZ instead.
+
+        The claim's mtime is the lease clock and is written once: a chunk
+        whose compute exceeds ``lease_s`` can be presumed dead and stolen
+        by a peer, so size ``lease_s`` above the worst-case chunk wall
+        time (`RunnerOptions.lease_s`). `release` is ownership-checked, so
+        even then a slow owner never yanks the thief's live claim."""
+        path = self._claim_path(gi, ci)
+        for _ in range(3):
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    age = time.time() - path.stat().st_mtime
+                except FileNotFoundError:
+                    continue                    # released just now — retry
+                if age <= self.lease_s:
+                    return False
+                # stale lease: move it aside (atomic — one stealer wins),
+                # then race for a fresh claim
+                aside = path.with_name(
+                    f"{path.name}.stale.{self.owner}")
+                try:
+                    os.rename(path, aside)
+                except FileNotFoundError:
+                    continue
+                aside.unlink(missing_ok=True)
+                continue
+            with os.fdopen(fd, "w") as f:
+                json.dump({"owner": self.owner, "t": time.time()}, f)
+            return True
+        return False
+
+    def release(self, gi: int, ci: int) -> None:
+        """Drop OUR claim. Ownership-checked: if the lease expired mid-
+        compute and a peer stole it, the live thief's claim stays put."""
+        path = self._claim_path(gi, ci)
+        try:
+            if json.loads(path.read_text()).get("owner") != self.owner:
+                return
+        except (FileNotFoundError, json.JSONDecodeError):
+            return
+        path.unlink(missing_ok=True)
 
 
 def _trim_outputs(out: Dict[str, Any], n_real: int) -> Dict[str, Any]:
@@ -207,7 +283,9 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
               checkpoint_dir: Optional[str] = None) -> SweepResult:
     """Execute a sweep spec (or pre-built compile groups): stack each group
     once, run it in (optionally sharded, optionally chunked) dispatches,
-    and aggregate a `SweepResult`.
+    and aggregate a `SweepResult`. With ``checkpoint_dir`` set the chunk
+    store doubles as a work queue — start the same call in several
+    processes and they drain the grid together.
 
     Keyword args override the corresponding `RunnerOptions` fields.
     """
@@ -222,74 +300,116 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
     if isinstance(spec, SweepSpec):
         groups = spec.groups()
         axes = spec.axes
-        fingerprint = spec.fingerprint()
+        spec_fp = spec.fingerprint()
     else:
         groups = list(spec)
         axes = {}
-        fingerprint = f"groups:{len(groups)}"
+        spec_fp = f"groups:{len(groups)}"
 
-    # chunk layout and the *resolved* group configs must match for saved
-    # chunks to be reusable: chunk_size changes re-slice the arrays, and a
-    # changed `configure` hook changes what a point's config means without
-    # touching the axes the spec fingerprint hashes
-    import hashlib
-
-    layout = hashlib.sha256(",".join(
-        f"{len(g)}@{g.cfg!r}" for g in groups).encode()).hexdigest()[:12]
-    fingerprint += f":chunk={opts.chunk_size}:{layout}"
-    ckpt = (_Checkpoint(opts.checkpoint_dir, fingerprint)
-            if opts.checkpoint_dir else None)
+    # chunk layout, the *resolved* group configs AND the scenario content
+    # must match for saved chunks to be reusable: chunk_size changes
+    # re-slice the arrays, a changed `configure` hook changes what a
+    # point's config means, and an edited builder changes the scenarios
+    # themselves — all without touching the axes the spec fingerprint
+    # hashes. The components ride along in the manifest so a mismatch can
+    # say WHAT changed.
+    ckpt = None
+    if opts.checkpoint_dir:
+        layout = hashlib.sha256(",".join(
+            g.content_digest() for g in groups).encode()).hexdigest()[:12]
+        components = {"spec": spec_fp, "chunk_size": repr(opts.chunk_size),
+                      "layout": layout}
+        fingerprint = f"{spec_fp}:chunk={opts.chunk_size}:{layout}"
+        ckpt = WorkQueue(opts.checkpoint_dir, fingerprint, components,
+                         lease_s=opts.lease_s, poll_s=opts.poll_s)
 
     t0 = time.perf_counter()
     n_scen = 0
     n_cached = 0
     scen_ticks = 0
-    results: List[GroupResult] = []
+    # ONE flat work pool across ALL groups: a worker blocked on one
+    # group's peer-claimed chunks claims unstarted chunks elsewhere
+    # instead of sleeping, so multi-host drains of multi-group grids never
+    # serialize on group order. Groups still stack lazily (and memoized,
+    # via `CompileGroup.stacked_batch`) on their first computed chunk:
+    # chunks slice the stacked arrays, so padded dims and static flags are
+    # group-wide (one compile per group, chunked == unchunked bitwise),
+    # and a group fully drained from the queue never stacks at all.
+    steps: Dict[int, int] = {}
+    outs: Dict[int, Dict[int, Dict[str, Any]]] = {}
+    cached: Dict[int, int] = {}
+    stacked: Dict[int, Any] = {}    # gi -> (statics, arrays)
+    pool: List[Tuple[int, int]] = []
     for gi, g in enumerate(groups):
-        # stack the WHOLE group once — but lazily, on the first chunk that
-        # actually computes: chunks slice the stacked arrays, so padded
-        # dims and static flags are group-wide (one compile per group,
-        # chunked == unchunked bitwise), while a fully checkpoint-resumed
-        # group skips the host-side stacking cost entirely
-        statics = arrays = None
         n = len(g.scenarios)
-        step = opts.chunk_size or n
-        chunk_outs: List[Dict[str, Any]] = []
-        g_cached = 0
-        for ci, lo in enumerate(range(0, n, step)):
-            real = min(step, n - lo)
-            pad_tail = real < step and lo > 0
+        steps[gi] = opts.chunk_size or max(n, 1)
+        outs[gi] = {}
+        cached[gi] = 0
+        pool.extend((gi, ci) for ci in range(-(-n // steps[gi])))
+
+    while pool:
+        progressed = False
+        still: List[Tuple[int, int]] = []
+        for gi, ci in pool:
+            g = groups[gi]
+            step = steps[gi]
+            lo = ci * step
+            real = min(step, len(g.scenarios) - lo)
             out = ckpt.load(gi, ci) if ckpt else None
-            if out is None:
-                if arrays is None:
-                    batch = vecsim.stack_scenarios(g.scenarios)
-                    statics = vecsim.batch_statics(batch)
-                    arrays = vecsim.batch_arrays(batch)
+            if out is None and ckpt is not None:
+                if not ckpt.try_claim(gi, ci):
+                    still.append((gi, ci))   # a live peer is computing it
+                    continue
+                # close the load->claim window: a peer may have saved and
+                # released between our miss and our claim — use its chunk
+                # rather than recomputing it
+                out = ckpt.load(gi, ci)
+                if out is not None:
+                    ckpt.release(gi, ci)
+            if out is not None:
+                outs[gi][ci] = out
+                cached[gi] += real
+                progressed = True
+                continue
+            try:
+                if gi not in stacked:
+                    batch = g.stacked_batch()
+                    stacked[gi] = (vecsim.batch_statics(batch),
+                                   vecsim.batch_arrays(batch))
+                statics, arrays = stacked[gi]
                 sub = {k: v[lo:lo + step] for k, v in arrays.items()}
+                pad_tail = real < step and lo > 0
                 if pad_tail:
                     # pad the ragged tail chunk to the uniform chunk shape
-                    # (repeating row 0) so every chunk hits ONE compiled
-                    # program; pad rows are dropped right after
-                    sub = {k: np.concatenate(
-                        [v, np.repeat(v[:1], step - real, axis=0)])
-                        for k, v in sub.items()}
+                    # so every chunk hits ONE compiled program; pad rows
+                    # are dropped right after
+                    sub = mesh.pad_rows(sub, step)
                 out = _run_arrays(sub, g.cfg, statics, opts.shards,
                                   opts.donate)
                 if pad_tail:
                     out = _trim_outputs(out, real)
                 if ckpt:
                     ckpt.save(gi, ci, out)
-            else:
-                g_cached += real
-            chunk_outs.append(out)
-        results.append(GroupResult(g.cfg, g.points,
-                                   _concat_outputs(chunk_outs)))
+            finally:
+                if ckpt:
+                    ckpt.release(gi, ci)
+            outs[gi][ci] = out
+            progressed = True
+        pool = still
+        if pool and not progressed:
+            time.sleep(ckpt.poll_s)   # peers hold every pending chunk
+
+    results: List[GroupResult] = []
+    for gi, g in enumerate(groups):
+        n = len(g.scenarios)
+        results.append(GroupResult(g.cfg, g.points, _concat_outputs(
+            [outs[gi][ci] for ci in range(-(-n // steps[gi]))])))
         n_scen += n
-        n_cached += g_cached
+        n_cached += cached[gi]
         # throughput counts only scenarios actually computed this run —
-        # checkpoint-resumed chunks are loads, not work
+        # queue-drained chunks (resumed or peer-computed) are loads, not work
         n_nodes = max((len(s["slots"]) for s in g.scenarios), default=0)
-        scen_ticks += (n - g_cached) * g.cfg.n_ticks * n_nodes
+        scen_ticks += (n - cached[gi]) * g.cfg.n_ticks * n_nodes
     wall = time.perf_counter() - t0
     meta = {
         "wall_s": wall,
@@ -298,6 +418,8 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
         "shards": _resolve_shards(opts.shards, max(n_scen, 1)),
         "chunk_size": opts.chunk_size,
         "resumed_scenarios": n_cached,
+        "computed_scenarios": n_scen - n_cached,
+        "mesh": mesh.mesh_topology(),
         "ticks_nodes_scen_per_s": scen_ticks / max(wall, 1e-9),
     }
     return SweepResult(axes, results, meta)

@@ -36,6 +36,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import vecsim
 from repro.core.vecsim import VecSimConfig
 
 CFG_FIELDS = frozenset(f.name for f in dataclasses.fields(VecSimConfig))
@@ -63,9 +64,40 @@ class CompileGroup:
     cfg: VecSimConfig
     points: List[SweepPoint]
     scenarios: List[Scenario]
+    _batch: Optional[Scenario] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __len__(self) -> int:
         return len(self.points)
+
+    def stacked_batch(self) -> Scenario:
+        """Stack (and memoize) the group's scenarios: repeated `run_sweep`
+        calls over the same groups — e.g. a vmap baseline then several
+        shard widths — pay the host-side stacking once. The memo keeps one
+        stacked copy alive as long as the caller holds the group; set
+        ``g._batch = None`` to free it after the last dispatch."""
+        if self._batch is None:
+            self._batch = vecsim.stack_scenarios(self.scenarios)
+        return self._batch
+
+    def content_digest(self) -> str:
+        """Hash of the resolved config + every scenario's arrays. Folded
+        into the checkpoint manifest so an edited builder (same axes, new
+        scenario content) refuses stale chunks instead of silently
+        resuming them."""
+        import hashlib
+
+        h = hashlib.sha256()
+        h.update(f"{len(self)}@{self.cfg!r}".encode())
+        for s in self.scenarios:
+            for k in sorted(s):
+                v = np.asarray(s[k])
+                # key, dtype AND shape delimit the raw bytes: a reshape
+                # (or a key whose name is another's prefix) must change
+                # the digest, not just the payload
+                h.update(f"{k}:{v.dtype}:{v.shape};".encode())
+                h.update(v.tobytes())
+        return h.hexdigest()
 
 
 class SweepSpec:

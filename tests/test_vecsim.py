@@ -287,6 +287,44 @@ def test_bucket_serve_pallas_interpret_matches_xla():
                                    rtol=1e-12, atol=1e-12)
 
 
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+@pytest.mark.parametrize("split_dist", [False, True])
+def test_bucket_serve_distribute_fused_matches_unfused(impl, split_dist):
+    """ISSUE 5 acceptance: the fused serve+distribute op must match the
+    unfused serve-then-stacked-gather formulation bitwise in float64, on
+    both the XLA reference and the Pallas interpret path, with and without
+    a distinct distribution demand (the network dual-regulator case)."""
+    rng = np.random.RandomState(7)
+    n, t = 11, 333          # ragged vs both the lane and the task tile
+    baseline = rng.uniform(0.0, 5.0, n)
+    burst = baseline + rng.uniform(0.0, 5.0, n)
+    cap = rng.uniform(10.0, 1000.0, n)
+    bal = cap * rng.uniform(0.0, 1.0, n)
+    dem = rng.uniform(0.0, 12.0, n)
+    dem[0] = 0.0            # an idle node: its tasks' shares must be zero
+    unl = (rng.uniform(size=n) < 0.5).astype(np.float64)
+    nidx = rng.randint(0, n, t).astype(np.int32)
+    dem_task = rng.uniform(0.0, 2.0, t)
+    dist = rng.uniform(0.0, 12.0, n) if split_dist else None
+
+    # unfused reference: serve, then the old stacked gather + pro-rata
+    w, nb, sur = ref.bucket_serve_ref(bal, dem, baseline, burst, cap, unl,
+                                      dt=1.0)
+    dd = dem if dist is None else dist
+    g = np.stack([np.asarray(w), np.asarray(dd)])[:, nidx]
+    share_ref = np.zeros_like(dem_task)
+    m = g[1] > 0.0
+    share_ref[m] = g[0][m] * dem_task[m] / g[1][m]
+
+    share, w2, nb2, sur2 = ops.bucket_serve_distribute(
+        bal, dem, baseline, burst, cap, unl, nidx, dem_task, dt=1.0,
+        impl=impl, dist_demand=dist)
+    np.testing.assert_array_equal(np.asarray(share), share_ref)
+    np.testing.assert_array_equal(np.asarray(w2), np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(nb2), np.asarray(nb))
+    np.testing.assert_array_equal(np.asarray(sur2), np.asarray(sur))
+
+
 def test_vecsim_interpret_impl_smoke():
     """The whole engine runs with the Pallas kernel in interpret mode."""
     jobs = _mixed_jobs(2, n_jobs=1, tasks_per=3, net=False, disk=False)
