@@ -14,7 +14,10 @@ exercised even on single-accelerator CI hosts.
 Both modes write ``BENCH_vecsim.json`` (Python-loop vs vectorized
 throughput). The file keeps one section per mode — ``{"fast": {...},
 "full": {...}}`` — so a fast CI run never overwrites the full-mode numbers
-and the perf trajectory stays comparable PR over PR.
+and the perf trajectory stays comparable PR over PR. A ``"traffic"``
+section (benchmarks/traffic_bench.py) tracks the open-loop ring-buffer
+engine: CASH-vs-stock SLO tails plus throughput relative to the
+closed-batch path.
 """
 from __future__ import annotations
 
@@ -49,7 +52,8 @@ def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
             doc[prev["mode"]] = {k: v for k, v in prev.items()
                                  if k != "mode"}
         else:
-            doc = {k: v for k, v in prev.items() if k in ("fast", "full")}
+            doc = {k: v for k, v in prev.items()
+                   if k in ("fast", "full", "traffic")}
     # mesh topology rides in THIS mode's meta: sharded throughput numbers
     # are only comparable across machines with the same device layout, and
     # the other mode's section may have been written on different hardware
@@ -80,6 +84,7 @@ def main(argv=None) -> None:
         roofline,
         sweep_smoke,
         tables,
+        traffic_bench,
         vecsim_bench,
     )
     batched = [
@@ -115,17 +120,31 @@ def main(argv=None) -> None:
             failures.append((name, e))
             traceback.print_exc()
 
-    # vecsim throughput JSON: the tracked perf metric, one section per mode
+    # vecsim throughput JSON: the tracked perf metric, one section per mode,
+    # plus a "traffic" section for the open-loop ring-buffer engine
+    mode = "fast" if args.fast else "full"
+    out_path = pathlib.Path(args.out)
+    doc = None
     try:
         stats = vecsim_bench.run(fast=args.fast)
-        mode = "fast" if args.fast else "full"
-        out_path = pathlib.Path(args.out)
         doc = _merged_bench(out_path, mode, stats)
-        out_path.write_text(json.dumps(doc, indent=2) + "\n")
-        print(f"wrote {args.out} [{mode}]", file=sys.stderr)
     except Exception as e:  # noqa: BLE001
         failures.append(("vecsim_bench", e))
         traceback.print_exc()
+    try:
+        tstats = traffic_bench.run(fast=args.fast)
+        from repro.sweep import mesh_topology
+
+        if doc is None:
+            doc = _merged_bench(out_path, mode, {})
+            doc.pop(mode, None)         # vecsim_bench failed: keep prior
+        doc["traffic"] = dict(tstats, meta=mesh_topology())
+    except Exception as e:  # noqa: BLE001
+        failures.append(("traffic_bench", e))
+        traceback.print_exc()
+    if doc is not None:
+        out_path.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"wrote {args.out} [{mode}]", file=sys.stderr)
 
     if failures:
         print(f"FAILED benchmarks: {[n for n, _ in failures]}", file=sys.stderr)

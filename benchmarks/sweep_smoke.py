@@ -1,6 +1,6 @@
 """`repro.sweep` smoke benchmark (CI `--fast` entry).
 
-Two parts:
+Three parts:
 
 1. **multi-group grid** — a scheduler x telemetry x seed grid (4 compile
    groups) with streamed timelines, run end-to-end through
@@ -13,6 +13,10 @@ Two parts:
    vmap path; per-scenario results must be bitwise equal at each width
    (ISSUE 4/5 acceptance — force widths on CPU with
    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+3. **open-loop traffic smoke** — a Poisson + trace-replay mode x seed
+   grid through the ring-buffer engine (`cfg.traffic`), sharded vs vmap,
+   with the streaming SLO histograms (`lat_hist`/`wait_hist`) and all
+   per-scenario scalars required bitwise equal across paths (ISSUE 6).
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ from repro.core import vecsim
 from repro.core.annotations import Annotation, Task
 from repro.core.cluster import make_cluster
 from repro.core.simulator import Job
+from repro.traffic import arrivals
 
 
 def _tiny_scenario(seed: int, n_tasks: int = 6, n_nodes: int = 2):
@@ -117,6 +122,61 @@ def run(fast: bool = False) -> dict:
         assert bitwise, f"{d}-way shard_map diverged from the vmap path"
         if d == n_dev:
             t_shard = t_d
+
+    # ---- 3) open-loop traffic: poisson + replay, sharded parity ---------
+    tmpl = arrivals.make_template(6, seed=1)
+    horizon = cal_ticks * 5.0
+
+    def traffic_builder(mode, rng_seed):
+        nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                             cpu_initial_fraction=0.3)
+        if mode == "replay":
+            # deterministic synthetic trace, fixed length so scenarios
+            # stack; front-loaded to 80% of the horizon so late arrivals
+            # still finish
+            rng = np.random.RandomState(1_000 + rng_seed)
+            arr_t = np.sort(rng.uniform(0.0, 0.8 * horizon, size=48))
+            arr_k = rng.randint(0, 6, size=48)
+            return arrivals.build_traffic_scenario(
+                nodes, tmpl, mode="replay", trace_t=arr_t,
+                trace_tmpl=arr_k, rng_seed=rng_seed)
+        return arrivals.build_traffic_scenario(
+            nodes, tmpl, mode="poisson", rate=0.04, rng_seed=rng_seed)
+
+    tr = sweeplib.SweepSpec(
+        traffic_builder,
+        axes={"mode": ("poisson", "replay"),
+              "rng_seed": list(range(grid_seeds))},
+        base=vecsim.VecSimConfig(n_ticks=cal_ticks, dt=5.0,
+                                 scheduler="cash", table_slots=16,
+                                 slo_bins=16),
+        configure=lambda c: {"traffic": c["mode"]},
+    )
+    tr_groups = tr.groups()
+    res_tr1 = sweeplib.run_sweep(tr_groups, shards=1)
+    s_tr1 = res_tr1.scalars()
+    arrived = int(s_tr1["n_arrived"].sum())
+    completed = int(s_tr1["n_completed"].sum())
+    emit("sweep/smoke/traffic_points", 0.0, str(res_tr1.n_points))
+    emit("sweep/smoke/traffic_completed", 0.0, f"{completed}/{arrived}")
+    assert completed > 0, "traffic smoke completed no jobs"
+    tr_parity = None
+    if n_dev > 1:
+        res_trd = sweeplib.run_sweep(tr_groups, shards=n_dev)
+        s_trd = res_trd.scalars()
+        tr_parity = all(np.array_equal(s_tr1[k], s_trd[k],
+                                       equal_nan=True) for k in s_tr1)
+        for g1, gd in zip(res_tr1.groups, res_trd.groups):
+            for key in ("lat_hist", "wait_hist"):
+                tr_parity &= np.array_equal(g1.outputs[key],
+                                            gd.outputs[key])
+        emit("sweep/smoke/traffic_bitwise_equal", 0.0,
+             "PASS" if tr_parity else "FAIL")
+        assert tr_parity, "sharded traffic sweep diverged from vmap path"
+    else:
+        emit("sweep/smoke/traffic_bitwise_equal", 0.0,
+             "SKIP(single-device)")
+
     return {
         "grid_points": res.n_points,
         "grid_groups": res.meta["n_groups"],
@@ -126,6 +186,10 @@ def run(fast: bool = False) -> dict:
         "cal_sharded_wall_s": t_shard,
         "cal_bitwise_equal": all(parity.values()) if parity else None,
         "cal_parity_widths": sorted(parity),
+        "traffic_points": res_tr1.n_points,
+        "traffic_completed": completed,
+        "traffic_arrived": arrived,
+        "traffic_bitwise_equal": tr_parity,
     }
 
 

@@ -10,11 +10,17 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import List, Sequence
+
+import numpy as np
 
 from repro.core.token_bucket import EMR_SURCHARGE, INSTANCE_TYPES
 
 UNLIMITED_USD_PER_VCPU_HOUR = 0.05
 VCPU_SECONDS_PER_CREDIT_HOUR = 3600.0
+
+# T3 unlimited settles surplus once per rolling 24 h billing period
+SURPLUS_WINDOW_S = 86400.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +52,71 @@ class BillingLine:
     @property
     def total(self) -> float:
         return self.instance_cost + self.surplus_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class SurplusWindow:
+    """Surplus accrued inside one 24 h billing window ``(start_s, end_s]``.
+
+    The half-open-on-the-LEFT convention matches how the bill lands:
+    window ``w`` covers ``(w * W, (w + 1) * W]``, so surplus accrued
+    exactly AT a rollover instant ``t == (w + 1) * W`` bills into the
+    window that ends there, not the one that starts there. (Accrual at
+    ``t == 0`` cannot exist — surplus needs elapsed burn — but is folded
+    into window 0 for completeness.)"""
+    index: int
+    start_s: float
+    end_s: float
+    surplus_vcpu_seconds: float
+
+    @property
+    def usd(self) -> float:
+        return (self.surplus_vcpu_seconds / VCPU_SECONDS_PER_CREDIT_HOUR
+                * UNLIMITED_USD_PER_VCPU_HOUR)
+
+
+def window_surplus_bills(times: Sequence[float],
+                         cum_surplus: Sequence[float], *,
+                         window_s: float = SURPLUS_WINDOW_S,
+                         horizon_s: float = 0.0) -> List[SurplusWindow]:
+    """Split a CUMULATIVE surplus series — e.g. a traffic timeline's
+    ``surplus_cum`` samples — into per-24h-window bills.
+
+    ``times`` must be non-decreasing and ``cum_surplus`` non-decreasing
+    (cumulative). Returns one `SurplusWindow` per window up to
+    ``max(times[-1], horizon_s)``; the sum of all windows' surplus equals
+    ``cum_surplus[-1]`` exactly (it is a telescoping difference of the
+    series, never a re-accumulation)."""
+    t = np.asarray(times, np.float64)
+    c = np.asarray(cum_surplus, np.float64)
+    if t.shape != c.shape or t.ndim != 1:
+        raise ValueError("times and cum_surplus must be matching 1-D series")
+    if t.size == 0:
+        return []
+    if np.any(np.diff(t) < 0):
+        raise ValueError("times must be non-decreasing")
+    if np.any(np.diff(c) < -1e-9):
+        raise ValueError("cum_surplus must be cumulative (non-decreasing)")
+    if window_s <= 0.0:
+        raise ValueError(f"window_s must be positive, got {window_s}")
+
+    # the window a sample at time x bills into: (w*W, (w+1)*W] => ceil-1,
+    # with x == 0 folded into window 0
+    w_of = np.maximum(np.ceil(t / window_s).astype(np.int64) - 1, 0)
+    end = max(float(t[-1]), float(horizon_s))
+    n_w = int(np.maximum(np.ceil(end / window_s), 1))
+    # cumulative surplus as of each window's close: the LAST sample in a
+    # window or before it. searchsorted over the sorted w_of series gives
+    # that sample's index; -1 (window closes before the first sample)
+    # reads as zero accrual so far.
+    idx = np.searchsorted(w_of, np.arange(n_w), side="right") - 1
+    end_cum = np.where(idx >= 0, c[np.maximum(idx, 0)], 0.0)
+    start_cum = np.concatenate([[0.0], end_cum[:-1]])
+    return [SurplusWindow(index=w, start_s=w * window_s,
+                          end_s=(w + 1) * window_s,
+                          surplus_vcpu_seconds=float(end_cum[w]
+                                                     - start_cum[w]))
+            for w in range(n_w)]
 
 
 def savings_fraction(baseline: BillingLine, other: BillingLine) -> float:

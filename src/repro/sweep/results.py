@@ -26,14 +26,21 @@ import numpy as np
 from repro.core.vecsim import VecSimConfig
 from repro.sweep.spec import SweepPoint
 
-# per-scenario scalar outputs assembled into the flat metric table
+# per-scenario scalar outputs assembled into the flat metric table.
+# `scalars()` skips any name a group lacks, so the traffic-only columns
+# (stream counters + SLO percentiles from `traffic.slo`) cost closed
+# sweeps nothing.
 SCALAR_OUTPUTS = ("makespan", "all_done", "surplus_credits",
-                  "total_cpu_work", "cpu_work_served", "node_busy_seconds")
+                  "total_cpu_work", "cpu_work_served", "node_busy_seconds",
+                  "n_arrived", "n_admitted", "n_dropped", "n_completed",
+                  "lat_p50", "lat_p95", "lat_p99", "lat_mean", "lat_max",
+                  "wait_p50", "wait_p95", "wait_p99", "wait_mean",
+                  "wait_max", "last_finish")
 
 # outputs that are group-level (no leading scenario axis). Identified by
 # NAME, never by shape — a shape heuristic misfires whenever the sample
 # count happens to equal the group's scenario count.
-GROUP_LEVEL_OUTPUTS = frozenset({"timeline_t"})
+GROUP_LEVEL_OUTPUTS = frozenset({"timeline_t", "slo_edges"})
 
 
 def flatten_outputs(outputs: Dict[str, Any],

@@ -108,6 +108,8 @@ _MANIFEST_WHAT = {
                   "batch differently)",
     "layout": "resolved group configs / scenario content (a changed "
               "`configure` hook or an edited builder)",
+    "traffic": "traffic content (a regenerated arrival trace, an edited "
+               "job-template table, or changed process parameters)",
 }
 
 
@@ -320,6 +322,16 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
         components = {"spec": spec_fp, "chunk_size": repr(opts.chunk_size),
                       "layout": layout}
         fingerprint = f"{spec_fp}:chunk={opts.chunk_size}:{layout}"
+        # traffic content gets its OWN manifest component (beyond its
+        # bytes inside `layout`) so a resumed sweep whose trace file was
+        # regenerated names the trace, not just "scenario content" —
+        # appended only when present, preserving closed-sweep fingerprints
+        tdigs = [g.traffic_digest() for g in groups]
+        if any(tdigs):
+            traffic = hashlib.sha256(
+                ",".join(tdigs).encode()).hexdigest()[:12]
+            components["traffic"] = traffic
+            fingerprint += f":traffic={traffic}"
         ckpt = WorkQueue(opts.checkpoint_dir, fingerprint, components,
                          lease_s=opts.lease_s, poll_s=opts.poll_s)
 

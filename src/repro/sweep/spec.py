@@ -99,6 +99,32 @@ class CompileGroup:
                 h.update(v.tobytes())
         return h.hexdigest()
 
+    def traffic_digest(self) -> str:
+        """Hash of the group's traffic content only (arrival traces,
+        template tables, process parameters — `arrivals.
+        TRAFFIC_CONTENT_KEYS`), or ``""`` for a closed-batch group.
+
+        `content_digest` already covers these arrays, but as one opaque
+        blob: a regenerated trace and an edited fleet refuse resume with
+        the same error. Splitting traffic into its own manifest component
+        lets `WorkQueue` NAME the trace as what changed."""
+        if not self.scenarios or "tmpl_work" not in self.scenarios[0]:
+            return ""
+        import hashlib
+
+        from repro.traffic.arrivals import TRAFFIC_CONTENT_KEYS
+
+        h = hashlib.sha256()
+        h.update(f"{self.cfg.traffic}@{len(self)}".encode())
+        for s in self.scenarios:
+            for k in TRAFFIC_CONTENT_KEYS:
+                if k not in s:
+                    continue
+                v = np.asarray(s[k])
+                h.update(f"{k}:{v.dtype}:{v.shape};".encode())
+                h.update(v.tobytes())
+        return h.hexdigest()
+
 
 class SweepSpec:
     """Cartesian sweep declaration.

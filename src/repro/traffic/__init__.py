@@ -1,0 +1,23 @@
+"""Open-loop traffic for the vectorized engine: arrival processes
+(`repro.traffic.arrivals`), SLO histogram metrics (`repro.traffic.slo`)
+and the pure-Python ring-buffer replay oracle (`repro.traffic.oracle`).
+
+The engine side lives in `repro.core.vecsim` (`VecSimConfig.traffic`,
+the ring-buffer task table in `_simulate_traffic`); this package holds
+everything that is not the scan itself: scenario construction, trace
+loading, the latency/queue-wait histogram contract, and the oracle the
+engine is parity-tested against.
+"""
+from repro.traffic.arrivals import (  # noqa: F401
+    arrival_counts,
+    build_traffic_scenario,
+    load_trace,
+    make_template,
+    stack_traffic_scenarios,
+)
+from repro.traffic.oracle import TrafficOracle  # noqa: F401
+from repro.traffic.slo import (  # noqa: F401
+    attach_percentiles,
+    edges_for,
+    hist_percentile,
+)

@@ -1,0 +1,236 @@
+"""Open-loop arrival processes for the batched engine: jit-compatible
+count streams plus traffic scenario construction/stacking.
+
+Three processes, selected by the *static* ``VecSimConfig.traffic`` field
+(so every scenario in a compile group shares one process):
+
+  * ``poisson`` — homogeneous Poisson with per-scenario rate
+    ``arr_rate`` (jobs / simulated second);
+  * ``diurnal`` — rate-modulated Poisson,
+    ``rate(now) = arr_rate * (1 + arr_amp * sin(2 pi (now + arr_phase)
+    / arr_period))`` clipped at zero — the day/night pattern that makes
+    T3 credit regeneration bind over multi-day horizons;
+  * ``replay`` — a submit-time-sorted trace ``arr_t`` (+ per-arrival
+    template row ``arr_tmpl``); an arrival is admitted at the first tick
+    whose ``now >= arr_t``.
+
+Count streams are *derived, not carried*: `arrival_counts` produces the
+whole ``(n_ticks,)`` per-tick admission count inside the jitted program
+(ONE vectorized Poisson draw / searchsorted per scenario, fed to the
+scan as xs) rather than one draw per tick in the carry. The stochastic
+processes key off ``fold_in(fold_in(PRNGKey(cfg.seed), TAG), rng_seed)``
+— the same per-scenario ``rng_seed`` plumbing `build_scenario` uses for
+``shuffle="random"``, under a distinct stream tag so arrival and shuffle
+streams never alias. A seed or rate sweep therefore batches into ONE
+compile, and the Python oracle replays the identical stream by calling
+`arrival_counts` eagerly.
+
+Jobs are drawn from a small per-scenario *template table* (work, demand,
+class): arrival ``i`` instantiates template row ``i mod tmpl_n``
+(stochastic modes) or ``arr_tmpl[i]`` (replay). This is the cluster-trace
+simulator shape — a task catalogue replayed against a capacity pattern —
+without carrying per-arrival arrays for unbounded streams.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vecsim
+from repro.core.vecsim import (
+    CLS_BURST_CPU,
+    CLS_NET,
+    CLS_NONE,
+    VecSimConfig,
+)
+
+# fold_in tag separating the arrival stream from the shuffle stream that
+# shares PRNGKey(cfg.seed) + rng_seed
+ARRIVAL_STREAM_TAG = 0x0A51
+
+TRAFFIC_MODES = ("poisson", "diurnal", "replay")
+
+# batched per-scenario arrays that define a group's traffic content —
+# hashed into the WorkQueue manifest so a resumed sweep detects a changed
+# or regenerated trace/template and names it
+TRAFFIC_CONTENT_KEYS = ("tmpl_work", "tmpl_dem", "tmpl_cls", "tmpl_n",
+                        "arr_t", "arr_tmpl", "arr_rate", "arr_amp",
+                        "arr_period", "arr_phase")
+
+
+def stream_key(seed: int, rng_seed) -> jax.Array:
+    """The per-scenario arrival-stream key: static config seed folded
+    with the batched scenario seed (one compile per static config)."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), ARRIVAL_STREAM_TAG)
+    return jax.random.fold_in(base, rng_seed)
+
+
+def diurnal_rate(now, rate, amp, period, phase):
+    """Sinusoidal day/night arrival rate, clipped at zero."""
+    two_pi = 2.0 * np.pi
+    return jnp.maximum(
+        rate * (1.0 + amp * jnp.sin(two_pi * (now + phase) / period)), 0.0)
+
+
+def arrival_counts(cfg: VecSimConfig, sc: Dict[str, jnp.ndarray],
+                   dtype) -> jnp.ndarray:
+    """``(n_ticks,)`` int32 arrivals admitted at each tick. Traced inside
+    the engine (per scenario, under vmap) AND called eagerly by the
+    oracle — both sides see the identical stream."""
+    now = jnp.arange(cfg.n_ticks, dtype=dtype) * cfg.dt
+    if cfg.traffic == "replay":
+        total = jnp.searchsorted(sc["arr_t"].astype(dtype), now,
+                                 side="right").astype(jnp.int32)
+        return jnp.diff(total, prepend=jnp.zeros(1, jnp.int32))
+    if cfg.traffic == "poisson":
+        lam = jnp.broadcast_to(sc["arr_rate"] * cfg.dt, (cfg.n_ticks,))
+    elif cfg.traffic == "diurnal":
+        lam = diurnal_rate(now, sc["arr_rate"], sc["arr_amp"],
+                           sc["arr_period"], sc["arr_phase"]) * cfg.dt
+    else:
+        raise ValueError(f"unknown traffic mode {cfg.traffic!r}")
+    return jax.random.poisson(stream_key(cfg.seed, sc["rng_seed"]),
+                              lam.astype(dtype), dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# scenario construction
+# ---------------------------------------------------------------------------
+
+def make_template(n_kinds: int = 8, *, seed: int = 0,
+                  work=(20.0, 120.0), demand=(0.3, 0.95),
+                  burst_fraction: float = 0.7) -> Dict[str, np.ndarray]:
+    """A random job-template table: ``n_kinds`` (work, demand, class)
+    rows, ``burst_fraction`` of them CPU-burst annotated."""
+    if n_kinds < 1:
+        raise ValueError("need at least one template row")
+    rng = np.random.default_rng(seed)
+    cls = np.where(rng.random(n_kinds) < burst_fraction,
+                   CLS_BURST_CPU, CLS_NONE).astype(np.int32)
+    return {
+        "tmpl_work": rng.uniform(*work, n_kinds).astype(np.float64),
+        "tmpl_dem": rng.uniform(*demand, n_kinds).astype(np.float64),
+        "tmpl_cls": cls,
+    }
+
+
+def load_trace(path: Union[str, pathlib.Path]):
+    """Load a submit-time trace: ``.npz`` with ``arr_t`` (+ optional
+    ``arr_tmpl``) or a text file of ``time [template_row]`` lines.
+    Returns ``(arr_t float64, arr_tmpl int32)``; refuses an unsorted or
+    non-finite trace by name."""
+    p = pathlib.Path(path)
+    if p.suffix == ".npz":
+        with np.load(p) as z:
+            t = np.asarray(z["arr_t"], np.float64)
+            k = (np.asarray(z["arr_tmpl"], np.int32)
+                 if "arr_tmpl" in z.files else np.zeros(len(t), np.int32))
+    else:
+        data = np.loadtxt(p, ndmin=2, dtype=np.float64)
+        t = data[:, 0]
+        k = (data[:, 1].astype(np.int32) if data.shape[1] > 1
+             else np.zeros(len(t), np.int32))
+    if not np.all(np.isfinite(t)):
+        raise ValueError(f"trace {p} has non-finite submit times")
+    if np.any(np.diff(t) < 0):
+        raise ValueError(f"trace {p} is not submit-time sorted")
+    return t, k
+
+
+def build_traffic_scenario(nodes: Sequence, template: Dict[str, np.ndarray],
+                           *, mode: str = "poisson", rate: float = 1.0,
+                           amp: float = 0.0, period: float = 86400.0,
+                           phase: float = 0.0,
+                           trace_t: Optional[np.ndarray] = None,
+                           trace_tmpl: Optional[np.ndarray] = None,
+                           rng_seed: int = 0) -> Dict[str, np.ndarray]:
+    """Freeze one open-loop scenario: a cluster + a job-template table +
+    an arrival process. The node arrays match `vecsim.build_scenario`'s;
+    ``mode`` must agree with the static ``VecSimConfig.traffic`` the
+    scenario runs under."""
+    if mode not in TRAFFIC_MODES:
+        raise ValueError(f"mode must be one of {TRAFFIC_MODES}, got {mode!r}")
+    k = len(template["tmpl_work"])
+    if not (len(template["tmpl_dem"]) == len(template["tmpl_cls"]) == k):
+        raise ValueError("template columns disagree on row count")
+    if np.any(np.asarray(template["tmpl_cls"]) == CLS_NET):
+        raise ValueError("network-annotated templates are not supported "
+                         "under open-loop traffic (cpu pool only)")
+
+    f = np.float64
+    sc: Dict[str, np.ndarray] = dict(vecsim.node_arrays(nodes))
+    sc["tmpl_work"] = np.asarray(template["tmpl_work"], f)
+    sc["tmpl_dem"] = np.minimum(np.asarray(template["tmpl_dem"], f), 1.0)
+    sc["tmpl_cls"] = np.asarray(template["tmpl_cls"], np.int32)
+    sc["tmpl_n"] = np.int32(k)
+    sc["arr_rate"] = f(rate)
+    sc["arr_amp"] = f(amp)
+    sc["arr_period"] = f(period)
+    sc["arr_phase"] = f(phase)
+    sc["rng_seed"] = np.int32(rng_seed)
+    if mode == "replay":
+        if trace_t is None:
+            raise ValueError("replay mode needs trace_t")
+        t = np.asarray(trace_t, f)
+        if np.any(np.diff(t) < 0):
+            raise ValueError("trace_t must be submit-time sorted")
+        tk = (np.zeros(len(t), np.int32) if trace_tmpl is None
+              else np.asarray(trace_tmpl, np.int32))
+        if len(tk) != len(t):
+            raise ValueError("trace_t / trace_tmpl length mismatch")
+        if len(tk) and (tk.min() < 0 or tk.max() >= k):
+            raise ValueError("trace_tmpl rows out of template range")
+        sc["arr_t"] = t
+        sc["arr_tmpl"] = tk
+    return sc
+
+
+def stack_traffic_scenarios(
+        scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    """Pad every traffic scenario to the group's max (nodes, template
+    rows, trace length) and stack on a leading axis. Padded template rows
+    are never instantiated (``i mod tmpl_n`` indexes the real rows only);
+    padded trace entries sit at ``+inf`` so no horizon reaches them."""
+    keys = set(scenarios[0])
+    for s in scenarios[1:]:
+        if set(s) != keys:
+            raise ValueError("traffic scenarios in one group must share "
+                             "one key set (mixed replay/stochastic?)")
+    has_trace = "arr_t" in keys
+    N = max(len(s["slots"]) for s in scenarios)
+    K = max(len(s["tmpl_work"]) for s in scenarios)
+    M = max(len(s["arr_t"]) for s in scenarios) if has_trace else 0
+
+    node_keys = [k for k in vecsim.NODE_ARRAY_KEYS if k != "node_pad"]
+    out: Dict[str, list] = {}
+    for s in scenarios:
+        n_pad = N - len(s["slots"])
+        k_pad = K - len(s["tmpl_work"])
+
+        def pad(a, width, fill=0.0):
+            a = np.asarray(a)
+            if not width:
+                return a
+            return np.concatenate([a, np.full(width, fill, a.dtype)])
+
+        row = {k: pad(s[k], n_pad) for k in node_keys}
+        row["node_pad"] = pad(s["node_pad"], n_pad, True)
+        row["tmpl_work"] = pad(s["tmpl_work"], k_pad)
+        row["tmpl_dem"] = pad(s["tmpl_dem"], k_pad)
+        row["tmpl_cls"] = pad(s["tmpl_cls"], k_pad, vecsim.CLS_PAD)
+        for k in ("tmpl_n", "rng_seed", "arr_rate", "arr_amp",
+                  "arr_period", "arr_phase"):
+            row[k] = s[k]
+        if has_trace:
+            m_pad = M - len(s["arr_t"])
+            row["arr_t"] = pad(s["arr_t"], m_pad, np.inf)
+            row["arr_tmpl"] = pad(s["arr_tmpl"], m_pad, 0)
+        for k, v in row.items():
+            out.setdefault(k, []).append(np.asarray(v))
+    batch = {k: np.stack(v) for k, v in out.items()}
+    batch["_meta"] = np.array([N, K, M])
+    return batch

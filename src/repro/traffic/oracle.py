@@ -1,0 +1,276 @@
+"""Pure-Python replay oracle for the ring-buffer traffic engine.
+
+`TrafficOracle` interprets ONE (unstacked) traffic scenario under the
+same `VecSimConfig` the vectorized engine compiles, mirroring
+`vecsim._simulate_traffic` tick-for-tick with plain Python loops over
+numpy float64 state:
+
+  * the arrival stream is the IDENTICAL stream — it calls
+    `arrivals.arrival_counts` eagerly, so the per-scenario
+    ``fold_in(fold_in(PRNGKey(seed), TAG), rng_seed)`` Poisson draws (or
+    the trace searchsorted) match integer-for-integer;
+  * token-bucket serve mirrors `kernels.ref.bucket_serve_ref`
+    branch-for-branch (which itself mirrors `TokenBucket.serve`);
+  * telemetry mirrors the engine's `_telemetry_estimate` /
+    `_telemetry_observe` array formulas (Algorithm 2);
+  * placement packs each phase's FIFO-by-arrival-seq queue over nodes in
+    descending-credit order (CASH phase 1) / nid order (plain phase and
+    stock), exactly the engine's rank->table formulation.
+
+Latency / queue-wait values are exact float64 products of tick index and
+``dt`` on both sides, and both sides bucket with the same comparison
+(`slo.bucket_index`), so under ``jax_enable_x64`` the oracle's
+histograms — and every percentile derived from them — must equal the
+engine's EXACTLY; tests assert that, not a tolerance.
+
+Scope mirrors the engine's traffic support: ``resource="cpu"``,
+``scheduler in ("cash", "stock")``, ``shuffle="none"``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.vecsim import (
+    CLS_BURST_CPU,
+    CLS_BURST_DISK,
+    CLS_NONE,
+    CLS_PAD,
+    VecSimConfig,
+    _NEVER,
+)
+from repro.traffic import arrivals, slo
+
+
+def _serve_bucket(balance, demand, baseline, burst, capacity, unlimited, dt):
+    """Scalar mirror of `kernels.ref.bucket_serve_ref`. Returns
+    (work, new_balance, surplus_add)."""
+    rate = min(demand, burst)
+    drain = rate - baseline
+    if drain > 0.0:                                   # bursting
+        t_burst = dt if unlimited else min(dt, balance / drain)
+        spent = drain * t_burst
+        over = max(0.0, spent - balance) if unlimited else 0.0
+        work = rate * t_burst + min(demand, baseline) * (dt - t_burst)
+        return work, max(0.0, balance - spent), over
+    return rate * dt, min(capacity, balance - drain * dt), 0.0
+
+
+class TrafficOracle:
+    """Interpret one traffic scenario; `run()` returns the engine's
+    scalar/histogram output keys as plain numpy values.
+
+    Capacity caveat: with ``table_slots == 0`` the engine sizes the ring
+    as ``2 * N * smax`` of the PADDED batch, which the oracle (seeing one
+    unstacked scenario) cannot reconstruct for a ragged group — parity
+    tests pin ``table_slots`` explicitly or use uniform fleets."""
+
+    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig):
+        if cfg.traffic not in arrivals.TRAFFIC_MODES:
+            raise ValueError(f"not a traffic config: {cfg.traffic!r}")
+        if cfg.shuffle != "none":
+            raise NotImplementedError("oracle mirrors shuffle='none' only")
+        if cfg.resource != "cpu" or cfg.scheduler not in ("cash", "stock"):
+            raise NotImplementedError("traffic scope is cpu + cash|stock")
+        self.sc = {k: np.asarray(v) for k, v in sc.items()}
+        self.cfg = cfg
+        self.N = len(self.sc["slots"])
+        smax = int(self.sc["slots"].max()) if self.N else 1
+        self.C = (cfg.table_slots if cfg.table_slots > 0
+                  else 2 * self.N * max(smax, 1))
+        self.edges = slo.edges_for(cfg)
+        self.counts = np.asarray(arrivals.arrival_counts(cfg, self.sc,
+                                                         np.float64))
+
+    # ------------------------------------------------------------------ tick
+    def run(self) -> Dict[str, np.ndarray]:
+        cfg, sc, N, C = self.cfg, self.sc, self.N, self.C
+        dt = cfg.dt
+        B = cfg.slo_bins
+        need_credits = cfg.scheduler != "stock"
+
+        tb_rem = np.zeros(C)
+        tb_dem = np.zeros(C)
+        tb_cls = np.full(C, CLS_PAD, np.int64)
+        tb_seq = np.full(C, np.iinfo(np.int32).max, np.int64)
+        tb_submit = np.zeros(C)
+        tb_start = np.full(C, np.inf)
+        tb_node = np.full(C, -1, np.int64)
+
+        run_cnt = np.zeros(N, np.int64)
+        rel_cnt = np.zeros(N, np.int64)
+        bal = sc["cpu_balance0"].astype(np.float64).copy()
+        sur = np.zeros(N)
+        baseline = sc["cpu_baseline"].astype(np.float64)
+        burst = sc["cpu_burst"].astype(np.float64)
+        capacity = sc["cpu_capacity"].astype(np.float64)
+        unlimited = sc["cpu_unlimited"].astype(np.float64) > 0.0
+        slots = sc["slots"].astype(np.int64)
+
+        tel = {"act_bal": np.zeros(N), "act_t": np.full(N, _NEVER),
+               "use_rate": np.zeros(N), "use_t": np.full(N, _NEVER),
+               "accum": np.zeros(N), "win_start": np.zeros(N)}
+
+        n_seen = n_adm = n_done = 0
+        lat_hist = np.zeros(B, np.int64)
+        wait_hist = np.zeros(B, np.int64)
+        lat_sum = wait_sum = 0.0
+        lat_max = wait_max = 0.0
+        last_rel = -np.inf
+        work_done = work_served = busy_seconds = 0.0
+
+        tmpl_n = max(int(sc["tmpl_n"]), 1)
+        replay = cfg.traffic == "replay"
+
+        for t in range(cfg.n_ticks):
+            now = float(t) * dt
+
+            # 1) release finished jobs, bucket SLOs, recycle slots
+            fin_now = np.flatnonzero((tb_cls != CLS_PAD) & (tb_node >= 0)
+                                     & (tb_rem <= 1e-9))
+            for i in fin_now:
+                lat = now - tb_submit[i]
+                wait = tb_start[i] - tb_submit[i]
+                lat_hist[slo.bucket_index(lat, self.edges)] += 1
+                wait_hist[slo.bucket_index(wait, self.edges)] += 1
+                lat_sum += lat
+                wait_sum += wait
+                lat_max = max(lat_max, lat)
+                wait_max = max(wait_max, wait)
+                tb_cls[i] = CLS_PAD
+                tb_node[i] = -1
+                tb_seq[i] = np.iinfo(np.int32).max
+            if len(fin_now):
+                n_done += len(fin_now)
+                last_rel = now
+            run_cnt -= rel_cnt
+            rel_cnt = np.zeros(N, np.int64)
+
+            # 2) arrivals into free slots, lowest index first, FIFO order
+            k = int(self.counts[t])
+            free_slots = np.flatnonzero(tb_cls == CLS_PAD)
+            admitted = free_slots[:k]
+            for r, i in enumerate(admitted):
+                aidx = n_seen + r
+                if replay:
+                    row = int(sc["arr_tmpl"][aidx])
+                    tb_submit[i] = float(sc["arr_t"][aidx])
+                else:
+                    row = aidx % tmpl_n
+                    tb_submit[i] = now
+                tb_rem[i] = float(sc["tmpl_work"][row])
+                tb_dem[i] = float(sc["tmpl_dem"][row])
+                tb_cls[i] = int(sc["tmpl_cls"][row])
+                tb_seq[i] = aidx
+                tb_start[i] = np.inf
+            n_seen += k
+            n_adm += len(admitted)
+
+            # 3) telemetry estimate (pre-observe, Algorithm 2)
+            est = None
+            if need_credits:
+                if cfg.telemetry == "oracle":
+                    est = bal.copy()
+                else:
+                    has = tel["act_t"] > _NEVER / 2
+                    if cfg.telemetry == "stale":
+                        est = np.where(has, tel["act_bal"], capacity)
+                    else:
+                        use_ok = tel["use_t"] >= tel["act_t"]
+                        dt_act = now - np.where(has, tel["act_t"], now)
+                        e = tel["act_bal"] + np.where(
+                            use_ok, (baseline - tel["use_rate"]) * dt_act,
+                            0.0)
+                        est = np.where(has, np.clip(e, 0.0, capacity),
+                                       capacity)
+
+            # 4) placement: FIFO by arrival seq within each phase
+            free = slots - run_cnt
+
+            def fifo(mask: np.ndarray) -> List[int]:
+                q = np.flatnonzero(mask)
+                return list(q[np.argsort(tb_seq[q], kind="stable")])
+
+            def pack(order, queue):
+                for n in order:
+                    while free[n] > 0 and queue:
+                        i = queue.pop(0)
+                        tb_node[i] = n
+                        tb_start[i] = now
+                        free[n] -= 1
+                        run_cnt[n] += 1
+
+            ready = (tb_cls != CLS_PAD) & (tb_node < 0)
+            if cfg.scheduler == "stock":
+                pack(range(N), fifo(ready))
+            else:
+                desc = sorted(range(N), key=lambda n: (-est[n], n))
+                pack(desc, fifo(ready & ((tb_cls == CLS_BURST_CPU)
+                                         | (tb_cls == CLS_BURST_DISK))))
+                pack(range(N), fifo(ready & (tb_cls == CLS_NONE)))
+
+            # 5) serve + pro-rata distribute (mirrors bucket_serve_ref)
+            running = tb_node >= 0
+            live = running & (tb_rem > 0.0)
+            dem_node = np.zeros(N)
+            for i in np.flatnonzero(live):
+                dem_node[tb_node[i]] += tb_dem[i]
+            w_node = np.zeros(N)
+            for n in range(N):
+                w, bal[n], over = _serve_bucket(
+                    bal[n], dem_node[n], baseline[n], burst[n],
+                    capacity[n], unlimited[n], dt)
+                w_node[n] = w
+                sur[n] += over
+                work_served += w
+            for i in np.flatnonzero(live):
+                n = tb_node[i]
+                share = (w_node[n] * tb_dem[i] / dem_node[n]
+                         if dem_node[n] > 0.0 else 0.0)
+                inc = min(share, tb_rem[i])
+                tb_rem[i] -= inc
+                work_done += inc
+                if tb_rem[i] <= 1e-9:
+                    rel_cnt[n] += 1
+            busy_seconds += float(np.sum(run_cnt > 0)) * dt
+
+            # 6) CloudWatch observe (post-serve balance, like the engine)
+            if need_credits and cfg.telemetry != "oracle":
+                tel["accum"] = tel["accum"] + w_node / dt
+                pub_a = now - tel["act_t"] >= cfg.actual_period
+                pub_u = now - tel["use_t"] >= cfg.usage_period
+                span = np.maximum(now - tel["win_start"], 1e-9)
+                avg = tel["accum"] / np.maximum(1.0, span)
+                tel["act_bal"] = np.where(pub_a, bal, tel["act_bal"])
+                tel["act_t"] = np.where(pub_a, now, tel["act_t"])
+                tel["use_rate"] = np.where(pub_u, avg, tel["use_rate"])
+                tel["use_t"] = np.where(pub_u, now, tel["use_t"])
+                tel["accum"] = np.where(pub_u, 0.0, tel["accum"])
+                tel["win_start"] = np.where(pub_u, now, tel["win_start"])
+
+        drained = n_done == n_adm
+        if replay:
+            all_done = drained and n_seen >= int(
+                np.sum(np.isfinite(sc["arr_t"])))
+        else:
+            all_done = drained
+        makespan = ((last_rel if n_done > 0 else 0.0) if all_done
+                    else cfg.n_ticks * dt)
+        out = {
+            "makespan": makespan, "all_done": all_done,
+            "surplus_credits": float(np.sum(sur)),
+            "total_cpu_work": work_done, "cpu_work_served": work_served,
+            "node_busy_seconds": busy_seconds,
+            "n_arrived": n_seen, "n_admitted": n_adm,
+            "n_dropped": n_seen - n_adm, "n_completed": n_done,
+            "lat_hist": lat_hist, "wait_hist": wait_hist,
+            "lat_sum": lat_sum, "wait_sum": wait_sum,
+            "lat_max": lat_max, "wait_max": wait_max,
+            "last_finish": last_rel,
+        }
+        for pfx in ("lat", "wait"):
+            for q, tag in slo.DEFAULT_QS:
+                out[f"{pfx}_{tag}"] = float(slo.hist_percentile(
+                    out[f"{pfx}_hist"], self.edges, q))
+        return out

@@ -1,0 +1,90 @@
+"""SLO metric contract for open-loop traffic: per-job latency and
+queue-wait tails as fixed-bin histograms.
+
+A multi-day open-loop run completes far more jobs than any bounded carry
+can hold timestamps for, so the engine never materializes per-job
+latency arrays. Instead each completion is bucketed on-device into a
+histogram with *static* bin edges (HdrHistogram / Prometheus style):
+``edges[0] = 0`` and ``edges[1:]`` log-spaced from one tick (``dt``, the
+smallest observable latency) to the horizon. Percentiles are then
+nearest-rank reductions over the histogram, computed host-side — and a
+percentile's value is its bin's UPPER edge, a conservative (pessimistic)
+SLO estimate.
+
+Parity contract: the engine and the Python oracle (`repro.traffic.
+oracle`) bucket with the SAME comparison (``count of edges[1:] <= x``,
+clipped to the last bin) on float64 latencies that are exact products of
+tick index and dt, so their histograms — and therefore every percentile —
+match exactly, not approximately.
+
+This module is deliberately numpy-only (no jax, no repro imports): the
+engine inlines the bucketing comparison against `edges_for`'s constant,
+the oracle calls `bucket_index`, and both feed `hist_percentile`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import numpy as np
+
+# the percentiles surfaced as sweep scalars
+DEFAULT_QS: Tuple[Tuple[float, str], ...] = (
+    (0.50, "p50"), (0.95, "p95"), (0.99, "p99"))
+
+
+def bin_edges(n_bins: int, max_s: float, min_s: float) -> np.ndarray:
+    """``(n_bins + 1,)`` float64 edges: ``[0, geomspace(min_s, max_s)]``.
+    Bin ``b`` covers ``[edges[b], edges[b+1])``; the last bin also absorbs
+    every overflow ``>= max_s``."""
+    if n_bins < 2:
+        raise ValueError(f"need at least 2 histogram bins, got {n_bins}")
+    if not (0.0 < min_s < max_s):
+        raise ValueError(f"need 0 < min_s < max_s, got {min_s}, {max_s}")
+    return np.concatenate([[0.0],
+                           np.geomspace(min_s, max_s, n_bins)]).astype(
+                               np.float64)
+
+
+def edges_for(cfg: Any) -> np.ndarray:
+    """The histogram edges a `VecSimConfig` implies (duck-typed — reads
+    ``slo_bins``, ``slo_max_s``, ``n_ticks``, ``dt``). ``slo_max_s == 0``
+    defaults the upper edge to the simulated horizon."""
+    max_s = cfg.slo_max_s if cfg.slo_max_s > 0.0 else cfg.n_ticks * cfg.dt
+    return bin_edges(cfg.slo_bins, max_s, cfg.dt)
+
+
+def bucket_index(x: float, edges: np.ndarray) -> int:
+    """The bin a value lands in — the oracle-side mirror of the engine's
+    in-scan comparison sum."""
+    n_bins = len(edges) - 1
+    return min(int(np.sum(x >= edges[1:])), n_bins - 1)
+
+
+def hist_percentile(hist: np.ndarray, edges: np.ndarray,
+                    q: float) -> np.ndarray:
+    """Nearest-rank percentile over histogram(s): the upper edge of the
+    first bin whose cumulative count reaches ``q * total``, vectorized
+    over any leading axes of ``hist``. Empty histograms yield NaN."""
+    h = np.asarray(hist, np.float64)
+    total = h.sum(axis=-1)
+    c = np.cumsum(h, axis=-1)
+    idx = np.argmax(c >= q * total[..., None], axis=-1)
+    val = np.asarray(edges)[idx + 1]
+    return np.where(total > 0, val, np.nan)
+
+
+def attach_percentiles(res: Dict[str, Any], cfg: Any,
+                       qs: Sequence[Tuple[float, str]] = DEFAULT_QS) -> None:
+    """Reduce a finalized traffic output dict's ``lat_hist`` /
+    ``wait_hist`` (leading scenario axis) to percentile + mean scalars,
+    in place, and attach the shared ``slo_edges`` axis (group-level: one
+    copy per compile group, like ``timeline_t``)."""
+    edges = edges_for(cfg)
+    n = np.maximum(np.asarray(res["n_completed"], np.float64), 1.0)
+    for pfx in ("lat", "wait"):
+        h = res[f"{pfx}_hist"]
+        for q, tag in qs:
+            res[f"{pfx}_{tag}"] = hist_percentile(h, edges, q)
+        res[f"{pfx}_mean"] = np.asarray(res[f"{pfx}_sum"],
+                                        np.float64) / n
+    res["slo_edges"] = edges

@@ -1,0 +1,384 @@
+"""repro.traffic: open-loop arrival processes, the ring-buffer task
+table, SLO histogram metrics, and the plumbing that rides along
+(traffic-aware sweep manifests, the 24 h surplus billing window).
+
+The load-bearing assertions are EXACT: the engine's latency/queue-wait
+histograms (and therefore every percentile) must equal the pure-Python
+`TrafficOracle` replay bit-for-bit under float64, because both sides
+bucket identical ``tick_index * dt`` products with the same comparison.
+Scalar accumulators (sums of per-slot floats) use a tight tolerance —
+summation order differs between `jnp.sum` and the oracle's loop.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cost, vecsim
+from repro.core.cluster import make_cluster
+from repro.sweep.runner import run_sweep
+from repro.sweep.spec import SweepSpec
+from repro.traffic import arrivals, slo
+from repro.traffic.oracle import TrafficOracle
+
+TOL = 1e-9
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _fleet(n=4, slots=3, frac=0.3):
+    return make_cluster(n, "t3.large", slots_per_node=slots,
+                        cpu_initial_fraction=frac)
+
+
+_EXACT = ("n_arrived", "n_admitted", "n_dropped", "n_completed",
+          "lat_hist", "wait_hist", "all_done")
+
+
+def _assert_engine_matches_oracle(cfg, sc, i, res):
+    o = TrafficOracle(sc, cfg).run()
+    for k, v in o.items():
+        e = np.asarray(res[k])[i]
+        if k in _EXACT:
+            assert np.array_equal(e, np.asarray(v)), \
+                f"{k}: engine {e} != oracle {v}"
+        else:
+            assert np.allclose(e, v, rtol=TOL, atol=TOL, equal_nan=True), \
+                f"{k}: engine {e} != oracle {v}"
+    return o
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler,telemetry,burst_fraction", [
+    ("cash", "predicted", 0.7), ("cash", "stale", 0.7),
+    ("cash", "oracle", 0.7), ("stock", "predicted", 0.7),
+    # all-burst template: the single-queue fast path the throughput
+    # benchmark runs (no per-class rank split)
+    ("cash", "predicted", 1.0),
+])
+def test_poisson_matches_oracle(scheduler, telemetry, burst_fraction):
+    """Open-loop Poisson through the jitted scan == the Python replay,
+    histograms exactly, across schedulers and telemetry modes."""
+    cfg = vecsim.VecSimConfig(n_ticks=400, dt=5.0, scheduler=scheduler,
+                              telemetry=telemetry, traffic="poisson",
+                              table_slots=20, slo_bins=32)
+    tmpl = arrivals.make_template(6, seed=3, burst_fraction=burst_fraction)
+    scs = [arrivals.build_traffic_scenario(_fleet(3, 4, 0.5), tmpl,
+                                           mode="poisson", rate=0.05,
+                                           rng_seed=s) for s in (0, 1)]
+    res = vecsim.run_scenarios(scs, cfg)
+    for i, sc in enumerate(scs):
+        o = _assert_engine_matches_oracle(cfg, sc, i, res)
+        assert o["n_completed"] > 0
+
+
+def test_diurnal_matches_oracle():
+    """Rate-modulated Poisson: the sinusoidal lambda is drawn inside the
+    compiled program from the same folded key the oracle uses."""
+    cfg = vecsim.VecSimConfig(n_ticks=500, dt=10.0, scheduler="cash",
+                              telemetry="stale", traffic="diurnal",
+                              table_slots=24, slo_bins=24)
+    tmpl = arrivals.make_template(5, seed=7)
+    sc = arrivals.build_traffic_scenario(_fleet(), tmpl, mode="diurnal",
+                                         rate=0.05, amp=0.8, period=2000.0,
+                                         phase=300.0, rng_seed=5)
+    res = vecsim.run_scenarios([sc], cfg)
+    o = _assert_engine_matches_oracle(cfg, sc, 0, res)
+    # the modulation actually modulates: arrival counts are not constant
+    counts = np.asarray(arrivals.arrival_counts(cfg, sc, np.float64))
+    assert counts.sum() == o["n_arrived"]
+    assert counts.std() > 0
+
+
+def test_replay_matches_oracle_and_drains():
+    """Trace replay: every trace job admitted at its submit tick, the
+    stream drains, and rng_seed does not perturb a replay."""
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.uniform(0.0, 1500.0, 40))
+    tk = rng.integers(0, 5, 40)
+    tmpl = arrivals.make_template(5, seed=7)
+    cfg = vecsim.VecSimConfig(n_ticks=600, dt=5.0, scheduler="cash",
+                              telemetry="predicted", traffic="replay",
+                              table_slots=12, slo_bins=24)
+    scs = [arrivals.build_traffic_scenario(_fleet(), tmpl, mode="replay",
+                                           trace_t=t, trace_tmpl=tk,
+                                           rng_seed=s) for s in (0, 3)]
+    res = vecsim.run_scenarios(scs, cfg)
+    for i, sc in enumerate(scs):
+        o = _assert_engine_matches_oracle(cfg, sc, i, res)
+        assert o["all_done"] and o["n_completed"] == 40
+    # replay ignores the rng stream entirely
+    for k in ("makespan", "lat_hist", "n_completed"):
+        assert np.array_equal(np.asarray(res[k])[0], np.asarray(res[k])[1])
+
+
+def test_ring_buffer_recycles_and_sheds_load():
+    """A table far smaller than the job count still completes a multiple
+    of its capacity (slots recycle); overload is dropped and counted, and
+    live occupancy never exceeds the capacity C."""
+    C = 10
+    cfg = vecsim.VecSimConfig(n_ticks=600, dt=5.0, scheduler="cash",
+                              traffic="poisson", table_slots=C,
+                              slo_bins=16, sample_period=25.0)
+    tmpl = arrivals.make_template(4, seed=1)
+    sc = arrivals.build_traffic_scenario(_fleet(3, 2, 0.4), tmpl,
+                                         mode="poisson", rate=0.08,
+                                         rng_seed=2)
+    res = vecsim.run_scenarios([sc], cfg)
+    n_done = int(res["n_completed"][0])
+    assert n_done > 2 * C, "slots did not recycle"
+    assert int(res["n_dropped"][0]) > 0, "overload was not shed"
+    assert int(res["n_arrived"][0]) == int(res["n_admitted"][0]) \
+        + int(res["n_dropped"][0])
+    occ = np.asarray(res["timeline"]["occupancy"][0])
+    assert occ.max() <= C
+    # histograms account for every completion
+    assert int(np.asarray(res["lat_hist"])[0].sum()) == n_done
+    _assert_engine_matches_oracle(cfg, sc, 0, res)
+
+
+def test_fifo_across_recycled_slots():
+    """Queue-wait ordering follows global arrival order, not slot index:
+    with a single-slot fleet every job's wait is non-decreasing in
+    arrival order — guaranteed only if placement ranks by arrival seq."""
+    nodes = make_cluster(1, "t3.large", slots_per_node=1,
+                         cpu_initial_fraction=1.0)
+    t = np.array([0.0, 0.0, 0.0, 0.0])          # burst of 4 at t=0
+    tmpl = {"tmpl_work": np.array([40.0]), "tmpl_dem": np.array([0.5]),
+            "tmpl_cls": np.array([vecsim.CLS_NONE], np.int32)}
+    cfg = vecsim.VecSimConfig(n_ticks=600, dt=1.0, scheduler="stock",
+                              traffic="replay", table_slots=4, slo_bins=32)
+    sc = arrivals.build_traffic_scenario(nodes, tmpl, mode="replay",
+                                         trace_t=t, rng_seed=0)
+    res = vecsim.run_scenarios([sc], cfg)
+    assert bool(res["all_done"][0])
+    o = _assert_engine_matches_oracle(cfg, sc, 0, res)
+    # 4 identical sequential jobs: waits 0, s, 2s, 3s for service time s
+    h = o["wait_hist"]
+    assert h.sum() == 4 and np.count_nonzero(h) == 4
+
+
+# ---------------------------------------------------------------------------
+# SLO histogram/percentile unit behavior
+# ---------------------------------------------------------------------------
+
+def test_slo_bucketing_and_percentiles():
+    edges = slo.bin_edges(8, 100.0, 1.0)
+    assert edges[0] == 0.0 and edges[1] == 1.0 and edges[-1] == 100.0
+    assert slo.bucket_index(0.0, edges) == 0       # below first upper edge
+    assert slo.bucket_index(1.0, edges) == 1       # boundary goes up
+    assert slo.bucket_index(1e9, edges) == 7       # overflow -> last bin
+    h = np.zeros(8, np.int64)
+    for x in (0.5, 2.0, 3.0, 99.0):
+        h[slo.bucket_index(x, edges)] += 1
+    # nearest-rank on the histogram: upper edge of the covering bin
+    p50 = float(slo.hist_percentile(h, edges, 0.50))
+    assert p50 == edges[slo.bucket_index(2.0, edges) + 1]
+    assert np.isnan(float(slo.hist_percentile(np.zeros(8), edges, 0.5)))
+    with pytest.raises(ValueError):
+        slo.bin_edges(1, 100.0, 1.0)
+    with pytest.raises(ValueError):
+        slo.bin_edges(8, 1.0, 1.0)
+
+
+def test_load_trace_roundtrip_and_validation(tmp_path):
+    t = np.array([1.0, 4.0, 4.0, 9.0])
+    k = np.array([0, 2, 1, 0], np.int32)
+    npz = tmp_path / "trace.npz"
+    np.savez(npz, arr_t=t, arr_tmpl=k)
+    rt, rk = arrivals.load_trace(npz)
+    assert np.array_equal(rt, t) and np.array_equal(rk, k)
+    txt = tmp_path / "trace.txt"
+    np.savetxt(txt, np.stack([t, k.astype(float)], axis=1))
+    rt, rk = arrivals.load_trace(txt)
+    assert np.array_equal(rt, t) and np.array_equal(rk, k)
+    bad = tmp_path / "unsorted.txt"
+    np.savetxt(bad, np.array([[3.0], [1.0]]))
+    with pytest.raises(ValueError, match="unsorted.txt"):
+        arrivals.load_trace(bad)
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: one compile, traffic-aware manifest
+# ---------------------------------------------------------------------------
+
+def _traffic_spec(tmpl, base, nodes):
+    def builder(rate, rng_seed):
+        return arrivals.build_traffic_scenario(nodes, tmpl, mode="poisson",
+                                               rate=rate, rng_seed=rng_seed)
+    return SweepSpec(builder, {"rate": [0.04, 0.08], "rng_seed": [0, 1, 2]},
+                     base=base)
+
+
+def test_seed_rate_sweep_compiles_once():
+    """Per-scenario rng_seed and rate are batched data, not static config:
+    a seed x rate grid is ONE compile group, and its per-point results
+    match per-scenario single runs."""
+    base = vecsim.VecSimConfig(n_ticks=200, dt=5.0, traffic="poisson",
+                               table_slots=16, slo_bins=16)
+    spec = _traffic_spec(arrivals.make_template(4, seed=1), base,
+                         _fleet(3, 3, 0.4))
+    groups = spec.groups()
+    assert len(groups) == 1 and len(groups[0]) == 6
+    res = run_sweep(spec, shards=1)
+    cols = res.scalars()
+    for name in ("lat_p95", "wait_p99", "n_dropped", "n_completed"):
+        assert name in cols and cols[name].shape == (6,)
+    # spot-check one point against a solo run of its scenario
+    sc = groups[0].scenarios[4]
+    solo = vecsim.run_scenarios([sc], base)
+    assert np.array_equal(np.asarray(solo["lat_hist"])[0],
+                          np.asarray(res.groups[0].outputs["lat_hist"])[4])
+
+
+def test_workqueue_names_changed_trace(tmp_path):
+    """A resumed sweep whose traffic content changed refuses the
+    checkpoint dir and NAMES the traffic component, not just 'content'."""
+    base = vecsim.VecSimConfig(n_ticks=120, dt=5.0, traffic="poisson",
+                               table_slots=12, slo_bins=8)
+    nodes = _fleet(2, 2, 0.4)
+    d = tmp_path / "q"
+    run_sweep(_traffic_spec(arrivals.make_template(4, seed=1), base, nodes),
+              shards=1, checkpoint_dir=str(d))
+    man = json.loads((d / "manifest.json").read_text())
+    assert "traffic" in man["components"]
+    with pytest.raises(ValueError, match="traffic content"):
+        run_sweep(_traffic_spec(arrivals.make_template(4, seed=99), base,
+                                nodes),
+                  shards=1, checkpoint_dir=str(d))
+
+
+def test_closed_sweep_manifest_has_no_traffic_component(tmp_path):
+    """Closed-batch sweeps keep their pre-traffic fingerprints: the
+    traffic component appends only when traffic scenarios are present."""
+    from repro.core.annotations import Task
+    from repro.core.simulator import Job
+
+    def builder(seed):
+        rng = np.random.RandomState(seed)
+        tasks = [Task(tid=seed * 100 + i, job=f"j{seed}", vertex="v",
+                      work_cpu=float(rng.uniform(20, 60)),
+                      demand_cpu=0.5) for i in range(4)]
+        return vecsim.build_scenario(_fleet(2, 2, 0.4),
+                                     [Job(f"j{seed}", tasks)])
+
+    spec = SweepSpec(builder, {"seed": [0, 1]},
+                     base=vecsim.VecSimConfig(n_ticks=300, dt=1.0))
+    d = tmp_path / "q"
+    run_sweep(spec, shards=1, checkpoint_dir=str(d))
+    man = json.loads((d / "manifest.json").read_text())
+    assert "traffic" not in man["components"]
+    assert ":traffic=" not in man["fingerprint"]
+
+
+# ---------------------------------------------------------------------------
+# 24 h surplus billing window (core.cost)
+# ---------------------------------------------------------------------------
+
+W = cost.SURPLUS_WINDOW_S
+
+
+def test_surplus_window_boundary_semantics():
+    """Window w covers (w*W, (w+1)*W]: accrual exactly AT the rollover
+    bills into the window that ends there; just after starts the next."""
+    at = cost.window_surplus_bills([W], [10.0])
+    assert len(at) == 1 and at[0].surplus_vcpu_seconds == 10.0
+    before = cost.window_surplus_bills([np.nextafter(W, 0.0)], [10.0])
+    assert len(before) == 1 and before[0].surplus_vcpu_seconds == 10.0
+    after = cost.window_surplus_bills([np.nextafter(W, np.inf)], [10.0])
+    assert len(after) == 2
+    assert after[0].surplus_vcpu_seconds == 0.0
+    assert after[1].surplus_vcpu_seconds == 10.0
+    assert after[1].index == 1 and after[1].start_s == W
+
+
+def test_surplus_window_telescopes_multiday():
+    t = np.array([0.5 * W, W, 1.5 * W, 2.0 * W, 2.7 * W])
+    c = np.array([3.0, 5.0, 8.0, 11.0, 11.5])
+    bills = cost.window_surplus_bills(t, c)
+    assert [b.surplus_vcpu_seconds for b in bills] == [5.0, 6.0, 0.5]
+    assert sum(b.surplus_vcpu_seconds for b in bills) == c[-1]
+    assert bills[0].usd == pytest.approx(
+        5.0 / cost.VCPU_SECONDS_PER_CREDIT_HOUR
+        * cost.UNLIMITED_USD_PER_VCPU_HOUR)
+    ext = cost.window_surplus_bills([0.1 * W], [2.0], horizon_s=3.2 * W)
+    assert len(ext) == 4 and all(b.surplus_vcpu_seconds == 0.0
+                                 for b in ext[1:])
+    with pytest.raises(ValueError):
+        cost.window_surplus_bills([2.0, 1.0], [0.0, 1.0])
+    with pytest.raises(ValueError):
+        cost.window_surplus_bills([1.0, 2.0], [1.0, 0.0])
+
+
+def test_surplus_window_from_traffic_timeline():
+    """Multi-day diurnal run on unlimited nodes: the timeline's
+    cumulative surplus series splits into 24 h bills that sum exactly to
+    the engine's total surplus_credits."""
+    nodes = make_cluster(2, "t3.large", slots_per_node=3,
+                         cpu_initial_fraction=0.05, unlimited=True)
+    tmpl = arrivals.make_template(4, seed=2, demand=(0.8, 1.0),
+                                  burst_fraction=1.0)
+    dt = 64.0
+    n_ticks = int(2.5 * W / dt)                     # 2.5 simulated days
+    cfg = vecsim.VecSimConfig(n_ticks=n_ticks, dt=dt, scheduler="cash",
+                              traffic="diurnal", table_slots=24,
+                              slo_bins=16, sample_period=16 * dt)
+    sc = arrivals.build_traffic_scenario(nodes, tmpl, mode="diurnal",
+                                         rate=0.02, amp=0.9, period=W,
+                                         rng_seed=0)
+    res = vecsim.run_scenarios([sc], cfg)
+    total = float(res["surplus_credits"][0])
+    assert total > 0.0, "unlimited fleet under load accrued no surplus"
+    # close the series with the end-of-run total: the sampled timeline
+    # stops at the last sample tick, before the final accruals
+    times = np.append(np.asarray(res["timeline_t"]), n_ticks * dt)
+    cum = np.append(np.asarray(res["timeline"]["surplus_cum"][0]), total)
+    bills = cost.window_surplus_bills(times, cum, horizon_s=n_ticks * dt)
+    assert len(bills) == 3                           # 2.5 days -> 3 windows
+    assert sum(b.surplus_vcpu_seconds for b in bills) == pytest.approx(
+        total, rel=1e-9)
+    assert all(b.surplus_vcpu_seconds >= 0.0 for b in bills)
+
+
+# ---------------------------------------------------------------------------
+# saturation tier
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_multiday_saturation_sweep():
+    """Multi-day open-loop saturation: a seed x scheduler grid over a
+    3-day diurnal stream, oracle-checked at full horizon for one point.
+    Slow tier — the default tier-1 lane deselects this."""
+    nodes = _fleet(4, 3, 0.2)
+    tmpl = arrivals.make_template(6, seed=11)
+    dt = 60.0
+    n_ticks = int(3 * W / dt)
+    base = vecsim.VecSimConfig(n_ticks=n_ticks, dt=dt, traffic="diurnal",
+                               table_slots=48, slo_bins=48,
+                               slo_max_s=6.0 * 3600.0)
+
+    def builder(rng_seed):
+        return arrivals.build_traffic_scenario(nodes, tmpl, mode="diurnal",
+                                               rate=0.03, amp=0.7, period=W,
+                                               rng_seed=rng_seed)
+
+    spec = SweepSpec(builder, {"scheduler": ["cash", "stock"],
+                               "rng_seed": [0, 1]}, base=base)
+    res = run_sweep(spec, shards=1)
+    cols = res.scalars()
+    assert np.all(cols["n_completed"] > 100)
+    assert np.all(np.isfinite(cols["lat_p99"]))
+    g = res.groups[0]
+    sc = builder(rng_seed=g.points[0].coord_dict["rng_seed"])
+    _assert_engine_matches_oracle(g.cfg, sc, 0, g.outputs)

@@ -188,6 +188,23 @@ def test_matches_oracle_sequential_submission():
     _assert_equivalent(out, 0, oracle, jobs)
 
 
+def test_emit_task_times_off_matches_scalars():
+    """``emit_task_times=False`` drops the (T,) start/finish carries (the
+    multi-day sweep slimming) but must leave every scalar output — the
+    makespan included, now tracked by a scalar last-release — unchanged."""
+    jobs = _mixed_jobs(9, net=False)
+    sc = vecsim.build_scenario(_cluster(4), jobs)
+    full = _run_vec([sc], "cash")
+    cfg = vecsim.VecSimConfig(n_ticks=2000, scheduler="cash", impl="xla",
+                              emit_task_times=False)
+    slim = vecsim.run_scenarios([sc], cfg)
+    for k in ("makespan", "all_done", "surplus_credits", "total_cpu_work",
+              "cpu_work_served", "node_busy_seconds"):
+        assert np.array_equal(np.asarray(full[k]), np.asarray(slim[k])), k
+    for k in ("finish", "start", "job_completion", "job_mask"):
+        assert k in full and k not in slim, k
+
+
 def test_heterogeneous_batch_matches_per_scenario_oracles():
     """Stacking pads tasks/nodes/groups — padded scenarios must still agree
     with their own oracle, and padding must not leak across the batch."""
