@@ -1,12 +1,177 @@
 """Kernel-layer micro-benchmarks (CPU wall-clock of the XLA reference path;
-TPU perf is assessed structurally via the roofline — see DESIGN.md)."""
+TPU perf is assessed structurally via the roofline — see DESIGN.md).
+
+Besides the attention/SSD kernels, this covers the simulator's tick
+kernels: `ops.bucket_serve_distribute` (token-bucket serve + pro-rata
+distribution) and the whole-tick megakernel `ops.megatick`, the latter
+timed against an honest 4-dispatch unfused pipeline (telemetry estimate,
+placement, serve, observe) at several pool shapes. Read the speedup
+column carefully: standalone the fused kernel wins (one dispatch vs
+four — dispatch overhead dominates at these sizes), but INSIDE the
+jitted tick scan, where XLA already fuses the unfused phases and no
+per-phase dispatch exists, the megakernel's (T, N) interval matrix
+loses to the packed cumsum on CPU (see ``tick_phases`` in
+BENCH_vecsim.json) — which is why ``VecSimConfig.fusion="auto"`` keeps
+the unfused tick there and fuses on TPU. A k-unroll section times the
+full engine at unroll 1/2/4 (the unroll win needs the legacy CPU
+runtime flag benchmarks/run.py sets; standalone this module may show
+parity).
+"""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
+from repro.kernels import megatick as mk
 from repro.kernels import ops
+
+# (tasks, nodes) pool shapes: a small fleet tick, the full-bench fleet
+# tick, and a traffic-table-sized one
+POOL_SHAPES = ((64, 8), (512, 16), (4096, 32))
+DT, ACTUAL_PERIOD, USAGE_PERIOD = 1.0, 60.0, 300.0
+
+
+def _pool_inputs(key, t: int, n: int):
+    """Synthetic mid-scan tick state: ~half the tasks pending placement,
+    the rest already running on a node; credit balances mid-range."""
+    ks = jax.random.split(key, 6)
+    m_pend = jax.random.uniform(ks[0], (t,)) < 0.5
+    node_prev = jnp.where(
+        m_pend, -1, jax.random.randint(ks[1], (t,), 0, n, jnp.int32))
+    dem_task = jax.random.uniform(ks[2], (t,), minval=0.1, maxval=0.95)
+    live = jnp.ones((t,), bool)
+    balance = jax.random.uniform(ks[3], (n,), minval=0.0, maxval=200.0)
+    baseline = jnp.full((n,), 0.4)
+    burst = jnp.full((n,), 8.0)
+    capacity = jnp.full((n,), 576.0)
+    unlimited = jnp.zeros((n,))
+    free = jax.random.randint(ks[4], (n,), 0, 9, jnp.int32)
+    from repro.core import vecsim
+
+    tel = vecsim._fresh_telemetry(n, balance.dtype)
+    return (m_pend, node_prev, dem_task, live, balance, baseline, burst,
+            capacity, unlimited, free, tel)
+
+
+def _unfused_tick(t: int, n: int):
+    """The unfused comparator: the same estimate -> placement -> serve ->
+    observe tick as FOUR separate jitted dispatches (the phase structure
+    `core.vecsim` uses when ``fusion="unfused"``)."""
+    from repro.core import vecsim
+
+    est = jax.jit(lambda tel, bal, base, cap, now: mk.telemetry_estimate(
+        tel, bal, base, cap, now, "predicted"))
+
+    @jax.jit
+    def place(credits, m_pend, free):
+        order, _ = vecsim._node_orders(credits)
+        (r,) = vecsim._packed_ranks(m_pend)
+        n_all = r[-1] + 1
+        cum, taken = vecsim._pack_counts(order, free, n_all)
+        assign = vecsim._gather_phase_nodes(
+            [vecsim._pack_table(order, cum, t)], [cum[-1]], [m_pend], [r], t)
+        return assign, taken
+
+    @jax.jit
+    def serve(assign, node_prev, live, dem_task, balance, baseline, burst,
+              capacity, unlimited):
+        nidx = jnp.where(assign >= 0, assign, node_prev)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        hot = (nidx[None, :] == ids[:, None]) & live[None, :]
+        demand = hot.astype(dem_task.dtype) @ dem_task
+        return ops.bucket_serve_distribute(
+            balance, demand, baseline, burst, capacity, unlimited, nidx,
+            dem_task, dt=DT, impl="xla")
+
+    observe = jax.jit(lambda tel, bal, rate, now: mk.telemetry_observe(
+        tel, bal, rate, now, actual_period=ACTUAL_PERIOD,
+        usage_period=USAGE_PERIOD))
+
+    def tick(inputs, now):
+        (m_pend, node_prev, dem_task, live, balance, baseline, burst,
+         capacity, unlimited, free, tel) = inputs
+        credits = est(tel, balance, baseline, capacity, now)
+        assign, taken = place(credits, m_pend, free)
+        share, work, new_bal, sur = serve(
+            assign, node_prev, live, dem_task, balance, baseline, burst,
+            capacity, unlimited)
+        new_tel = observe(tel, new_bal, work / DT, now)
+        return share, new_bal, new_tel
+
+    return tick
+
+
+def _bench_tick_kernels() -> None:
+    """bucket_serve_distribute + megatick vs the unfused 4-dispatch tick,
+    per pool shape."""
+    for t, n in POOL_SHAPES:
+        key = jax.random.PRNGKey(t + n)
+        inputs = _pool_inputs(key, t, n)
+        (m_pend, node_prev, dem_task, live, balance, baseline, burst,
+         capacity, unlimited, free, tel) = inputs
+        now = jnp.asarray(37.0, balance.dtype)
+
+        # -- serve kernel alone ------------------------------------------
+        nidx = jnp.where(m_pend, jnp.int32(0), node_prev)
+        demand = jnp.bincount(jnp.clip(nidx, 0, n - 1), dem_task, length=n)
+        sfn = lambda: ops.bucket_serve_distribute_jit(   # noqa: E731
+            balance, demand, baseline, burst, capacity, unlimited, nidx,
+            dem_task, dt=DT, impl="xla")
+        jax.block_until_ready(sfn())
+        us = timed(lambda: jax.block_until_ready(sfn()), n=5)
+        emit(f"kernels/bucket_serve_{t}x{n}", us,
+             f"{t / (us * 1e-6) / 1e6:.1f}Mtask/s")
+
+        # -- whole-tick megakernel vs unfused 4-dispatch tick ------------
+        mfn = jax.jit(lambda inp, now: ops.megatick(
+            inp[0], jnp.zeros(t, jnp.int32), jnp.int32(0), inp[1],
+            jnp.ones(t, bool), inp[2], inp[3], inp[4], inp[5], inp[6],
+            inp[7], inp[8], inp[9], inp[10], now, dt=DT,
+            actual_period=ACTUAL_PERIOD, usage_period=USAGE_PERIOD,
+            tel_mode="predicted", by_credit=True, carried_rank=False,
+            impl="xla"))
+        jax.block_until_ready(mfn(inputs, now))
+        us_f = timed(lambda: jax.block_until_ready(mfn(inputs, now)), n=5)
+
+        unf = _unfused_tick(t, n)
+        jax.block_until_ready(unf(inputs, now))
+        us_u = timed(lambda: jax.block_until_ready(unf(inputs, now)), n=5)
+
+        emit(f"kernels/megatick_fused_{t}x{n}", us_f,
+             f"{t / (us_f * 1e-6) / 1e6:.1f}Mtask/s")
+        emit(f"kernels/megatick_unfused_{t}x{n}", us_u,
+             f"{t / (us_u * 1e-6) / 1e6:.1f}Mtask/s")
+        emit(f"kernels/megatick_speedup_{t}x{n}", 0.0,
+             f"{us_u / us_f:.2f}x")
+
+
+def _bench_engine_unroll() -> None:
+    """Full engine throughput at k ticks unrolled per scan step (the
+    engine-level lever `benchmarks/run.py` ships at unroll=4 together with
+    the legacy CPU runtime flag — see `_tune_xla_flags` there)."""
+    from benchmarks import vecsim_bench as vb
+    from repro import sweep as sweeplib
+    from repro.core import vecsim
+
+    n_scen, n_nodes, n_ticks = 4, 8, 500
+    scen = [vecsim.build_scenario(vb._nodes(n_nodes),
+                                  vb._sweep_jobs(s, n_nodes, 0.04))
+            for s in range(n_scen)]
+    batch = vecsim.stack_scenarios(scen)
+    for k in (1, 2, 4):
+        cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash",
+                                  impl="xla", unroll=k)
+        sweeplib.run_group(batch, cfg, shards=1)        # warm/compile
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            sweeplib.run_group(batch, cfg, shards=1)
+            best = min(best, time.perf_counter() - t0)
+        rate = n_ticks * n_nodes * n_scen / best
+        emit(f"kernels/engine_unroll{k}", best * 1e6, f"{rate:.3e}")
 
 
 def run() -> None:
@@ -46,6 +211,10 @@ def run() -> None:
     h(x, dt, A, Bm, Cm).block_until_ready()
     us = timed(lambda: h(x, dt, A, Bm, Cm).block_until_ready(), n=3)
     emit("kernels/ssd_xla_2k", us, f"{b2 * l2 / (us * 1e-6) / 1e6:.2f}Mtok/s")
+
+    # simulator tick kernels + engine unroll variants
+    _bench_tick_kernels()
+    _bench_engine_unroll()
 
 
 if __name__ == "__main__":

@@ -1,15 +1,28 @@
-"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md SS Roofline).
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md SS Roofline)
+plus the vecsim tick-phase breakdown (`vecsim_phases`).
 
 Reads results/dryrun/*.json (written by repro.launch.dryrun), prints the
 per-(arch x shape) three-term table for the single-pod mesh, and flags the
 dominant bottleneck per cell. Run the sweep first:
 
   PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+`vecsim_phases` measures where the fleet simulator's tick actually spends
+its time — placement / serve / telemetry (closed loop) and the streaming
+SLO histogram (open loop), for the unfused engine and the whole-tick
+megakernel — by **stub ablation**: re-jit the SAME engine with one phase's
+functions replaced by shape/dtype-correct constant stubs and attribute the
+wall-clock delta to that phase. Results feed ``BENCH_vecsim.json``
+(``tick_phases``) via benchmarks/run.py. The numbers are estimates, not
+exact: removing a phase also removes whatever XLA fused around it, so a
+phase's cost includes its share of neighboring fusion clusters.
 """
 from __future__ import annotations
 
+import contextlib
 import glob
 import json
+import time
 from pathlib import Path
 from typing import Dict, List
 
@@ -23,6 +36,191 @@ def load(mesh: str = "pod16x16") -> List[dict]:
     for fn in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
         recs.append(json.loads(Path(fn).read_text()))
     return recs
+
+
+# --------------------------------------------------------------------------
+# vecsim tick-phase breakdown (stub ablation)
+# --------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def _patched(obj, name, repl):
+    """Temporarily replace ``obj.name`` (module-level function) so a fresh
+    jit trace picks up the stub. The engine resolves these names through
+    module globals at trace time, so patch + re-jit is a clean ablation."""
+    orig = getattr(obj, name)
+    setattr(obj, name, repl)
+    try:
+        yield
+    finally:
+        setattr(obj, name, orig)
+
+
+def _time_engine_ms(cfg, statics, arrays, patches=(), reps: int = 3) -> float:
+    """Best-of-``reps`` steady-state wall time (ms) of a FRESH jit of
+    `vecsim.batched_engine` with ``patches`` active during trace. A fresh
+    `jax.jit` (not `vecsim._run_batch_jit`) bypasses the engine's lru
+    cache, which would otherwise hand back the unpatched executable."""
+    import jax
+
+    from repro.core import vecsim
+
+    with contextlib.ExitStack() as es:
+        for obj, name, repl in patches:
+            es.enter_context(_patched(obj, name, repl))
+        fn = jax.jit(vecsim.batched_engine(cfg, *statics))
+        jax.block_until_ready(fn(arrays))           # warm/compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(arrays))
+            best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def vecsim_phases(fast: bool = True) -> Dict[str, dict]:
+    """Where the simulated tick spends its time, by stub ablation.
+
+    Re-jits the SAME engine with one phase's functions replaced by
+    shape/dtype-correct constant stubs; the phase's cost is the wall-clock
+    delta vs the intact engine (floored at 0 — XLA re-fuses around the
+    hole, so small phases can vanish into neighboring clusters). Three
+    engines are profiled:
+
+    * ``unfused``  — closed-loop, packed-cumsum tick: placement / serve /
+      telemetry / other (residual).
+    * ``fused``    — closed-loop with ``fusion="fused"`` (ops.megatick):
+      the whole-tick megakernel as one ablatable unit.
+    * ``traffic``  — open-loop ring-buffer tick: the streaming SLO
+      histogram's share.
+
+    Estimates, not exact microbenchmarks — see the module docstring.
+    """
+    import jax.numpy as jnp
+
+    from benchmarks import traffic_bench as tb
+    from benchmarks import vecsim_bench as vb
+    from repro.core import vecsim
+    from repro.kernels import ops
+    from repro.traffic import arrivals
+
+    n_scen, n_nodes, n_ticks = (8, 8, 1_000) if fast else (16, 16, 2_500)
+    scale = 0.08 if fast else 0.75
+
+    # ---- workloads (the bench builders' saturation shapes) ---------------
+    closed = [vecsim.build_scenario(vb._nodes(n_nodes),
+                                    vb._sweep_jobs(s, n_nodes, scale))
+              for s in range(n_scen)]
+    stacked = vecsim.stack_scenarios(closed)
+    statics = vecsim.batch_statics(stacked)
+    batch = vecsim.batch_arrays(stacked)
+    # unroll=1: phase *proportions* are what this measures, and 8 fresh jit
+    # traces at unroll=4 would quadruple compile time for no extra signal
+    cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash", impl="xla")
+
+    tmpl = arrivals.make_template(8, seed=0, work=(60.0, 240.0),
+                                  burst_fraction=1.0)
+    rate = n_nodes * vb.SLOTS / 300.0
+    traffic = [arrivals.build_traffic_scenario(tb._fleet(n_nodes, 0.2), tmpl,
+                                               mode="poisson", rate=rate,
+                                               rng_seed=s)
+               for s in range(n_scen)]
+    tstacked = vecsim.stack_scenarios(traffic)
+    tstatics = vecsim.batch_statics(tstacked)
+    tbatch = vecsim.batch_arrays(tstacked)
+    tcfg = vecsim.VecSimConfig(n_ticks=n_ticks, dt=5.0, scheduler="cash",
+                               traffic="poisson",
+                               table_slots=n_nodes * vb.SLOTS,
+                               slo_bins=8, impl="xla")
+
+    # ---- phase stubs (shape/dtype-correct constants) ---------------------
+    def stub_orders(kv):
+        ids = jnp.arange(kv.shape[0], dtype=jnp.int32)
+        return ids, ids
+
+    placement = [
+        (vecsim, "_node_orders", stub_orders),
+        (vecsim, "_pack_counts",
+         lambda order_ids, free, n_pend: (jnp.zeros_like(free),
+                                          jnp.zeros_like(free))),
+        (vecsim, "_pack_table",
+         lambda order_ids, cum, ls: jnp.zeros((ls,), jnp.int32)),
+        (vecsim, "_packed_ranks",
+         lambda *masks: [jnp.zeros(m.shape, jnp.int32) for m in masks]),
+        (vecsim, "_gather_phase_nodes",
+         lambda tables, totals, masks, ranks, ls:
+             jnp.full(masks[0].shape, -1, jnp.int32)),
+    ]
+
+    def stub_serve(balance, demand, baseline, burst, capacity, unlimited,
+                   nidx, dem_task, *, dt, impl="auto", dist_demand=None):
+        return (jnp.zeros_like(dem_task), jnp.zeros_like(balance),
+                balance, jnp.zeros_like(balance))
+
+    serve = [(ops, "bucket_serve_distribute", stub_serve)]
+
+    telemetry = [
+        (vecsim, "_telemetry_estimate",
+         lambda cfg_, tel, balance, baseline, capacity, now, mode: capacity),
+        (vecsim, "_telemetry_observe",
+         lambda cfg_, tel, balance, rate_, now: tel),
+    ]
+
+    def stub_megatick(m_pend, rank, n_pend, node_prev, alive, dem_task,
+                      live, balance, baseline, burst, capacity, unlimited,
+                      free, tel, now, **kw):
+        t = m_pend.shape[0]
+        return (jnp.full((t,), -1, jnp.int32), jnp.zeros_like(free),
+                jnp.zeros((t,), balance.dtype),
+                jnp.zeros((t,), balance.dtype),
+                balance, jnp.zeros_like(balance), tel)
+
+    megatick = [(ops, "megatick", stub_megatick)]
+
+    def stub_hist(edges, nfin, fin_now, now, tb_start, tb_submit):
+        b = edges.shape[0] - 1
+        return (jnp.zeros((2 * b,), jnp.int32),
+                jnp.zeros((2,), tb_submit.dtype),
+                jnp.zeros((2,), tb_submit.dtype))
+
+    histogram = [(vecsim, "_slo_hist_update", stub_hist)]
+
+    # ---- measure ---------------------------------------------------------
+    import dataclasses
+
+    t_unf = _time_engine_ms(cfg, statics, batch)
+    t_no_place = _time_engine_ms(cfg, statics, batch, placement)
+    t_no_serve = _time_engine_ms(cfg, statics, batch, serve)
+    t_no_tel = _time_engine_ms(cfg, statics, batch, telemetry)
+
+    fcfg = dataclasses.replace(cfg, fusion="fused")
+    t_fused = _time_engine_ms(fcfg, statics, batch)
+    t_no_mk = _time_engine_ms(fcfg, statics, batch, megatick)
+
+    t_tr = _time_engine_ms(tcfg, tstatics, tbatch)
+    t_no_hist = _time_engine_ms(tcfg, tstatics, tbatch, histogram)
+
+    amt = lambda full, ablated: max(0.0, full - ablated)    # noqa: E731
+    place_ms = amt(t_unf, t_no_place)
+    serve_ms = amt(t_unf, t_no_serve)
+    tel_ms = amt(t_unf, t_no_tel)
+    out = {
+        "shape": [n_scen, n_nodes, n_ticks],
+        "method": "stub-ablation estimate (re-jit with phase stubbed)",
+        "unfused": {
+            "total_ms": t_unf,
+            "placement_ms": place_ms,
+            "serve_ms": serve_ms,
+            "telemetry_ms": tel_ms,
+            "other_ms": max(0.0, t_unf - place_ms - serve_ms - tel_ms),
+        },
+        "fused": {"total_ms": t_fused, "megatick_ms": amt(t_fused, t_no_mk)},
+        "traffic": {"total_ms": t_tr, "histogram_ms": amt(t_tr, t_no_hist)},
+    }
+    emit("tick_phases/shape", 0.0, f"{n_scen}x{n_nodes}x{n_ticks}")
+    for eng in ("unfused", "fused", "traffic"):
+        for k, v in out[eng].items():
+            emit(f"tick_phases/{eng}/{k}", v * 1e3, f"{v:.1f}ms")
+    return out
 
 
 def run() -> Dict[str, dict]:

@@ -9,7 +9,9 @@ Python-loop figure drivers are skipped. Unless the caller already forced a
 device count, the driver sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` *before* JAX
 initializes so the sweep runner's >= 2-way scenario-axis sharding is
-exercised even on single-accelerator CI hosts.
+exercised even on single-accelerator CI hosts; it also selects the legacy
+CPU runtime (``--xla_cpu_use_thunk_runtime=false``), which the k-unrolled
+tick scan needs to pay off (see `_tune_xla_flags`).
 
 Both modes write ``BENCH_vecsim.json`` (Python-loop vs vectorized
 throughput). The file keeps one section per mode — ``{"fast": {...},
@@ -29,14 +31,28 @@ import sys
 import traceback
 
 _FORCE_DEVICES = "--xla_force_host_platform_device_count=2"
+_NO_THUNKS = "--xla_cpu_use_thunk_runtime=false"
 
 
-def _force_host_devices() -> None:
-    """Expose >= 2 host-platform devices for sweep sharding. Must run
-    before JAX initializes its backends; respects an explicit user flag."""
+def _tune_xla_flags() -> None:
+    """Benchmark-process XLA flags. Must run before JAX initializes its
+    backends; respects explicit user settings for either flag.
+
+    * >= 2 host-platform devices, so sweep sharding is exercised even on
+      single-accelerator CI hosts.
+    * legacy (non-thunk) CPU runtime: a measured ~25% engine-throughput
+      win on this XLA version, and the k-unrolled tick scan
+      (``VecSimConfig.unroll=4``) is neutral-to-slightly-positive under
+      it but a clear ~25% LOSS under the default thunk runtime — the two
+      settings ship together (the unrolled scan stays bitwise-identical
+      either way; only speed changes).
+    """
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = f"{flags} {_FORCE_DEVICES}".strip()
+        flags = f"{flags} {_FORCE_DEVICES}".strip()
+    if "xla_cpu_use_thunk_runtime" not in flags:
+        flags = f"{flags} {_NO_THUNKS}".strip()
+    os.environ["XLA_FLAGS"] = flags
 
 
 def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
@@ -56,10 +72,18 @@ def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
                    if k in ("fast", "full", "traffic")}
     # mesh topology rides in THIS mode's meta: sharded throughput numbers
     # are only comparable across machines with the same device layout, and
-    # the other mode's section may have been written on different hardware
+    # the other mode's section may have been written on different hardware.
+    # The engine execution config (unroll factor, fusion impl, pipelined
+    # runner) rides there too — a perf delta PR-over-PR should name its
+    # lever.
     from repro.sweep import mesh_topology
 
-    doc[mode] = dict(stats, meta=mesh_topology())
+    stats = dict(stats)
+    meta = mesh_topology()
+    engine = stats.pop("engine", None)
+    if engine is not None:
+        meta["engine"] = engine
+    doc[mode] = dict(stats, meta=meta)
     return doc
 
 
@@ -70,7 +94,7 @@ def main(argv=None) -> None:
     parser.add_argument("--out", default="BENCH_vecsim.json",
                         help="where to write the vecsim throughput JSON")
     args = parser.parse_args(argv)
-    _force_host_devices()
+    _tune_xla_flags()
 
     from benchmarks import (
         ablation_joint,
@@ -127,6 +151,13 @@ def main(argv=None) -> None:
     doc = None
     try:
         stats = vecsim_bench.run(fast=args.fast)
+        try:
+            # tick-phase breakdown (placement/serve/telemetry/histogram,
+            # fused vs unfused) rides in the same per-mode section
+            stats["tick_phases"] = roofline.vecsim_phases(fast=args.fast)
+        except Exception as e:  # noqa: BLE001
+            failures.append(("roofline.vecsim_phases", e))
+            traceback.print_exc()
         doc = _merged_bench(out_path, mode, stats)
     except Exception as e:  # noqa: BLE001
         failures.append(("vecsim_bench", e))
@@ -135,10 +166,24 @@ def main(argv=None) -> None:
         tstats = traffic_bench.run(fast=args.fast)
         from repro.sweep import mesh_topology
 
+        if args.fast:
+            # the ISSUE-7 acceptance gate, re-checked at the driver level:
+            # the fused/unrolled engine must keep the open-loop path
+            # within 20% of the closed-batch path (traffic_bench also
+            # asserts this internally)
+            ratio = float(tstats.get("throughput_ratio_vs_closed", 0.0))
+            if ratio < 0.8:
+                failures.append(("traffic_ratio", AssertionError(
+                    f"traffic/closed throughput ratio {ratio:.2f} < 0.8")))
         if doc is None:
             doc = _merged_bench(out_path, mode, {})
             doc.pop(mode, None)         # vecsim_bench failed: keep prior
-        doc["traffic"] = dict(tstats, meta=mesh_topology())
+        tstats = dict(tstats)
+        tmeta = mesh_topology()
+        tengine = tstats.pop("engine", None)
+        if tengine is not None:
+            tmeta["engine"] = tengine
+        doc["traffic"] = dict(tstats, meta=tmeta)
     except Exception as e:  # noqa: BLE001
         failures.append(("traffic_bench", e))
         traceback.print_exc()

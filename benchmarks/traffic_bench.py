@@ -131,7 +131,7 @@ def run(fast: bool = False) -> dict:
                                     _closed_jobs(s, n_nodes, scale))
               for s in range(n_scen)]
     closed_cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash",
-                                     impl="xla")
+                                     impl="xla", unroll=4)
     closed_batch = vecsim.stack_scenarios(closed)
 
     # the traffic run is an all-burst saturation stream, matching the
@@ -152,7 +152,7 @@ def run(fast: bool = False) -> dict:
     tr_cfg = vecsim.VecSimConfig(n_ticks=tr_ticks, dt=5.0, scheduler="cash",
                                  traffic="poisson",
                                  table_slots=n_nodes * SLOTS,
-                                 slo_bins=8, impl="xla")
+                                 slo_bins=8, impl="xla", unroll=4)
     traffic = [arrivals.build_traffic_scenario(_fleet(n_nodes, 0.2), tmpl_b,
                                                mode="poisson", rate=rate,
                                                rng_seed=s)
@@ -189,9 +189,17 @@ def run(fast: bool = False) -> dict:
                     f"{ratio:.2f}x the closed path's {closed_rate:.3e} "
                     "(needs >= 0.8)")
 
+    # execution config of the timed engines (lifted into meta by run.py);
+    # fusion resolved for the open-loop all-burst stream
+    tr_active = vecsim.batch_statics(traffic_batch)[3]
+    engine_info = {"unroll": tr_cfg.unroll,
+                   "fusion": vecsim.fusion_choice(tr_cfg, tr_active),
+                   "pipelined": sweeplib.RunnerOptions().pipeline}
+
     return {
         "mode": "fast" if fast else "full",
         "shape": [n_scen, n_nodes, n_ticks],
+        "engine": engine_info,
         "traffic_ticks": tr_ticks,
         "table_slots": n_nodes * SLOTS,
         "closed_ticks_nodes_scen_per_s": closed_rate,

@@ -98,7 +98,19 @@ def run(fast: bool = False) -> dict:
                                        _sweep_jobs(s, n_nodes, scale))
                  for s in range(n_scen)]
     batch = vecsim.stack_scenarios(scenarios)
-    cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash", impl="xla")
+    # unroll=4: k tick bodies per scan step (bitwise-identical to k=1;
+    # pays off under the legacy CPU runtime benchmarks/run.py selects).
+    # fusion="auto" resolves per backend — the whole-tick megakernel wins
+    # on TPU, the unfused packed-cumsum tick wins on CPU (measured).
+    cfg = vecsim.VecSimConfig(n_ticks=n_ticks, scheduler="cash", impl="xla",
+                              unroll=4)
+    active = vecsim.batch_statics(batch)[3]
+    engine_info = {"unroll": cfg.unroll,
+                   "fusion": vecsim.fusion_choice(cfg, active),
+                   "pipelined": sweeplib.RunnerOptions().pipeline}
+    emit("vecsim/engine", 0.0,
+         f"unroll={engine_info['unroll']} fusion={engine_info['fusion']} "
+         f"pipelined={engine_info['pipelined']}")
     t0 = time.perf_counter()
     sweeplib.run_group(batch, cfg, shards=1)
     t_cold = time.perf_counter() - t0     # includes jit compile
@@ -139,6 +151,7 @@ def run(fast: bool = False) -> dict:
         "vec_ticks_nodes_scen_per_s": vec_rate,
         "speedup": speedup,
         "all_done": all_done,
+        "engine": engine_info,   # lifted into meta by benchmarks/run.py
     }
 
     # --- sharded sweep (scenario axis across local devices) --------------

@@ -55,6 +55,7 @@ import numpy as np
 from repro.core.annotations import Annotation, Task
 from repro.core.cluster import Node
 from repro.core.simulator import Job
+from repro.kernels import megatick as _mk
 from repro.kernels import ops
 
 # annotation codes in the task class array
@@ -67,7 +68,7 @@ _ANN_CODE = {
     Annotation.NETWORK: CLS_NET,
 }
 
-_NEVER = -1.0e30          # "no telemetry sample yet" timestamp sentinel
+_NEVER = _mk.NEVER        # "no telemetry sample yet" timestamp sentinel
 _INF = np.float64(np.inf)
 
 
@@ -94,6 +95,12 @@ class VecSimConfig:
     slo_bins: int = 64               # latency/queue-wait histogram bins
     slo_max_s: float = 0.0           # histogram upper edge (0 = the horizon)
     emit_task_times: bool = True     # closed batch: carry per-task start/finish
+    # whole-tick megakernel (ops.megatick): auto | fused | unfused.
+    # "auto" fuses only where eligible AND the backend is TPU — on CPU the
+    # kernel's (T, N) interval matrix loses to the packed cumsum + table
+    # gather (measured), so "auto" keeps the unfused tick there.
+    fusion: str = "auto"
+    unroll: int = 1                  # ticks unrolled per lax.scan step
 
 
 def sample_tick_indices(n_ticks: int, dt: float,
@@ -473,39 +480,66 @@ def _telemetry_estimate(cfg: VecSimConfig, tel: Dict[str, jnp.ndarray],
                         balance: jnp.ndarray, baseline: jnp.ndarray,
                         capacity: jnp.ndarray, now: jnp.ndarray,
                         mode: str) -> jnp.ndarray:
-    """Algorithm 2 / ablations, array form (mirrors core.credits)."""
-    if mode == "oracle":
-        return balance
-    has = tel["act_t"] > _NEVER / 2
-    if mode == "stale":
-        return jnp.where(has, tel["act_bal"], capacity)
-    # predicted: extrapolate from the 1-min utilization samples
-    use_ok = tel["use_t"] >= tel["act_t"]
-    dt_act = now - jnp.where(has, tel["act_t"], now)
-    est = tel["act_bal"] + jnp.where(use_ok,
-                                     (baseline - tel["use_rate"]) * dt_act, 0.0)
-    est = jnp.clip(est, 0.0, capacity)
-    return jnp.where(has, est, capacity)
+    """Algorithm 2 / ablations, array form (mirrors core.credits). The
+    math lives in kernels.megatick so the fused whole-tick kernel and this
+    unfused path share one source of truth."""
+    return _mk.telemetry_estimate(tel, balance, baseline, capacity, now,
+                                  mode)
 
 
 def _telemetry_observe(cfg: VecSimConfig, tel: Dict[str, jnp.ndarray],
                        balance: jnp.ndarray, rate: jnp.ndarray,
                        now: jnp.ndarray) -> Dict[str, jnp.ndarray]:
     """CloudWatch emulation: publish actuals / windowed usage on period
-    boundaries (mirrors core.credits.CloudWatchEmulator.observe)."""
-    accum = tel["accum"] + rate
-    pub_a = now - tel["act_t"] >= cfg.actual_period
-    pub_u = now - tel["use_t"] >= cfg.usage_period
-    span = jnp.maximum(now - tel["win_start"], 1e-9)
-    avg = accum / jnp.maximum(1.0, span)
-    return {
-        "act_bal": jnp.where(pub_a, balance, tel["act_bal"]),
-        "act_t": jnp.where(pub_a, now, tel["act_t"]),
-        "use_rate": jnp.where(pub_u, avg, tel["use_rate"]),
-        "use_t": jnp.where(pub_u, now, tel["use_t"]),
-        "accum": jnp.where(pub_u, 0.0, accum),
-        "win_start": jnp.where(pub_u, now, tel["win_start"]),
-    }
+    boundaries (mirrors core.credits.CloudWatchEmulator.observe; math in
+    kernels.megatick, shared with the fused whole-tick kernel)."""
+    return _mk.telemetry_observe(tel, balance, rate, now,
+                                 actual_period=cfg.actual_period,
+                                 usage_period=cfg.usage_period)
+
+
+def fusion_eligible(cfg: VecSimConfig,
+                    active: Tuple[bool, bool, bool, bool, bool]) -> bool:
+    """Whether (cfg, batch statics) fit the whole-tick megakernel: a
+    single placement phase over the cpu pool alone, deterministic node
+    order. The round-robin network phase and multi-phase ticks keep the
+    unfused path."""
+    if cfg.resource != "cpu" or cfg.shuffle != "none":
+        return False
+    if cfg.scheduler not in ("cash", "stock"):
+        return False
+    if active[0] or active[1]:          # disk / network pools in play
+        return False
+    if cfg.scheduler == "stock":
+        return True
+    # cash: exactly one placement phase, and never the round-robin one
+    return (int(active[2]) + int(active[3]) + int(active[4]) == 1
+            and not active[3])
+
+
+def fusion_choice(cfg: VecSimConfig,
+                  active: Tuple[bool, bool, bool, bool, bool]) -> str:
+    """Resolve ``cfg.fusion`` to the tick implementation that will run:
+    ``"fused"`` (ops.megatick) or ``"unfused"``. ``fusion="fused"`` on an
+    ineligible configuration raises rather than silently diverging."""
+    if cfg.fusion == "unfused":
+        return "unfused"
+    eligible = fusion_eligible(cfg, active)
+    if cfg.fusion == "fused":
+        if not eligible:
+            raise ValueError(
+                "fusion='fused' needs a single-phase cpu-pool cash|stock "
+                f"configuration with shuffle='none'; got scheduler="
+                f"{cfg.scheduler!r} resource={cfg.resource!r} "
+                f"shuffle={cfg.shuffle!r} active={active}")
+        return "fused"
+    if cfg.fusion != "auto":
+        raise ValueError(f"fusion must be auto|fused|unfused, "
+                         f"got {cfg.fusion!r}")
+    # auto: the megakernel's (T, N) interval matrix loses to the packed
+    # cumsum + table gather on CPU (measured) — fuse only on TPU
+    return "fused" if (eligible and jax.default_backend() == "tpu") \
+        else "unfused"
 
 
 def _fresh_telemetry(n: int, dtype) -> Dict[str, jnp.ndarray]:
@@ -513,6 +547,30 @@ def _fresh_telemetry(n: int, dtype) -> Dict[str, jnp.ndarray]:
     return {"act_bal": z, "act_t": jnp.full(n, _NEVER, dtype),
             "use_rate": z, "use_t": jnp.full(n, _NEVER, dtype),
             "accum": z, "win_start": z}
+
+
+def _moments(x: jnp.ndarray, nmask: jnp.ndarray, n_real: jnp.ndarray):
+    """Masked first/second timeline moments of a per-node series. The tick
+    emits RAW moments; `batched_engine` turns them into the std AFTER the
+    scan — the `m2 - m*m` subtraction is FMA-contraction-sensitive, and
+    keeping it out of the loop body makes the timeline bitwise-stable
+    across `cfg.unroll` codegen variants."""
+    m = jnp.sum(jnp.where(nmask, x, 0.0)) / n_real
+    m2 = jnp.sum(jnp.where(nmask, x * x, 0.0)) / n_real
+    return m, m2
+
+
+def _timeline_std(tl: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Replace the streamed `_<pool>_credit_m2` moments with the public
+    `<pool>_credit_std` series (see `_moments`)."""
+    out = {}
+    for k, v in tl.items():
+        if k.startswith("_") and k.endswith("_credit_m2"):
+            m = tl[k[1:-3] + "_mean"]
+            out[k[1:-3] + "_std"] = jnp.sqrt(jnp.maximum(0.0, v - m * m))
+        else:
+            out[k] = v
+    return out
 
 
 def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
@@ -536,6 +594,9 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
     act_disk = active[0] or cfg.resource in ("disk", "joint")
     act_net = active[1]
     p_burst, p_netcls, p_plain = active[2], active[3], active[4]
+    # whole-tick megakernel (ops.megatick) vs the unfused tick — resolved
+    # at trace time; bitwise-identical either way (tests/test_megatick.py)
+    fused = fusion_choice(cfg, active) == "fused"
 
     is_burst = (sc["cls"] == CLS_BURST_CPU) | (sc["cls"] == CLS_BURST_DISK)
     is_net = sc["cls"] == CLS_NET
@@ -623,8 +684,9 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                                now, wave_t)
 
         # ---- 3) telemetry estimates (pre-observe state, like Algorithm 2)
+        # (the fused path's estimate happens inside ops.megatick)
         est_cpu = est_disk = None
-        if need_credits and (joint or cfg.resource == "cpu"):
+        if need_credits and not fused and (joint or cfg.resource == "cpu"):
             est_cpu = _telemetry_estimate(cfg, st.get("tel_cpu"),
                                           st["cpu_bal"], sc["cpu_baseline"],
                                           sc["cpu_capacity"], now, tel_mode)
@@ -657,7 +719,26 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             order3 = ids
 
         ls = N * smax                      # slot rank space (static)
-        if cfg.scheduler == "stock":
+        tel_fused = None
+        if fused:
+            # ---- fused 3-6: estimate + placement + serve + observe -------
+            if cfg.scheduler == "stock":
+                m_pend, by_credit, mk_mode = ready, False, "none"
+            elif p_burst:
+                m_pend, by_credit, mk_mode = ready & is_burst, True, tel_mode
+            else:
+                m_pend, by_credit, mk_mode = ready & is_plain, False, tel_mode
+            (assign, taken, share_cpu, w_cpu, cpu_bal, sur_add,
+             tel_fused) = ops.megatick(
+                m_pend, jnp.zeros(T, jnp.int32), jnp.int32(0),
+                st["node_of"], ~released, sc["dem_cpu"], rem_cpu > 0.0,
+                st["cpu_bal"], sc["cpu_baseline"], sc["cpu_burst"],
+                sc["cpu_capacity"], sc["cpu_unlimited"], free,
+                st.get("tel_cpu"), now, dt=dt,
+                actual_period=cfg.actual_period,
+                usage_period=cfg.usage_period, tel_mode=mk_mode,
+                by_credit=by_credit, carried_rank=False, impl=cfg.impl)
+        elif cfg.scheduler == "stock":
             (r_all,) = _packed_ranks(ready)
             n_all = r_all[-1] + 1
             cum, taken = _pack_counts(order3, free, n_all)
@@ -748,22 +829,23 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         # nothing round-trips through a serve-then-gather pair
         onehot = jnp.where((node_of[:, None] == ids[None, :]) &
                            running[:, None], jnp.ones((), dtype), 0.0)
-        cols = [jnp.where(running & (rem_cpu > 0.0), sc["dem_cpu"], 0.0)]
-        if act_disk:
-            cols.append(jnp.where(running & (rem_disk > 0.0),
-                                  sc["dem_disk"], 0.0))
-        if act_net:
-            cols.append(jnp.where(running & (rem_net > 0.0),
-                                  sc["dem_net"], 0.0))
-        per_node = jax.lax.dot_general(
-            jnp.stack(cols), onehot, (((1,), (0,)), ((), ())),
-            preferred_element_type=dtype)                    # (C, N)
-        dem_cpu = per_node[0]
+        if not fused:
+            cols = [jnp.where(running & (rem_cpu > 0.0), sc["dem_cpu"], 0.0)]
+            if act_disk:
+                cols.append(jnp.where(running & (rem_disk > 0.0),
+                                      sc["dem_disk"], 0.0))
+            if act_net:
+                cols.append(jnp.where(running & (rem_net > 0.0),
+                                      sc["dem_net"], 0.0))
+            per_node = jax.lax.dot_general(
+                jnp.stack(cols), onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=dtype)                # (C, N)
+            dem_cpu = per_node[0]
 
-        share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
-            st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
-            sc["cpu_capacity"], sc["cpu_unlimited"], nidx, sc["dem_cpu"],
-            dt=dt, impl=cfg.impl)
+            share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
+                st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
+                sc["cpu_capacity"], sc["cpu_unlimited"], nidx,
+                sc["dem_cpu"], dt=dt, impl=cfg.impl)
 
         disk_bal = peak_bal = sus_bal = done_disk = done_net = None
         w_disk = w_net = zero_n
@@ -818,9 +900,11 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             (((0,), (0,)), ((), ())),
             preferred_element_type=dtype).astype(jnp.int32)
 
-        # ---- 6) CloudWatch observe --------------------------------------
+        # ---- 6) CloudWatch observe (fused: rides in the megakernel) ------
         tel_cpu, tel_disk = st.get("tel_cpu"), st.get("tel_disk")
-        if tel_cpu is not None:
+        if fused:
+            tel_cpu = tel_fused
+        elif tel_cpu is not None:
             tel_cpu = _telemetry_observe(cfg, tel_cpu, cpu_bal, w_cpu / dt, now)
         if tel_disk is not None:
             tel_disk = _telemetry_observe(cfg, tel_disk, disk_bal,
@@ -868,28 +952,27 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                 jnp.sum(jnp.where(nmask, jnp.ones((), dtype), 0.0)), 1.0)
             total_vcpus = jnp.maximum(jnp.sum(sc["vcpus"]), 1e-9)
 
-            def _mstd(x):
-                m = jnp.sum(jnp.where(nmask, x, 0.0)) / n_real
-                m2 = jnp.sum(jnp.where(nmask, x * x, 0.0)) / n_real
-                return m, jnp.sqrt(jnp.maximum(0.0, m2 - m * m))
-
             # effective balance: unlimited overdraft counts negative (Fig 8b)
-            cm, cs = _mstd(cpu_bal - new_st["cpu_sur"])
+            cm, c2 = _moments(cpu_bal - new_st["cpu_sur"], nmask, n_real)
             ys = {
                 "cpu_util": jnp.sum(w_cpu) / dt / total_vcpus,
-                "cpu_credit_mean": cm, "cpu_credit_std": cs,
+                "cpu_credit_mean": cm, "_cpu_credit_m2": c2,
                 "queue_depth": jnp.sum(
                     (ready & (assign < 0)).astype(jnp.int32)),
             }
             if act_disk:
-                dm, ds = _mstd(disk_bal)
+                dm, d2 = _moments(disk_bal, nmask, n_real)
                 ys["disk_credit_mean"] = dm
-                ys["disk_credit_std"] = ds
+                ys["_disk_credit_m2"] = d2
                 ys["iops"] = jnp.sum(w_disk) / dt / n_real
         return new_st, ys
 
+    # unroll k tick bodies per scan step to amortize per-iteration dispatch
+    # (lax.scan handles the non-divisible remainder natively; bitwise-
+    # identical to k=1, asserted by tests/test_megatick.py)
     st, ys = jax.lax.scan(tick, state,
-                          jnp.arange(cfg.n_ticks, dtype=jnp.int32))
+                          jnp.arange(cfg.n_ticks, dtype=jnp.int32),
+                          unroll=max(1, cfg.unroll))
 
     real = ~sc["task_pad"]
     all_done = jnp.all(st["released"] | ~real)
@@ -933,6 +1016,46 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         # ONCE per batch (still inside the compiled/sharded program)
         out["timeline"] = ys
     return out
+
+
+def _slo_hist_update(edges: jnp.ndarray, nfin: jnp.ndarray,
+                     fin_now: jnp.ndarray, now: jnp.ndarray,
+                     tb_start: jnp.ndarray, tb_submit: jnp.ndarray):
+    """Streaming SLO histogram increment for the jobs released this tick.
+
+    bin = count of upper edges <= value, overflow into the last bin (the
+    oracle mirrors this comparison in slo.bucket_index). The histogram
+    increments fall out of CUMULATIVE counts: with c[j] = #finished jobs
+    whose value >= edges[1 + j], h[0] = nfin - c[0], h[b] = c[b-1] - c[b],
+    and the last bin absorbs the c[B-2] tail — one fused (2, C, B-1)
+    comparison tensor per tick, no scatter (batched scatters serialize
+    horribly on CPU) and no per-value one-hot.
+
+    lat/wait are >= 0 for finished jobs, so ONE zero-masked copy feeds the
+    sums, the (zero-initialised) running maxima, AND the cumulative
+    counts: a masked zero can never reach the first upper edge
+    (edges[1] > 0), so no explicit fin_now AND is needed inside the
+    comparison tensor. The (B-1, 2, C) layout reduces over the trailing
+    contiguous axis (~20% whole-scan speedup over a middle axis), and the
+    accumulator narrows to uint8 where the table width C bounds per-tick
+    counts below 256 — exact, and it quarters the bytes this memory-bound
+    reduction moves.
+
+    Returns ``(hadd (2B,), sums (2,), maxs (2,))`` — the histogram
+    increment and the latency/wait sum and max over this tick's releases.
+    """
+    b = edges.shape[0] - 1
+    c = fin_now.shape[0]
+    vals2 = jnp.stack([jnp.broadcast_to(now, (c,)), tb_start]) \
+        - tb_submit[None, :]                                 # (2, C) lat/wait
+    mv = jnp.where(fin_now[None, :], vals2, 0.0)
+    acc_dt = jnp.uint8 if c < 256 else jnp.int32
+    cum = jnp.sum(edges[1:b, None, None] <= mv[None, :, :],
+                  axis=2, dtype=acc_dt).astype(jnp.int32).T  # (2, B-1)
+    hadd = jnp.concatenate(
+        [nfin[None] - cum[:, :1].T, (cum[:, :-1] - cum[:, 1:]).T,
+         cum[:, -1:].T]).T                                   # (2, B)
+    return hadd.reshape(-1), jnp.sum(mv, axis=1), jnp.max(mv, axis=1)
 
 
 def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
@@ -981,6 +1104,10 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
     p_burst, p_plain = active[2], active[4]
     # placement phases, in queue order (stock: one class-blind queue)
     P = 1 if cfg.scheduler == "stock" else int(p_burst) + int(p_plain)
+    # whole-tick megakernel vs the unfused tick (see _simulate_one); the
+    # traffic path feeds the kernel its CARRIED FIFO ranks — no per-tick
+    # placement cumsum either way
+    fused = fusion_choice(cfg, active) == "fused"
 
     edges = jnp.asarray(_slo.edges_for(cfg), dtype)       # (B + 1,) static
     ids = jnp.arange(N, dtype=jnp.int32)
@@ -1037,38 +1164,10 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         fin_now = occupied & (st["tb_node"] >= 0) & (st["tb_rem"] <= 1e-9)
         nfin = jnp.sum(fin_now, dtype=jnp.int32)
 
-        # bin = count of upper edges <= value, overflow into the last bin
-        # (the oracle mirrors this comparison in slo.bucket_index). The
-        # histogram increments fall out of CUMULATIVE counts: with
-        # c[j] = #finished jobs whose value >= edges[1 + j],
-        # h[0] = nfin - c[0], h[b] = c[b-1] - c[b], and the last bin
-        # absorbs the c[B-2] tail — one fused (2, C, B-1) comparison
-        # tensor per tick, no scatter (batched scatters serialize
-        # horribly on CPU) and no per-value one-hot.
-        vals2 = jnp.stack([jnp.broadcast_to(now, (C,)), st["tb_start"]]) \
-            - st["tb_submit"][None, :]                       # (2, C) lat/wait
-        # lat/wait are >= 0 for finished jobs, so ONE zero-masked copy
-        # feeds the sums, the (zero-initialised) running maxima, AND the
-        # cumulative counts: a masked zero can never reach the first
-        # upper edge (edges[1] > 0), so no explicit fin_now AND is needed
-        # inside the comparison tensor
-        mv = jnp.where(fin_now[None, :], vals2, 0.0)
-        # (B-1, 2, C) with the reduction over the trailing contiguous
-        # axis — ~20% whole-scan speedup over reducing a middle axis
-        # narrow accumulation where safe: per-tick counts are bounded by
-        # the table width C, so a uint8 (C < 256) accumulator is exact
-        # and quarters the bytes the reduction's materialized comparison
-        # tensor moves (this scan is memory-bound)
-        acc_dt = jnp.uint8 if C < 256 else jnp.int32
-        cum = jnp.sum(edges[1:B, None, None] <= mv[None, :, :],
-                      axis=2, dtype=acc_dt).astype(jnp.int32).T  # (2, B-1)
-        hadd = jnp.concatenate(
-            [nfin[None] - cum[:, :1].T, (cum[:, :-1] - cum[:, 1:]).T,
-             cum[:, -1:].T]).T                               # (2, B)
-        hist2 = st["hist2"] + hadd.reshape(-1)               # (2B,) carried
+        hadd, sums, maxs = _slo_hist_update(edges, nfin, fin_now, now,
+                                            st["tb_start"], st["tb_submit"])
+        hist2 = st["hist2"] + hadd                           # (2B,) carried
         n_done = st["n_done"] + nfin
-        sums = jnp.sum(mv, axis=1)
-        maxs = jnp.max(mv, axis=1)
         lat_sum = st["lat_sum"] + sums[0]
         wait_sum = st["wait_sum"] + sums[1]
         lat_max = jnp.maximum(st["lat_max"], maxs[0])
@@ -1131,7 +1230,7 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
 
         # ---- 3) telemetry estimates (Algorithm 2, as the closed path) ----
         est_cpu = None
-        if need_credits:
+        if need_credits and not fused:
             est_cpu = _telemetry_estimate(cfg, st.get("tel_cpu"),
                                           st["cpu_bal"], sc["cpu_baseline"],
                                           sc["cpu_capacity"], now, tel_mode)
@@ -1160,7 +1259,27 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         # 0), and the carried queue lengths replace per-tick mask reduces
         pranks = [tb_rank] * len(masks)
         pcounts = [qlen[i] for i in range(len(masks))]
-        if cfg.scheduler == "stock":
+        tel_fused = None
+        if fused:
+            # ---- fused 3-6: estimate + placement + serve + observe -------
+            # (eligibility guarantees exactly one placement phase, so the
+            # carried ranks/length of queue 0 are the whole pending set)
+            by_credit = cfg.scheduler == "cash" and bool(p_burst)
+            mk_mode = "none" if cfg.scheduler == "stock" else tel_mode
+            (assign, taken, share_cpu, w_cpu, cpu_bal, sur_add,
+             tel_fused) = ops.megatick(
+                masks[0], tb_rank, pcounts[0], tb_node,
+                jnp.ones(C, bool), tb_dem, tb_rem > 0.0,
+                st["cpu_bal"], sc["cpu_baseline"], sc["cpu_burst"],
+                sc["cpu_capacity"], sc["cpu_unlimited"], free,
+                st.get("tel_cpu"), now, dt=dt,
+                actual_period=cfg.actual_period,
+                usage_period=cfg.usage_period, tel_mode=mk_mode,
+                by_credit=by_credit, carried_rank=True, impl=cfg.impl)
+            # rank-prefix consumed = full free capacity (== cum[-1] of the
+            # unfused packed cumsum), clipped against qlen below
+            totals = [jnp.sum(free, dtype=jnp.int32)]
+        elif cfg.scheduler == "stock":
             cum, taken = _pack_counts(order3, free, pcounts[0])
             assign = _gather_phase_nodes([_pack_table(order3, cum, ls)],
                                          [cum[-1]], masks, pranks, ls)
@@ -1203,16 +1322,19 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             qlen = qlen - jnp.stack(n_placed)
 
         # ---- 5) serve + distribute (cpu pool, fused kernel) --------------
+        # the onehot stays outside the fusion boundary: rel_cnt (next
+        # tick's slot frees) needs it either way
         onehot = jnp.where((tb_node[:, None] == ids[None, :])
                            & running[:, None], jnp.ones((), dtype), 0.0)
-        col = jnp.where(running & (tb_rem > 0.0), tb_dem, 0.0)
-        dem_cpu = jax.lax.dot_general(
-            col[None, :], onehot, (((1,), (0,)), ((), ())),
-            preferred_element_type=dtype)[0]
-        share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
-            st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
-            sc["cpu_capacity"], sc["cpu_unlimited"], nidx, tb_dem,
-            dt=dt, impl=cfg.impl)
+        if not fused:
+            col = jnp.where(running & (tb_rem > 0.0), tb_dem, 0.0)
+            dem_cpu = jax.lax.dot_general(
+                col[None, :], onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=dtype)[0]
+            share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
+                st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
+                sc["cpu_capacity"], sc["cpu_unlimited"], nidx, tb_dem,
+                dt=dt, impl=cfg.impl)
         upd = running & (tb_rem > 0.0)
         inc = jnp.where(upd, jnp.minimum(share_cpu, tb_rem), 0.0)
         tb_rem = tb_rem - inc
@@ -1224,7 +1346,9 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
 
         # ---- 6) CloudWatch observe --------------------------------------
         tel_cpu = st.get("tel_cpu")
-        if tel_cpu is not None:
+        if fused:
+            tel_cpu = tel_fused
+        elif tel_cpu is not None:
             tel_cpu = _telemetry_observe(cfg, tel_cpu, cpu_bal, w_cpu / dt,
                                          now)
 
@@ -1259,15 +1383,10 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
                 jnp.sum(jnp.where(nmask, jnp.ones((), dtype), 0.0)), 1.0)
             total_vcpus = jnp.maximum(jnp.sum(sc["vcpus"]), 1e-9)
 
-            def _mstd(x):
-                m = jnp.sum(jnp.where(nmask, x, 0.0)) / n_real
-                m2 = jnp.sum(jnp.where(nmask, x * x, 0.0)) / n_real
-                return m, jnp.sqrt(jnp.maximum(0.0, m2 - m * m))
-
-            cm, cs = _mstd(cpu_bal - new_st["cpu_sur"])
+            cm, c2 = _moments(cpu_bal - new_st["cpu_sur"], nmask, n_real)
             ys = {
                 "cpu_util": jnp.sum(w_cpu) / dt / total_vcpus,
-                "cpu_credit_mean": cm, "cpu_credit_std": cs,
+                "cpu_credit_mean": cm, "_cpu_credit_m2": c2,
                 "queue_depth": jnp.sum(
                     (ready & (assign < 0)).astype(jnp.int32)),
                 "occupancy": jnp.sum(occupied.astype(jnp.int32)),
@@ -1330,8 +1449,8 @@ def batched_engine(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             sidx = jnp.asarray(sample_tick_indices(cfg.n_ticks, cfg.dt,
                                                    cfg.sample_period),
                                dtype=jnp.int32)
-            out["timeline"] = {k: v[:, sidx]
-                               for k, v in out["timeline"].items()}
+            out["timeline"] = _timeline_std(
+                {k: v[:, sidx] for k, v in out["timeline"].items()})
         return out
 
     return engine

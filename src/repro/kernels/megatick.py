@@ -1,0 +1,306 @@
+"""Whole-tick megakernel (CASH fleet simulator, paper SS2 + Algorithm 1/2).
+
+One fused device step covering everything between a tick's bookkeeping
+prologue and its release epilogue for the single-phase, cpu-pool engine
+configurations (`core.vecsim` resolves eligibility):
+
+  * Algorithm-2 telemetry **estimate** from the carried CloudWatch state
+    (``predicted`` / ``stale`` / ``oracle`` / ``none`` for stock);
+  * Algorithm-1 **placement** of the phase's FIFO queue over the
+    credit-ordered (cash) or id-ordered (stock / plain-class) node visit
+    sequence — expressed as *interval assignment*: node j's packed slots
+    cover queue ranks ``[cum_excl_j, cum_excl_j + free_j)``, so the
+    rank -> node map is one (T, N) containment test instead of the
+    unfused path's packed cumsum + lookup-table gather;
+  * token-bucket **serve + pro-rata distribution** (the `bucket_serve`
+    arithmetic, shared via `_serve_math`);
+  * Algorithm-2 telemetry **observe** (CloudWatch publish on period
+    boundaries).
+
+The interval-assignment placement is bitwise-identical to the unfused
+packed-cumsum formulation: both place each phase's rank prefix onto the
+same visit order with the same id tie-break, and all bookkeeping is exact
+integer arithmetic (asserted engine-wide by tests/test_megatick.py).
+`megatick_ref` is the XLA lowering; `megatick_pallas` is the single
+`pl.pallas_call` TPU kernel (whole pool resident in VMEM, runnable under
+``interpret=True`` on CPU). Both wrap the SAME `megatick_math`, differing
+only in the work/demand gather formulation (direct index vs one-hot
+matmul — identical values; the share is masked to served lanes so the two
+agree lane-for-lane).
+
+The telemetry arithmetic lives HERE (not in core.vecsim) so the kernel
+layer never imports the engine (vecsim -> ops -> megatick); vecsim
+delegates its `_telemetry_estimate` / `_telemetry_observe` wrappers to
+these functions, keeping one source of truth for Algorithm 2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bucket_serve import LANES, _serve_math
+from repro.kernels.compat import CompilerParams
+
+NEVER = -1.0e30           # "no telemetry sample yet" timestamp sentinel
+TEL_KEYS = ("act_bal", "act_t", "use_rate", "use_t", "accum", "win_start")
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 (CloudWatch credit telemetry) — the one source of truth
+# ---------------------------------------------------------------------------
+
+def telemetry_estimate(tel: Optional[Dict[str, jax.Array]],
+                       balance: jax.Array, baseline: jax.Array,
+                       capacity: jax.Array, now: jax.Array,
+                       mode: str) -> jax.Array:
+    """Credit estimate from the carried telemetry state (mirrors
+    core.credits / the paper's Algorithm 2 ablations)."""
+    if mode == "oracle":
+        return balance
+    has = tel["act_t"] > NEVER / 2
+    if mode == "stale":
+        return jnp.where(has, tel["act_bal"], capacity)
+    # predicted: extrapolate from the 1-min utilization samples
+    use_ok = tel["use_t"] >= tel["act_t"]
+    dt_act = now - jnp.where(has, tel["act_t"], now)
+    est = tel["act_bal"] + jnp.where(use_ok,
+                                     (baseline - tel["use_rate"]) * dt_act,
+                                     0.0)
+    est = jnp.clip(est, 0.0, capacity)
+    return jnp.where(has, est, capacity)
+
+
+def telemetry_observe(tel: Dict[str, jax.Array], balance: jax.Array,
+                      rate: jax.Array, now: jax.Array, *,
+                      actual_period: float,
+                      usage_period: float) -> Dict[str, jax.Array]:
+    """CloudWatch emulation: publish actuals / windowed usage on period
+    boundaries (mirrors core.credits.CloudWatchEmulator.observe)."""
+    accum = tel["accum"] + rate
+    pub_a = now - tel["act_t"] >= actual_period
+    pub_u = now - tel["use_t"] >= usage_period
+    span = jnp.maximum(now - tel["win_start"], 1e-9)
+    avg = accum / jnp.maximum(1.0, span)
+    return {
+        "act_bal": jnp.where(pub_a, balance, tel["act_bal"]),
+        "act_t": jnp.where(pub_a, now, tel["act_t"]),
+        "use_rate": jnp.where(pub_u, avg, tel["use_rate"]),
+        "use_t": jnp.where(pub_u, now, tel["use_t"]),
+        "accum": jnp.where(pub_u, 0.0, accum),
+        "win_start": jnp.where(pub_u, now, tel["win_start"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the fused tick math (shared by the XLA reference and the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def megatick_math(m_pend, rank, n_pend, node_prev, alive, dem_task, live,
+                  balance, baseline, burst, capacity, unlimited, free, tel,
+                  now, *, dt: float, actual_period: float,
+                  usage_period: float, tel_mode: str, by_credit: bool,
+                  carried_rank: bool, gather: str = "direct"):
+    """One fused tick step for a single placement phase over one pool.
+
+    Task-side (T,): ``m_pend`` pending-in-phase mask, ``rank`` carried
+    FIFO queue ranks (read only when ``carried_rank``; the closed path
+    derives ranks from one cumsum of ``m_pend``), ``node_prev`` node
+    before placement (-1 unplaced), ``alive`` slot-participates mask
+    (closed: not released; traffic: everything), ``dem_task`` demand,
+    ``live`` work-remaining mask. Node-side (N,): the token-bucket fields,
+    ``free`` slot counts, ``tel`` the Algorithm-2 carry (or None).
+    ``n_pend`` is the carried queue length (read only when
+    ``carried_rank``).
+
+    Returns ``(assign, taken, share, work, new_balance, surplus_add,
+    new_tel)`` — ``share`` is masked to lanes actually served
+    (running & live), so both gather formulations agree lane-for-lane.
+    """
+    dtype = balance.dtype
+    n = balance.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    unl = unlimited > 0.5 if unlimited.dtype != jnp.bool_ else unlimited
+
+    # ---- Algorithm 2 estimate (pre-observe state) ------------------------
+    est = None
+    if tel_mode != "none":
+        est = telemetry_estimate(tel, balance, baseline, capacity, now,
+                                 tel_mode)
+
+    # ---- queue ranks ------------------------------------------------------
+    if carried_rank:
+        n_q = n_pend
+    else:
+        rank = jnp.cumsum(m_pend.astype(jnp.int32)) - 1
+        n_q = rank[-1] + 1
+
+    # ---- placement: interval assignment over the visit order -------------
+    # before[j, k]: node k is visited before node j. Cash visits by credit
+    # estimate descending with id tie-break (sorted(key=(-credit, nid)));
+    # stock / the plain-class phase visit in id order.
+    if by_credit:
+        ck, cj = est[None, :], est[:, None]
+        tie = (ck == cj) & (ids[None, :] < ids[:, None])
+        before = (ck > cj) | tie
+    else:
+        before = ids[None, :] < ids[:, None]
+    cum_excl = jnp.sum(jnp.where(before, free[None, :], 0), axis=1,
+                       dtype=jnp.int32)                       # (N,)
+    taken = jnp.clip(n_q - cum_excl, 0, free)
+    # rank r lands on the unique node whose packed-slot interval covers it
+    r = rank[:, None]
+    hit = m_pend[:, None] & (cum_excl[None, :] <= r) \
+        & (r < (cum_excl + free)[None, :])                    # (T, N)
+    assign = jnp.sum(jnp.where(hit, ids[None, :] + 1, 0), axis=1,
+                     dtype=jnp.int32) - 1
+
+    # ---- post-placement occupancy ----------------------------------------
+    node_of = jnp.where(assign >= 0, assign, node_prev)
+    running = (node_of >= 0) & alive
+    nidx = jnp.clip(node_of, 0, n - 1)
+
+    # ---- aggregate demand + serve + pro-rata distribute ------------------
+    onehot = jnp.where((node_of[:, None] == ids[None, :]) &
+                       running[:, None], jnp.ones((), dtype), 0.0)
+    col = jnp.where(running & live, dem_task, 0.0)
+    dem_node = jax.lax.dot_general(
+        col[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=dtype)[0]                      # (N,)
+    work, new_bal, sur_add = _serve_math(balance, dem_node, baseline, burst,
+                                         capacity, unl, dt=dt)
+    if gather == "direct":
+        w_t, dd_t = work[nidx], dem_node[nidx]
+    else:   # one-hot matmul gather (TPU kernel path) — identical values
+        w_t = jax.lax.dot_general(onehot, work[:, None],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=dtype)[:, 0]
+        dd_t = jax.lax.dot_general(onehot, dem_node[:, None],
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=dtype)[:, 0]
+    share = jnp.where(dd_t > 0.0, w_t * dem_task / dd_t, 0.0)
+    share = jnp.where(running & live, share, 0.0)
+
+    # ---- Algorithm 2 observe ---------------------------------------------
+    new_tel = None
+    if tel_mode in ("predicted", "stale"):
+        new_tel = telemetry_observe(tel, new_bal, work / dt, now,
+                                    actual_period=actual_period,
+                                    usage_period=usage_period)
+    return assign, taken, share, work, new_bal, sur_add, new_tel
+
+
+def megatick_ref(*args, **kw):
+    """XLA reference lowering of the whole-tick kernel."""
+    return megatick_math(*args, gather="direct", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: the whole pool resident in VMEM, one grid step
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, width, fill):
+    pad = width - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full(pad, fill, x.dtype)])
+
+
+def _megatick_kernel(mp_ref, rank_ref, npend_ref, nprev_ref, alive_ref,
+                     dem_ref, live_ref, bal_ref, base_ref, brst_ref,
+                     cap_ref, unl_ref, free_ref, tel_ref, now_ref,
+                     assign_ref, taken_ref, share_ref, work_ref, nbal_ref,
+                     sur_ref, ntel_ref, *, dt, actual_period, usage_period,
+                     tel_mode, by_credit, carried_rank):
+    tel = None
+    if tel_mode in ("predicted", "stale"):
+        tel = {k: tel_ref[i, :] for i, k in enumerate(TEL_KEYS)}
+    assign, taken, share, work, nbal, sur, ntel = megatick_math(
+        mp_ref[0, :] > 0, rank_ref[0, :], npend_ref[0, 0], nprev_ref[0, :],
+        alive_ref[0, :] > 0, dem_ref[0, :], live_ref[0, :] > 0,
+        bal_ref[0, :], base_ref[0, :], brst_ref[0, :], cap_ref[0, :],
+        unl_ref[0, :], free_ref[0, :], tel, now_ref[0, 0], dt=dt,
+        actual_period=actual_period, usage_period=usage_period,
+        tel_mode=tel_mode, by_credit=by_credit, carried_rank=carried_rank,
+        gather="onehot")
+    assign_ref[0, :] = assign
+    taken_ref[0, :] = taken
+    share_ref[0, :] = share
+    work_ref[0, :] = work
+    nbal_ref[0, :] = nbal
+    sur_ref[0, :] = sur
+    if ntel is None:
+        ntel_ref[...] = jnp.zeros(ntel_ref.shape, ntel_ref.dtype)
+    else:
+        ntel_ref[...] = jnp.stack([ntel[k] for k in TEL_KEYS])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dt", "actual_period", "usage_period", "tel_mode", "by_credit",
+    "carried_rank", "interpret"))
+def megatick_pallas(m_pend, rank, n_pend, node_prev, alive, dem_task, live,
+                    balance, baseline, burst, capacity, unlimited, free,
+                    tel, now, *, dt: float, actual_period: float,
+                    usage_period: float, tel_mode: str, by_credit: bool,
+                    carried_rank: bool, interpret: bool = False):
+    """`megatick_math` as one `pl.pallas_call`: the task table and node
+    fleet ride whole in VMEM (lane-padded), one grid step per tick. Pool
+    shapes here are small — tens of nodes, at most a few thousand task
+    slots — so whole-block residency beats any tiling."""
+    t, n = dem_task.shape[0], balance.shape[0]
+    dtype = balance.dtype
+    tp, np_ = -(-t // LANES) * LANES, -(-n // LANES) * LANES
+
+    fmask = functools.partial(jnp.asarray, dtype=dtype)
+    task_in = [
+        _pad_to(fmask(m_pend), tp, 0.0),
+        _pad_to(rank.astype(jnp.int32), tp, 0),
+        jnp.asarray(n_pend, jnp.int32).reshape(1, 1),
+        _pad_to(node_prev.astype(jnp.int32), tp, -1),
+        _pad_to(fmask(alive), tp, 0.0),
+        _pad_to(dem_task.astype(dtype), tp, 0.0),
+        _pad_to(fmask(live), tp, 0.0),
+    ]
+    node_in = [_pad_to(v.astype(dtype), np_, 0.0)
+               for v in (balance, baseline, burst, capacity)]
+    node_in.append(_pad_to(fmask(unlimited), np_, 0.0))
+    node_in.append(_pad_to(free.astype(jnp.int32), np_, 0))
+    if tel is None:
+        tel_arr = jnp.zeros((len(TEL_KEYS), np_), dtype)
+    else:
+        tel_arr = jnp.stack([_pad_to(tel[k].astype(dtype), np_, 0.0)
+                             for k in TEL_KEYS])
+    inputs = [v.reshape(1, -1) if v.ndim == 1 else v
+              for v in task_in + node_in] + \
+        [tel_arr, jnp.asarray(now, dtype).reshape(1, 1)]
+
+    out_shape = [
+        jax.ShapeDtypeStruct((1, tp), jnp.int32),       # assign
+        jax.ShapeDtypeStruct((1, np_), jnp.int32),      # taken
+        jax.ShapeDtypeStruct((1, tp), dtype),           # share
+        jax.ShapeDtypeStruct((1, np_), dtype),          # work
+        jax.ShapeDtypeStruct((1, np_), dtype),          # new balance
+        jax.ShapeDtypeStruct((1, np_), dtype),          # surplus add
+        jax.ShapeDtypeStruct((len(TEL_KEYS), np_), dtype),  # new telemetry
+    ]
+    kernel = functools.partial(
+        _megatick_kernel, dt=dt, actual_period=actual_period,
+        usage_period=usage_period, tel_mode=tel_mode, by_credit=by_credit,
+        carried_rank=carried_rank)
+    # no grid: every ref is the whole (lane-padded) array in VMEM — the
+    # pool is tens of nodes x at most a few thousand task slots
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(),
+        interpret=interpret,
+    )(*inputs)
+    assign, taken, share, work, nbal, sur, ntel = outs
+    new_tel = None
+    if tel_mode in ("predicted", "stale"):
+        new_tel = {k: ntel[i, :n] for i, k in enumerate(TEL_KEYS)}
+    return (assign[0, :t], taken[0, :n], share[0, :t], work[0, :n],
+            nbal[0, :n], sur[0, :n], new_tel)

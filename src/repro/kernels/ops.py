@@ -22,6 +22,7 @@ from repro.kernels.bucket_serve import (
     bucket_serve_distribute_pallas,
     bucket_serve_pallas,
 )
+from repro.kernels.megatick import megatick_pallas, megatick_ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -124,6 +125,31 @@ def bucket_serve_distribute(balance: jax.Array, demand: jax.Array,
         balance, demand, baseline, burst, capacity, unlimited, nidx,
         dem_task, dt=dt, dist_demand=dist_demand,
         interpret=(impl == "interpret"))
+
+
+def megatick(m_pend, rank, n_pend, node_prev, alive, dem_task, live,
+             balance, baseline, burst, capacity, unlimited, free, tel, now,
+             *, dt: float, actual_period: float, usage_period: float,
+             tel_mode: str, by_credit: bool, carried_rank: bool,
+             impl: str = "auto"):
+    """Whole-tick megakernel (core.vecsim fused path): Algorithm-2
+    telemetry estimate, single-phase Algorithm-1 placement, token-bucket
+    serve + pro-rata distribution, and the telemetry observe, in one fused
+    step. Returns ``(assign, taken, share, work, new_balance,
+    surplus_add, new_tel)`` — see kernels.megatick.megatick_math for the
+    semantics contract."""
+    impl = _resolve(impl)
+    kw = dict(dt=dt, actual_period=actual_period, usage_period=usage_period,
+              tel_mode=tel_mode, by_credit=by_credit,
+              carried_rank=carried_rank)
+    if impl == "xla":
+        return megatick_ref(m_pend, rank, n_pend, node_prev, alive,
+                            dem_task, live, balance, baseline, burst,
+                            capacity, unlimited, free, tel, now, **kw)
+    return megatick_pallas(m_pend, rank, n_pend, node_prev, alive, dem_task,
+                           live, balance, baseline, burst, capacity,
+                           unlimited, free, tel, now,
+                           interpret=(impl == "interpret"), **kw)
 
 
 attention_jit = jax.jit(attention, static_argnames=(

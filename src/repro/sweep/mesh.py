@@ -109,18 +109,37 @@ def pad_scenario_axis(arrays: Dict[str, np.ndarray],
     return pad_rows(arrays, b + (-b) % n_shards), b
 
 
-def run_sharded(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
-                statics, n_shards: int, *,
-                donate: bool = False) -> Dict[str, Any]:
-    """Dispatch one stacked batch over ``n_shards`` devices. Returns raw
-    engine outputs (numpy, padding rows dropped) — the caller finalizes."""
+def dispatch_sharded(arrays: Dict[str, np.ndarray],
+                     cfg: vecsim.VecSimConfig, statics, n_shards: int, *,
+                     donate: bool = False) -> Tuple[Any, int]:
+    """Launch one stacked batch over ``n_shards`` devices WITHOUT waiting:
+    jax dispatch is async, so this returns ``(device output tree, real B)``
+    as soon as the computation is enqueued. The pipelined runner dispatches
+    chunk i+1 while chunk i's outputs are still materializing; call
+    `finalize_sharded` (which blocks on device->host transfer) to get
+    numpy. ``dispatch + finalize`` is exactly the old synchronous path —
+    same compiled program, bitwise-identical results."""
     smax, n_waves, n_jobs, active = statics
     padded, n_real = pad_scenario_axis(
         {k: np.asarray(v) for k, v in arrays.items()}, n_shards)
     fn = _sharded_engine(cfg, smax, n_waves, n_jobs, active, n_shards,
                          donate)
-    out = fn(padded)
+    return fn(padded), n_real
+
+
+def finalize_sharded(out: Any, n_real: int) -> Dict[str, Any]:
+    """Block on a `dispatch_sharded` output tree: device->host transfer,
+    padding rows dropped."""
     return jax.tree_util.tree_map(lambda v: np.asarray(v)[:n_real], out)
+
+
+def run_sharded(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
+                statics, n_shards: int, *,
+                donate: bool = False) -> Dict[str, Any]:
+    """Dispatch one stacked batch over ``n_shards`` devices. Returns raw
+    engine outputs (numpy, padding rows dropped) — the caller finalizes."""
+    return finalize_sharded(*dispatch_sharded(arrays, cfg, statics,
+                                              n_shards, donate=donate))
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,12 @@ bitwise-identical (asserted by `tests/test_sweep.py` and the
 Chunking slices the *stacked* group batch, so every chunk shares the
 group's padded dims and static flags: one compile per group regardless of
 chunk count, and chunked results concatenate (and bit-match) the unchunked
-run. With ``checkpoint_dir`` set the chunk store is a **work queue**:
+run. Execution is double-buffered by default (`RunnerOptions.pipeline`):
+each chunk is dispatched asynchronously and its device->host transfer,
+NPZ compression and atomic rename run on a background writer thread while
+the next chunk dispatches — the queue drains at device speed instead of
+serializing compute -> transfer -> compress -> rename, and results stay
+bitwise-identical to the synchronous path (same compiled program). With ``checkpoint_dir`` set the chunk store is a **work queue**:
 finished chunks persist as atomically-renamed NPZs and in-flight chunks
 are guarded by claim-file leases, so several host processes pointed at the
 same directory drain one calibration grid concurrently with zero
@@ -28,6 +33,8 @@ import hashlib
 import json
 import os
 import pathlib
+import queue
+import threading
 import time
 import uuid
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -55,6 +62,11 @@ class RunnerOptions:
     donate: bool = False             # donate chunk arrays (no-op on CPU)
     lease_s: float = 900.0           # claim lease before takeover
     poll_s: float = 0.1              # wait between passes over peers' chunks
+    # double-buffered execution: dispatch chunk i+1 while chunk i's
+    # results transfer + its NPZ compresses/renames on a background writer
+    # thread (bitwise-identical to the synchronous path — same compiled
+    # program, the overlap is host-side only)
+    pipeline: bool = True
 
 
 # --------------------------------------------------------------------------
@@ -82,9 +94,12 @@ def run_group(batch: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig, *,
     return _run_arrays(arrays, cfg, statics, shards, donate)
 
 
-def _run_arrays(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
-                statics, shards: Optional[int],
-                donate: bool) -> Dict[str, np.ndarray]:
+def _dispatch_arrays(arrays: Dict[str, np.ndarray],
+                     cfg: vecsim.VecSimConfig, statics,
+                     shards: Optional[int], donate: bool) -> Tuple[Any, int]:
+    """Enqueue one chunk on the devices without blocking (jax dispatch is
+    async). Returns ``(device output tree, real B)`` for
+    `_finalize_arrays`; dispatch + finalize == the synchronous path."""
     smax, n_waves, n_jobs, active = statics
     b = int(next(iter(arrays.values())).shape[0])
     n_shards = _resolve_shards(shards, b)
@@ -92,10 +107,23 @@ def _run_arrays(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
         out = vecsim._run_batch_jit(cfg, smax, n_waves, n_jobs, active,
                                     {k: np.asarray(v)
                                      for k, v in arrays.items()})
-    else:
-        out = mesh.run_sharded(arrays, cfg, statics, n_shards,
-                               donate=donate)
-    return vecsim.finalize_outputs(out, cfg)
+        return out, b     # vmap path: no padding; the [:b] trim is a no-op
+    return mesh.dispatch_sharded(arrays, cfg, statics, n_shards,
+                                 donate=donate)
+
+
+def _finalize_arrays(out: Any, n_real: int,
+                     cfg: vecsim.VecSimConfig) -> Dict[str, np.ndarray]:
+    """Block on a dispatched chunk: device->host transfer, padding rows
+    dropped, host-side finalization."""
+    return vecsim.finalize_outputs(mesh.finalize_sharded(out, n_real), cfg)
+
+
+def _run_arrays(arrays: Dict[str, np.ndarray], cfg: vecsim.VecSimConfig,
+                statics, shards: Optional[int],
+                donate: bool) -> Dict[str, np.ndarray]:
+    out, n_real = _dispatch_arrays(arrays, cfg, statics, shards, donate)
+    return _finalize_arrays(out, n_real, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -246,6 +274,57 @@ class WorkQueue:
         path.unlink(missing_ok=True)
 
 
+class _ChunkWriter:
+    """One background thread that finalizes + persists completed chunks so
+    the main thread can dispatch the next chunk meanwhile.
+
+    ``Queue(maxsize=1)`` IS the double buffer: at most one chunk is
+    finalizing/writing while one more is dispatched on the devices; a
+    third `submit` blocks, so memory stays bounded at two chunks. Each
+    submitted job owns its chunk's claim and releases it when the NPZ
+    rename (or a failure) lands — the WorkQueue lease/tmp-then-rename
+    contract is untouched, the work just moved off the dispatch thread.
+    A job failure parks the error and surfaces it on the next `submit` or
+    on `close`; later jobs are skipped (their claims still release) so a
+    broken sweep stops instead of burning through the queue."""
+
+    def __init__(self) -> None:
+        self._q: "queue.Queue[Optional[Any]]" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._loop,
+                                   name="sweep-chunk-writer", daemon=True)
+        self._t.start()
+
+    def _loop(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            try:
+                job(skip=self._err is not None)
+            except BaseException as e:        # parked, re-raised on submit
+                if self._err is None:
+                    self._err = e
+
+    def _raise_pending(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def submit(self, job) -> None:
+        """Hand one chunk job to the writer (blocks while both buffers are
+        busy). Jobs take ``skip=`` and must release their claim even when
+        skipped."""
+        self._raise_pending()
+        self._q.put(job)
+
+    def close(self) -> None:
+        """Drain the queue, join the thread, re-raise any parked error."""
+        self._q.put(None)
+        self._t.join()
+        self._raise_pending()
+
+
 def _trim_outputs(out: Dict[str, Any], n_real: int) -> Dict[str, Any]:
     """Drop padded scenario rows from a chunk's outputs (group-level
     entries pass through untouched)."""
@@ -359,57 +438,89 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
         cached[gi] = 0
         pool.extend((gi, ci) for ci in range(-(-n // steps[gi])))
 
-    while pool:
-        progressed = False
-        still: List[Tuple[int, int]] = []
-        for gi, ci in pool:
-            g = groups[gi]
-            step = steps[gi]
-            lo = ci * step
-            real = min(step, len(g.scenarios) - lo)
-            out = ckpt.load(gi, ci) if ckpt else None
-            if out is None and ckpt is not None:
-                if not ckpt.try_claim(gi, ci):
-                    still.append((gi, ci))   # a live peer is computing it
-                    continue
-                # close the load->claim window: a peer may have saved and
-                # released between our miss and our claim — use its chunk
-                # rather than recomputing it
-                out = ckpt.load(gi, ci)
+    writer = _ChunkWriter() if opts.pipeline else None
+    try:
+        while pool:
+            progressed = False
+            still: List[Tuple[int, int]] = []
+            for gi, ci in pool:
+                g = groups[gi]
+                step = steps[gi]
+                lo = ci * step
+                real = min(step, len(g.scenarios) - lo)
+                out = ckpt.load(gi, ci) if ckpt else None
+                if out is None and ckpt is not None:
+                    if not ckpt.try_claim(gi, ci):
+                        still.append((gi, ci))  # a live peer is computing it
+                        continue
+                    # close the load->claim window: a peer may have saved
+                    # and released between our miss and our claim — use its
+                    # chunk rather than recomputing it
+                    out = ckpt.load(gi, ci)
+                    if out is not None:
+                        ckpt.release(gi, ci)
                 if out is not None:
-                    ckpt.release(gi, ci)
-            if out is not None:
-                outs[gi][ci] = out
-                cached[gi] += real
+                    outs[gi][ci] = out
+                    cached[gi] += real
+                    progressed = True
+                    continue
+                handed_off = False
+                try:
+                    if gi not in stacked:
+                        batch = g.stacked_batch()
+                        stacked[gi] = (vecsim.batch_statics(batch),
+                                       vecsim.batch_arrays(batch))
+                    statics, arrays = stacked[gi]
+                    sub = {k: v[lo:lo + step] for k, v in arrays.items()}
+                    pad_tail = real < step and lo > 0
+                    if pad_tail:
+                        # pad the ragged tail chunk to the uniform chunk
+                        # shape so every chunk hits ONE compiled program;
+                        # pad rows are dropped right after
+                        sub = mesh.pad_rows(sub, step)
+                    if writer is not None:
+                        # async dispatch now; transfer + save overlap the
+                        # NEXT chunk's dispatch on the writer thread. The
+                        # job inherits this chunk's claim.
+                        dev, n_real = _dispatch_arrays(
+                            sub, g.cfg, statics, opts.shards, opts.donate)
+
+                        def job(*, skip, gi=gi, ci=ci, dev=dev,
+                                n_real=n_real, cfg=g.cfg, real=real,
+                                pad_tail=pad_tail):
+                            try:
+                                if skip:
+                                    return
+                                res = _finalize_arrays(dev, n_real, cfg)
+                                if pad_tail:
+                                    res = _trim_outputs(res, real)
+                                if ckpt:
+                                    ckpt.save(gi, ci, res)
+                                outs[gi][ci] = res
+                            finally:
+                                if ckpt:
+                                    ckpt.release(gi, ci)
+
+                        writer.submit(job)
+                        handed_off = True
+                    else:
+                        out = _run_arrays(sub, g.cfg, statics, opts.shards,
+                                          opts.donate)
+                        if pad_tail:
+                            out = _trim_outputs(out, real)
+                        if ckpt:
+                            ckpt.save(gi, ci, out)
+                        outs[gi][ci] = out
+                finally:
+                    if ckpt and not handed_off:
+                        ckpt.release(gi, ci)
                 progressed = True
-                continue
-            try:
-                if gi not in stacked:
-                    batch = g.stacked_batch()
-                    stacked[gi] = (vecsim.batch_statics(batch),
-                                   vecsim.batch_arrays(batch))
-                statics, arrays = stacked[gi]
-                sub = {k: v[lo:lo + step] for k, v in arrays.items()}
-                pad_tail = real < step and lo > 0
-                if pad_tail:
-                    # pad the ragged tail chunk to the uniform chunk shape
-                    # so every chunk hits ONE compiled program; pad rows
-                    # are dropped right after
-                    sub = mesh.pad_rows(sub, step)
-                out = _run_arrays(sub, g.cfg, statics, opts.shards,
-                                  opts.donate)
-                if pad_tail:
-                    out = _trim_outputs(out, real)
-                if ckpt:
-                    ckpt.save(gi, ci, out)
-            finally:
-                if ckpt:
-                    ckpt.release(gi, ci)
-            outs[gi][ci] = out
-            progressed = True
-        pool = still
-        if pool and not progressed:
-            time.sleep(ckpt.poll_s)   # peers hold every pending chunk
+            pool = still
+            if pool and not progressed:
+                time.sleep(ckpt.poll_s)  # peers hold every pending chunk
+    finally:
+        if writer is not None:
+            writer.close()    # drain in-flight saves; re-raise their errors
 
     results: List[GroupResult] = []
     for gi, g in enumerate(groups):
@@ -429,6 +540,7 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
         "n_groups": len(groups),
         "shards": _resolve_shards(opts.shards, max(n_scen, 1)),
         "chunk_size": opts.chunk_size,
+        "pipeline": bool(opts.pipeline),
         "resumed_scenarios": n_cached,
         "computed_scenarios": n_scen - n_cached,
         "mesh": mesh.mesh_topology(),

@@ -1,0 +1,307 @@
+"""Whole-tick megakernel + k-unrolled scan + pipelined runner (ISSUE 7).
+
+Everything here is a BITWISE claim under float64: the fused tick
+(`ops.megatick`) against the unfused packed-cumsum tick, the Pallas
+interpret path against the XLA reference, k ticks unrolled per scan step
+against k=1 (including non-divisible tick counts and sample-period
+alignment), and the double-buffered sweep runner against the synchronous
+one. No tolerances — these are the same math re-scheduled, and any drift
+is a bug (the one historical offender, FMA contraction in the timeline
+std, is kept out of the scan body for exactly this reason — see
+`vecsim._moments`).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sweep
+from repro.core import vecsim
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.simulator import Job
+from repro.kernels import ops
+from repro.traffic import arrivals
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+# ---------------------------------------------------------------------------
+# scenario builders
+# ---------------------------------------------------------------------------
+
+def _cluster(n_nodes: int = 4):
+    return make_cluster(n_nodes, "t3.large", cpu_initial_fraction=0.3)
+
+
+def _one_class_jobs(seed: int, n_nodes: int,
+                    ann: Annotation = Annotation.BURST_CPU):
+    """Single-class CPU jobs — the fused tick's eligibility envelope
+    (exactly one placement phase)."""
+    rng = np.random.RandomState(seed)
+    tid = [10_000 * (seed + 1)]
+    jobs = []
+    for j in range(2):
+        tasks = []
+        for _ in range(n_nodes * 3):
+            tid[0] += 1
+            tasks.append(Task(
+                tid=tid[0], job=f"j{j}", vertex="map",
+                work_cpu=float(rng.uniform(30, 90)),
+                demand_cpu=float(rng.uniform(0.3, 0.95)),
+                annotation=ann))
+        jobs.append(Job(name=f"j{j}", tasks=tasks))
+    return jobs
+
+
+def _closed_scens(ann=Annotation.BURST_CPU, n_scen: int = 3):
+    return [vecsim.build_scenario(_cluster(), _one_class_jobs(s, 4, ann))
+            for s in range(n_scen)]
+
+
+def _traffic_scens(burst_fraction: float, n_scen: int = 2):
+    tmpl = arrivals.make_template(6, seed=3, burst_fraction=burst_fraction)
+    return [arrivals.build_traffic_scenario(
+        make_cluster(3, "t3.large", slots_per_node=4,
+                     cpu_initial_fraction=0.5),
+        tmpl, mode="poisson", rate=0.05, rng_seed=s)
+        for s in range(n_scen)]
+
+
+def _assert_bitwise(a, b, path: str = ""):
+    """Recursive exact equality over the (possibly nested) output dicts."""
+    assert set(a) == set(b), f"{path}: keys {set(a) ^ set(b)}"
+    for k in a:
+        va, vb = a[k], b[k]
+        if isinstance(va, dict):
+            _assert_bitwise(va, vb, f"{path}{k}.")
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(va), np.asarray(vb), err_msg=f"{path}{k}")
+
+
+def _assert_close(a, b, path: str = ""):
+    """Like `_assert_bitwise` but float leaves get a 1-ULP-scale
+    tolerance: the Pallas path lane-pads the task axis, which re-blocks
+    the demand dot-reduction — same terms, different association. Integer
+    outputs (placement, counts, histograms) must still match exactly."""
+    if isinstance(a, dict):
+        assert set(a) == set(b), f"{path}: keys {set(a) ^ set(b)}"
+        for k in a:
+            _assert_close(a[k], b[k], f"{path}{k}.")
+        return
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind in "fc":
+        np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12,
+                                   err_msg=path)
+    else:
+        np.testing.assert_array_equal(a, b, err_msg=path)
+
+
+# ---------------------------------------------------------------------------
+# op level: pallas interpret vs XLA reference
+# ---------------------------------------------------------------------------
+
+def _op_inputs(seed: int, t: int, n: int, carried_rank: bool):
+    rng = np.random.RandomState(seed)
+    m_pend = rng.uniform(size=t) < 0.5
+    if carried_rank:
+        # valid carried-FIFO state: pending slots hold contiguous ranks
+        rank = (np.cumsum(m_pend) - 1).astype(np.int32)
+        rank[~m_pend] = 0
+        n_pend = np.int32(m_pend.sum())
+    else:
+        rank = np.zeros(t, np.int32)
+        n_pend = np.int32(0)
+    node_prev = np.where(m_pend, -1,
+                         rng.randint(0, n, t)).astype(np.int32)
+    alive = rng.uniform(size=t) < 0.9
+    dem_task = rng.uniform(0.1, 0.95, t)
+    live = rng.uniform(size=t) < 0.8
+    balance = rng.uniform(0.0, 200.0, n)
+    baseline = np.full(n, 0.4)
+    burst = np.full(n, 8.0)
+    capacity = np.full(n, 576.0)
+    unlimited = (rng.uniform(size=n) < 0.3).astype(np.float64)
+    free = rng.randint(0, 4, n).astype(np.int32)
+    tel = vecsim._fresh_telemetry(n, jnp.float64)
+    return (m_pend, rank, n_pend, node_prev, alive, dem_task, live,
+            balance, baseline, burst, capacity, unlimited, free, tel,
+            jnp.asarray(37.0, jnp.float64))
+
+
+@pytest.mark.parametrize("carried_rank", [False, True])
+@pytest.mark.parametrize("tel_mode", ["predicted", "oracle"])
+def test_megatick_interpret_matches_ref(carried_rank, tel_mode):
+    """ops.megatick: the Pallas kernel (interpret mode on CPU) must agree
+    with the XLA reference — placement/count integers exactly, float
+    outputs to 1-ULP scale (the kernel lane-pads the task axis, which
+    re-blocks the demand reduction), ragged shapes included."""
+    args = _op_inputs(0, 150, 7, carried_rank)   # ragged vs the 128 lanes
+    kw = dict(dt=1.0, actual_period=60.0, usage_period=300.0,
+              tel_mode=tel_mode, by_credit=True, carried_rank=carried_rank)
+    out_x = ops.megatick(*args, impl="xla", **kw)
+    out_i = ops.megatick(*args, impl="interpret", **kw)
+    for i, (a, b) in enumerate(zip(out_x, out_i)):
+        if a is None or b is None:
+            assert a is None and b is None      # new_tel in oracle mode
+        else:
+            _assert_close(a, b, f"out[{i}]")
+
+
+# ---------------------------------------------------------------------------
+# engine level: fused tick == unfused tick, closed and open loop
+# ---------------------------------------------------------------------------
+
+def _run_closed(scens, fusion, *, scheduler="cash", telemetry="predicted",
+                impl="xla", n_ticks=500, unroll=1, sample_period=25.0):
+    cfg = vecsim.VecSimConfig(
+        n_ticks=n_ticks, scheduler=scheduler, telemetry=telemetry,
+        impl=impl, fusion=fusion, unroll=unroll, sample_period=sample_period)
+    return vecsim.run_scenarios(scens, cfg)
+
+
+@pytest.mark.parametrize("scheduler,telemetry,ann", [
+    ("cash", "predicted", Annotation.BURST_CPU),
+    ("cash", "stale", Annotation.BURST_CPU),
+    ("cash", "oracle", Annotation.BURST_CPU),
+    ("cash", "predicted", Annotation.NONE),
+    ("stock", "predicted", Annotation.BURST_CPU),
+])
+def test_closed_fused_matches_unfused(scheduler, telemetry, ann):
+    """The whole-tick megakernel must reproduce the unfused tick bitwise
+    on the closed-loop path — every scalar, per-task times, and the
+    sampled timeline (credit moments included)."""
+    scens = _closed_scens(ann)
+    unf = _run_closed(scens, "unfused", scheduler=scheduler,
+                      telemetry=telemetry)
+    fus = _run_closed(scens, "fused", scheduler=scheduler,
+                      telemetry=telemetry)
+    assert bool(np.asarray(unf["all_done"]).all())
+    _assert_bitwise(unf, fus)
+
+
+def test_closed_fused_interpret_matches_xla():
+    """The fused engine with the Pallas kernel in interpret mode == the
+    fused engine on the XLA reference (scan-context kernel parity; float
+    outputs to 1-ULP scale — see `_assert_close`)."""
+    scens = _closed_scens(n_scen=1)
+    x = _run_closed(scens, "fused", n_ticks=200, sample_period=0.0)
+    i = _run_closed(scens, "fused", impl="interpret", n_ticks=200,
+                    sample_period=0.0)
+    _assert_close(x, i)
+
+
+@pytest.mark.parametrize("scheduler,telemetry,burst_fraction", [
+    ("cash", "predicted", 1.0),
+    ("cash", "stale", 1.0),
+    ("cash", "predicted", 0.0),
+    ("stock", "predicted", 1.0),
+])
+def test_traffic_fused_matches_unfused(scheduler, telemetry, burst_fraction):
+    """Open-loop ring-buffer path: the fused tick consumes the CARRIED
+    FIFO ranks and must reproduce the unfused tick bitwise — streaming
+    SLO histogram carries (and so every percentile) included."""
+    scens = _traffic_scens(burst_fraction)
+    outs = {}
+    for fusion in ("unfused", "fused"):
+        cfg = vecsim.VecSimConfig(
+            n_ticks=400, dt=5.0, scheduler=scheduler, telemetry=telemetry,
+            traffic="poisson", table_slots=20, slo_bins=32, fusion=fusion)
+        outs[fusion] = vecsim.run_scenarios(scens, cfg)
+    assert int(np.asarray(outs["unfused"]["n_completed"]).sum()) > 0
+    _assert_bitwise(outs["unfused"], outs["fused"])
+
+
+def test_fused_on_ineligible_config_raises():
+    """``fusion="fused"`` on a two-phase workload (burst + plain classes)
+    must raise instead of silently running a diverging tick."""
+    rng = np.random.RandomState(0)
+    tasks = [Task(tid=100 + k, job="j0", vertex="map",
+                  work_cpu=float(rng.uniform(30, 90)),
+                  demand_cpu=0.5,
+                  annotation=Annotation.BURST_CPU if k % 2
+                  else Annotation.NONE)
+             for k in range(8)]
+    sc = vecsim.build_scenario(_cluster(), [Job(name="j0", tasks=tasks)])
+    cfg = vecsim.VecSimConfig(n_ticks=100, scheduler="cash", fusion="fused")
+    with pytest.raises(ValueError, match="fusion"):
+        vecsim.run_scenarios([sc], cfg)
+
+
+# ---------------------------------------------------------------------------
+# k-unrolled scan: bitwise parity with k=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_unroll_closed_bitwise_parity(k):
+    """k tick bodies per scan step == k=1, bitwise, at a tick count that
+    divides by neither k (405 = 4*101 + 1 — lax.scan's remainder steps)
+    and a sample period whose ticks don't align with the unroll factor
+    (every 7th tick)."""
+    scens = _closed_scens()
+    base = _run_closed(scens, "auto", n_ticks=405, sample_period=7.0)
+    unrolled = _run_closed(scens, "auto", n_ticks=405, sample_period=7.0,
+                           unroll=k)
+    # one scenario intentionally overruns the horizon: parity must hold
+    # for truncated scans too (the remainder steps still execute)
+    assert np.asarray(base["all_done"]).any()
+    _assert_bitwise(base, unrolled)
+
+
+def test_unroll_fused_bitwise_parity():
+    """unroll composes with the fused tick: fused k=4 == fused k=1."""
+    scens = _closed_scens(n_scen=2)
+    base = _run_closed(scens, "fused", n_ticks=403, sample_period=7.0)
+    unrolled = _run_closed(scens, "fused", n_ticks=403, sample_period=7.0,
+                           unroll=4)
+    _assert_bitwise(base, unrolled)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_unroll_traffic_bitwise_parity(k):
+    """Open-loop path under unroll: the streaming histogram/latency
+    carries accumulate across unrolled tick bodies exactly as at k=1
+    (203 ticks: non-divisible; samples every 7th tick)."""
+    scens = _traffic_scens(0.7)
+    outs = []
+    for u in (1, k):
+        cfg = vecsim.VecSimConfig(
+            n_ticks=203, dt=5.0, scheduler="cash", traffic="poisson",
+            table_slots=20, slo_bins=16, sample_period=35.0, unroll=u)
+        outs.append(vecsim.run_scenarios(scens, cfg))
+    assert int(np.asarray(outs[0]["n_completed"]).sum()) > 0
+    _assert_bitwise(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# pipelined (double-buffered) sweep runner == synchronous runner
+# ---------------------------------------------------------------------------
+
+def test_pipelined_runner_matches_sync():
+    """`RunnerOptions.pipeline` moves finalize/save to a writer thread and
+    overlaps it with the next chunk's dispatch; results — scalars, group
+    outputs, timelines — must equal the synchronous path bitwise."""
+    spec = sweep.SweepSpec(
+        lambda seed: vecsim.build_scenario(_cluster(3),
+                                           _one_class_jobs(seed, 3)),
+        axes={"scheduler": ["cash", "stock"], "seed": [1, 2, 3, 4, 5]},
+        base=vecsim.VecSimConfig(n_ticks=400, sample_period=50.0),
+    )
+    piped = sweep.run_sweep(spec, sweep.RunnerOptions(pipeline=True),
+                            shards=1, chunk_size=2)
+    synced = sweep.run_sweep(spec, sweep.RunnerOptions(pipeline=False),
+                             shards=1, chunk_size=2)
+    assert piped.meta["pipeline"] and not synced.meta["pipeline"]
+    for k, v in piped.scalars().items():
+        np.testing.assert_array_equal(v, synced.scalars()[k], err_msg=k)
+    for g_p, g_s in zip(piped.groups, synced.groups):
+        _assert_bitwise(g_p.outputs, g_s.outputs)

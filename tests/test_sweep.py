@@ -284,6 +284,105 @@ def test_crash_mid_save_resumes_cleanly(tmp_path):
     assert not list(tmp_path.glob("*.claim"))       # lease stolen+released
 
 
+# scenario generator shared VERBATIM by the crash subprocess and the
+# parent's reference run: the checkpoint fingerprint hashes the scenario
+# CONTENT, so both sides must build identical scenarios
+_CRASH_GEN = textwrap.dedent("""
+    import numpy as np
+    from repro.core import vecsim
+    from repro.core.annotations import Annotation, Task
+    from repro.core.cluster import make_cluster
+    from repro.core.simulator import Job
+
+    def scenario(seed):
+        rng = np.random.RandomState(seed)
+        tasks = [Task(tid=100 * seed + k, job="j", vertex="map",
+                      work_cpu=float(rng.uniform(20, 60)),
+                      demand_cpu=float(rng.uniform(0.3, 0.9)),
+                      annotation=Annotation.BURST_CPU if k % 2
+                      else Annotation.NONE)
+                 for k in range(6)]
+        nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                             cpu_initial_fraction=0.3)
+        return vecsim.build_scenario(nodes, [Job(name="j", tasks=tasks)],
+                                     rng_seed=seed)
+
+    def spec(sweep, vecsim):
+        return sweep.SweepSpec(lambda seed: scenario(seed),
+                               axes={"scheduler": ["cash", "stock"],
+                                     "seed": list(range(4))},
+                               base=vecsim.VecSimConfig(n_ticks=300))
+""")
+
+_CRASH_SCRIPT = _CRASH_GEN + textwrap.dedent("""
+    import os, sys
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro import sweep
+    from repro.sweep import runner
+
+    # die INSIDE the second background save, after the owner-unique tmp
+    # file is written but before its atomic rename — the pipelined
+    # runner's writer thread is mid-persist while the main thread has
+    # already dispatched (and claimed) the next chunk
+    orig_save = runner.WorkQueue.save
+    state = {"n": 0}
+
+    def dying_save(self, gi, ci, outputs):
+        state["n"] += 1
+        if state["n"] == 2:
+            p = self._path(gi, ci)
+            tmp = p.with_name(f"{p.stem}.{self.owner}.tmp.npz")
+            tmp.write_bytes(b"torn half-written npz from a crashed save")
+            os._exit(7)
+        orig_save(self, gi, ci, outputs)
+
+    runner.WorkQueue.save = dying_save
+    sweep.run_sweep(spec(sweep, vecsim), shards=1, chunk_size=2,
+                    checkpoint_dir=sys.argv[1])
+    print("UNEXPECTED SURVIVAL")
+""")
+
+
+def test_crash_mid_background_save_resumes_cleanly(tmp_path):
+    """Kill the whole process from inside the pipelined runner's writer
+    thread, mid-save: on disk that leaves finished chunks, ONE torn
+    ``*.tmp.npz`` (never a torn final NPZ — renames are atomic) and the
+    dead owner's claims. A resumed run must recompute exactly the lost
+    chunks and reproduce the no-checkpoint result bitwise, sweeping the
+    debris."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _CRASH_SCRIPT, str(tmp_path)],
+        capture_output=True, text=True, env=_subprocess_env(1), timeout=300)
+    assert proc.returncode == 7, (proc.returncode, proc.stderr[-4000:])
+    assert "UNEXPECTED SURVIVAL" not in proc.stdout
+
+    done = sorted(p.name for p in tmp_path.glob("group*_chunk*.npz")
+                  if ".tmp." not in p.name)
+    torn = list(tmp_path.glob("*.tmp.npz"))
+    claims = list(tmp_path.glob("*.claim"))
+    assert len(done) == 1, done          # save #1 landed, #2 died mid-write
+    assert len(torn) == 1                # the torn tmp, atomically separate
+    assert claims                        # the dead owner's leases persist
+    # age the debris past the lease so the resume steals/sweeps right away
+    stale = time.time() - 3600.0
+    for f in torn + claims:
+        os.utime(f, (stale, stale))
+
+    ns: dict = {}
+    exec(compile(_CRASH_GEN, "<crash-gen>", "exec"), ns)  # same scenarios
+    spec = ns["spec"](sweep, vecsim)
+    resumed = sweep.run_sweep(spec, shards=1, chunk_size=2,
+                              checkpoint_dir=str(tmp_path))
+    fresh = sweep.run_sweep(spec, shards=1, chunk_size=2)
+    assert resumed.meta["resumed_scenarios"] == 2       # the surviving chunk
+    assert resumed.meta["computed_scenarios"] == 6
+    for k, v in fresh.scalars().items():
+        np.testing.assert_array_equal(v, resumed.scalars()[k], err_msg=k)
+    assert not list(tmp_path.glob("*.tmp.npz"))         # debris swept
+    assert not list(tmp_path.glob("*.claim"))
+
+
 def test_results_save_load_roundtrip(tmp_path):
     spec = _seed_spec(sample_period=100.0)
     res = sweep.run_sweep(spec, shards=1)
