@@ -1,0 +1,142 @@
+"""Preemption-churn benchmark: CASH vs credit-blind placement on
+IDENTICAL fault streams.
+
+A preemptible (spot-style) fleet under open-loop Poisson load: every
+node runs a two-state Markov on/off chain (`repro.faults`), and the same
+``(seed, rng_seed, fl_*)``-keyed kill sequence hits both schedulers —
+the scheduler axis changes only the static config, never the fault
+stream, so any goodput/wasted-work gap is pure placement policy (the
+benchmark asserts the kill counts match per seed).
+
+CASH runs with credit-aware blacklisting ON: nodes whose *estimated*
+bucket depletes within ``blacklist_horizon_s`` at current demand, and
+nodes inside the ``preempt_notice_s`` warning window (the spot
+two-minute notice), take no new placements. Stock is credit- and
+notice-blind. The headline metric is the **wasted-work ratio**: CASH's
+lost-work fraction over stock's — under churn, dodging
+predicted-to-throttle and soon-to-preempt nodes must not waste MORE
+work than credit-blind placement (fast-mode acceptance: ratio <= 1.0).
+
+Emits per-scheduler goodput, lost work, re-executions, sheds, and SLO
+tails under churn; lands in ``BENCH_vecsim.json`` under the ``"churn"``
+section (benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro import sweep as sweeplib
+from repro.core import vecsim
+from repro.core.cluster import make_cluster
+from repro.faults import attach_fault_process
+from repro.traffic import arrivals
+
+SLOTS = 4
+
+
+def run(fast: bool = False) -> dict:
+    n_nodes, n_seeds, n_ticks = (6, 4, 800) if fast else (16, 8, 4_000)
+    dt = 5.0
+    # short tasks (the cluster-trace norm): the preemption notice window
+    # then covers a meaningful fraction of a job's lifetime, which is
+    # where notice-aware placement can actually dodge lost work
+    tmpl = arrivals.make_template(8, seed=1, work=(30.0, 90.0),
+                                  burst_fraction=0.75)
+    rate = n_nodes * SLOTS / 300.0    # busy fleet, bounded backlog
+
+    def builder(rng_seed):
+        fleet = make_cluster(n_nodes, "t3.large", slots_per_node=SLOTS,
+                             cpu_initial_fraction=0.3)
+        sc = arrivals.build_traffic_scenario(fleet, tmpl, mode="poisson",
+                                             rate=rate, rng_seed=rng_seed)
+        # ~1 kill per node per 2000 simulated seconds, minute-scale
+        # outages: enough churn that lost work is a first-order effect
+        return attach_fault_process(sc, mode="spot", dt=dt,
+                                    kill_rate=1 / 2000.0,
+                                    restore_rate=1 / 400.0)
+
+    spec = sweeplib.SweepSpec(
+        builder,
+        axes={"scheduler": ("cash", "stock"),
+              "rng_seed": list(range(n_seeds))},
+        base=vecsim.VecSimConfig(
+            n_ticks=n_ticks, dt=dt, traffic="poisson", faults="spot",
+            max_retries=3, blacklist_horizon_s=120.0,
+            preempt_notice_s=120.0, table_slots=2 * n_nodes * SLOTS,
+            slo_bins=32),
+    )
+    res = sweeplib.run_sweep(spec, shards=1)
+    cols = res.scalars()
+    sched = np.array([p.coord_dict["scheduler"] for p in res.points])
+    seeds = np.array([p.coord_dict["rng_seed"] for p in res.points])
+
+    # identical-stream sanity: the kill sequence must not depend on the
+    # scheduler axis (fault streams key off seed + rng_seed + fl_* only)
+    for s in range(n_seeds):
+        kills = cols["n_kill_events"][seeds == s]
+        assert len(set(kills.astype(int))) == 1, (
+            f"fault stream differs across schedulers for rng_seed={s}: "
+            f"{kills}")
+
+    stats = {}
+    for s in ("cash", "stock"):
+        m = sched == s
+        goodput = float(cols["goodput"][m].sum())
+        lost = float(cols["work_lost"][m].sum())
+        stats[s] = {
+            "goodput_vcpu_s": goodput,
+            "work_lost_vcpu_s": lost,
+            "wasted_frac": lost / max(goodput + lost, 1e-12),
+            "n_preempted": int(cols["n_preempted"][m].sum()),
+            "n_reexec": int(cols["n_reexec"][m].sum()),
+            "n_shed": int(cols["n_shed"][m].sum()),
+            "n_completed": int(cols["n_completed"][m].sum()),
+            "lat_p99_s": float(np.nanmean(cols["lat_p99"][m])),
+            "wait_p99_s": float(np.nanmean(cols["wait_p99"][m])),
+        }
+        emit(f"churn/{s}/goodput_vcpu_s", 0.0, f"{goodput:.0f}")
+        emit(f"churn/{s}/work_lost_vcpu_s", 0.0, f"{lost:.0f}")
+        emit(f"churn/{s}/wasted_frac", 0.0,
+             f"{stats[s]['wasted_frac']:.4f}")
+        emit(f"churn/{s}/reexecutions", 0.0, str(stats[s]["n_reexec"]))
+        emit(f"churn/{s}/shed", 0.0, str(stats[s]["n_shed"]))
+        emit(f"churn/{s}/lat_p99_s", 0.0, f"{stats[s]['lat_p99_s']:.1f}")
+
+    cash_f, stock_f = stats["cash"]["wasted_frac"], \
+        stats["stock"]["wasted_frac"]
+    ratio = cash_f / stock_f if stock_f > 0 else (1.0 if cash_f == 0
+                                                  else float("inf"))
+    kills = int(cols["n_kill_events"][sched == "cash"].sum())
+    down = int(cols["node_down_ticks"][sched == "cash"].sum())
+    emit("churn/kill_events", 0.0, str(kills))
+    emit("churn/node_down_ticks", 0.0, str(down))
+    emit("churn/wasted_work_ratio_cash_vs_stock", 0.0, f"{ratio:.3f}")
+    assert kills > 0, "churn benchmark produced no preemptions"
+    if fast:
+        ok = ratio <= 1.0
+        emit("churn/check/cash_wastes_no_more_than_stock", 0.0,
+             "PASS" if ok else "FAIL")
+        assert ok, (f"CASH wasted-work fraction {cash_f:.4f} exceeds "
+                    f"stock's {stock_f:.4f} (ratio {ratio:.3f} > 1.0) on "
+                    "identical fault streams")
+
+    return {
+        "mode": "fast" if fast else "full",
+        "shape": {"n_nodes": n_nodes, "slots": SLOTS, "n_seeds": n_seeds,
+                  "n_ticks": n_ticks, "dt": dt},
+        "kill_events": kills,
+        "node_down_ticks": down,
+        "wasted_work_ratio_cash_vs_stock": ratio,
+        "schedulers": stats,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast)

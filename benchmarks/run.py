@@ -19,7 +19,9 @@ throughput). The file keeps one section per mode — ``{"fast": {...},
 and the perf trajectory stays comparable PR over PR. A ``"traffic"``
 section (benchmarks/traffic_bench.py) tracks the open-loop ring-buffer
 engine: CASH-vs-stock SLO tails plus throughput relative to the
-closed-batch path.
+closed-batch path. A ``"churn"`` section (benchmarks/churn_bench.py)
+tracks CASH vs credit-blind placement under preemption churn on
+identical fault streams (wasted work, goodput, re-executions).
 """
 from __future__ import annotations
 
@@ -69,7 +71,7 @@ def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
                                  if k != "mode"}
         else:
             doc = {k: v for k, v in prev.items()
-                   if k in ("fast", "full", "traffic")}
+                   if k in ("fast", "full", "traffic", "churn")}
     # mesh topology rides in THIS mode's meta: sharded throughput numbers
     # are only comparable across machines with the same device layout, and
     # the other mode's section may have been written on different hardware.
@@ -99,6 +101,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         ablation_joint,
         ablation_telemetry,
+        churn_bench,
         fig7_cpu_burst,
         fig8_utilization,
         fig9_query_completion,
@@ -186,6 +189,27 @@ def main(argv=None) -> None:
         doc["traffic"] = dict(tstats, meta=tmeta)
     except Exception as e:  # noqa: BLE001
         failures.append(("traffic_bench", e))
+        traceback.print_exc()
+    try:
+        cstats = churn_bench.run(fast=args.fast)
+        if args.fast:
+            # the ISSUE-8 acceptance gate, re-checked at the driver
+            # level: on identical fault streams, credit-aware
+            # (blacklisting) placement must not waste more work than
+            # credit-blind placement (churn_bench also asserts this)
+            cratio = float(cstats.get("wasted_work_ratio_cash_vs_stock",
+                                      float("inf")))
+            if cratio > 1.0:
+                failures.append(("churn_wasted_work", AssertionError(
+                    f"CASH/stock wasted-work ratio {cratio:.3f} > 1.0")))
+        if doc is None:
+            doc = _merged_bench(out_path, mode, {})
+            doc.pop(mode, None)
+        from repro.sweep import mesh_topology as _topo
+
+        doc["churn"] = dict(cstats, meta=_topo())
+    except Exception as e:  # noqa: BLE001
+        failures.append(("churn_bench", e))
         traceback.print_exc()
     if doc is not None:
         out_path.write_text(json.dumps(doc, indent=2) + "\n")

@@ -101,6 +101,16 @@ class VecSimConfig:
     # gather (measured), so "auto" keeps the unfused tick there.
     fusion: str = "auto"
     unroll: int = 1                  # ticks unrolled per lax.scan step
+    # fault injection (repro.faults): none | spot | crash | degrade
+    faults: str = "none"
+    max_retries: int = 3             # node kills a task survives before shed
+    # CASH placement blacklisting: skip nodes whose ESTIMATED credits
+    # deplete within the horizon at their current demand (the
+    # sched.straggler time-to-deplete contract) and, under mortal fault
+    # modes, nodes due to preempt inside the notice window (the spot
+    # two-minute warning). 0 disables either term.
+    blacklist_horizon_s: float = 0.0
+    preempt_notice_s: float = 0.0
 
 
 def sample_tick_indices(n_ticks: int, dt: float,
@@ -272,6 +282,14 @@ def stack_scenarios(scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.
     T, N, G = max(Ts), max(Ns), max(Gs)
     W = max(int(s["n_waves"]) for s in scenarios)
     J = max(int(s["n_jobs"]) for s in scenarios)
+    # fault-process scalars (repro.faults.attach_fault_process) ride
+    # through per-scenario; presence must be uniform — a half-faulty
+    # group has no consistent static `cfg.faults`
+    has_fl = any("fl_p_kill" in s for s in scenarios)
+    if has_fl and not all("fl_p_kill" in s for s in scenarios):
+        raise ValueError("scenarios in one group must uniformly carry "
+                         "fault parameters (attach_fault_process on all "
+                         "or none)")
 
     out: Dict[str, List[np.ndarray]] = {}
     for s in scenarios:
@@ -308,6 +326,10 @@ def stack_scenarios(scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.
         row["n_waves"] = np.int32(W)
         row["n_jobs"] = s["n_jobs"]
         row["rng_seed"] = s.get("rng_seed", np.int32(0))
+        if has_fl:
+            for k in s:
+                if k.startswith("fl_"):
+                    row[k] = s[k]
         for k, v in row.items():
             out.setdefault(k, []).append(np.asarray(v))
     batch = {k: np.stack(v) for k, v in out.items()}
@@ -508,6 +530,10 @@ def fusion_eligible(cfg: VecSimConfig,
         return False
     if cfg.scheduler not in ("cash", "stock"):
         return False
+    # fault injection / placement blacklisting thread through the unfused
+    # tick only — the megakernel has no liveness plumbing
+    if cfg.faults != "none" or cfg.blacklist_horizon_s > 0.0:
+        return False
     if active[0] or active[1]:          # disk / network pools in play
         return False
     if cfg.scheduler == "stock":
@@ -598,6 +624,23 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
     # at trace time; bitwise-identical either way (tests/test_megatick.py)
     fused = fusion_choice(cfg, active) == "fused"
 
+    # ---- fault injection statics (repro.faults) -----------------------
+    # mortal modes kill nodes (tasks requeue); degrade only sags burst.
+    # Streams are derived OUTSIDE the tick scan and fed as xs, so the
+    # fault-free path carries nothing and compiles identically.
+    faulty = cfg.faults != "none"
+    mortal = cfg.faults in ("spot", "crash")
+    degrading = cfg.faults == "degrade"
+    use_black = (cfg.scheduler == "cash" and cfg.resource == "cpu"
+                 and (cfg.blacklist_horizon_s > 0.0
+                      or (mortal and cfg.preempt_notice_s > 0.0)))
+    ev = None
+    if faulty:
+        from repro.faults import processes as _faults
+        ev = _faults.fault_events(cfg, sc, dtype)
+    if use_black:
+        from repro.sched import straggler as _straggler
+
     is_burst = (sc["cls"] == CLS_BURST_CPU) | (sc["cls"] == CLS_BURST_DISK)
     is_net = sc["cls"] == CLS_NET
     is_plain = sc["cls"] == CLS_NONE
@@ -647,10 +690,19 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         # base key, so a seed sweep is ONE compile (cfg stays constant)
         state["key"] = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
                                           sc["rng_seed"])
+    if mortal:
+        # per-task retry counts + lost work are the ONLY fault carries;
+        # kill-event totals reduce over the precomputed xs streams free
+        state["retry"] = jnp.zeros(T, jnp.int32)
+        state["work_lost"] = jnp.zeros((), dtype)
 
     emit_tl = cfg.sample_period > 0.0
 
-    def tick(st, t):
+    def tick(st, inp):
+        if faulty:
+            t, fx = inp
+        else:
+            t = inp
         now = t.astype(dtype) * dt
 
         # ---- 1) release finished tasks (work completed last tick) --------
@@ -672,6 +724,66 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             finish = None
             last_rel = jnp.where(jnp.any(newly), now, st["last_rel"])
         run_cnt = st["run_cnt"] - st["rel_cnt"]     # occupancy after release
+
+        # ---- 1b) fault step (repro.faults): kill/restore nodes -----------
+        # Runs AFTER release — work that completed last tick on a node
+        # dying now still counts — and BEFORE admission/placement, so
+        # requeued tasks compete for slots again this very tick.
+        alive_t = notice_t = scale_t = None
+        retry = work_lost = None
+        if degrading:
+            scale_t = fx["scale"]
+        if mortal:
+            alive_t, died_t = fx["alive"], fx["died"]
+            notice_t = fx.get("notice")
+            st = dict(st)
+            if cfg.faults == "crash":
+                # the replacement arrives FRESH: bucket + telemetry reset
+                # before this tick's estimate/serve read them (cumulative
+                # surplus is fleet accounting and survives the swap)
+                fresh_t = fx["fresh"]
+                st["cpu_bal"] = jnp.where(fresh_t, sc["cpu_balance0"],
+                                          st["cpu_bal"])
+                if act_disk:
+                    st["disk_bal"] = jnp.where(fresh_t, sc["disk_balance0"],
+                                               st["disk_bal"])
+                if act_net:
+                    st["peak_bal"] = jnp.where(fresh_t, sc["peak_balance0"],
+                                               st["peak_bal"])
+                    st["sus_bal"] = jnp.where(fresh_t, sc["sus_balance0"],
+                                              st["sus_bal"])
+                for tk in ("tel_cpu", "tel_disk"):
+                    if tk in st:
+                        blank = _fresh_telemetry(N, dtype)
+                        st[tk] = {k: jnp.where(fresh_t, blank[k], v)
+                                  for k, v in st[tk].items()}
+            # tasks resident on a node that died this tick requeue with a
+            # retry count; this attempt's partial work is lost. Past
+            # max_retries the task is SHED: released without finishing,
+            # excluded from makespan, its dependents unblocked (lost-work
+            # accounting, not failure propagation).
+            resident = (st["node_of"] >= 0) & ~released
+            hit = resident & died_t[jnp.clip(st["node_of"], 0, N - 1)]
+            retry = st["retry"] + hit.astype(jnp.int32)
+            shed_now = hit & (retry > cfg.max_retries)
+            lost = st["done_cpu"]
+            if act_disk:
+                lost = lost + st["done_disk"]
+            if act_net:
+                lost = lost + st["done_net"]
+            work_lost = st["work_lost"] + jnp.sum(jnp.where(hit, lost, 0.0))
+            st["done_cpu"] = jnp.where(hit, 0.0, st["done_cpu"])
+            rem_cpu = sc["work_cpu"] - st["done_cpu"]
+            if act_disk:
+                st["done_disk"] = jnp.where(hit, 0.0, st["done_disk"])
+                rem_disk = sc["work_disk"] - st["done_disk"]
+            if act_net:
+                st["done_net"] = jnp.where(hit, 0.0, st["done_net"])
+                rem_net = sc["work_net"] - st["done_net"]
+            st["node_of"] = jnp.where(hit, -1, st["node_of"])
+            started = st["node_of"] >= 0
+            released = released | shed_now
+            run_cnt = jnp.where(alive_t, run_cnt, 0)
 
         # ---- 2) sequential wave admission --------------------------------
         wave_adm = wave_t = None
@@ -710,6 +822,35 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             ready &= sc["wave"] <= wave_adm
 
         free = sc["slots"] - run_cnt
+        if mortal:
+            free = jnp.where(alive_t, free, 0)
+        if use_black:
+            # CASH blacklisting: skip nodes whose ESTIMATED bucket drains
+            # within the horizon at the demand they are ALREADY serving
+            # (sched.straggler contract) and nodes inside the preemption
+            # notice window
+            black = jnp.zeros(N, bool)
+            if cfg.blacklist_horizon_s > 0.0:
+                running0 = (st["node_of"] >= 0) & ~released
+                col0 = jnp.where(running0 & (rem_cpu > 0.0),
+                                 sc["dem_cpu"], 0.0)
+                oh0 = jnp.where((st["node_of"][:, None] == ids[None, :])
+                                & running0[:, None],
+                                jnp.ones((), dtype), 0.0)
+                dem_pre = jax.lax.dot_general(
+                    col0[None, :], oh0, (((1,), (0,)), ((), ())),
+                    preferred_element_type=dtype)[0]
+                burst_eff = (sc["cpu_burst"] * scale_t if degrading
+                             else sc["cpu_burst"])
+                black = _straggler.predictive_blacklist(
+                    est_cpu, dem_pre, sc["cpu_baseline"], burst_eff,
+                    sc["cpu_unlimited"], cfg.blacklist_horizon_s)
+            if notice_t is not None:
+                black = black | notice_t
+            # deadlock guard: when every free slot is blacklisted the
+            # blacklist is void (CASH prefers slow progress to none)
+            ok = jnp.any((~black) & (free > 0))
+            free = jnp.where(black & ok, 0, free)
 
         if cfg.shuffle == "random":
             key, sub = jax.random.split(st["key"])
@@ -842,10 +983,18 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                 preferred_element_type=dtype)                # (C, N)
             dem_cpu = per_node[0]
 
+            # degradation windows sag the burst ceiling only — baseline
+            # accrual and capacity are untouched (a slow disk still earns)
+            cpu_burst_t = (sc["cpu_burst"] * scale_t if degrading
+                           else sc["cpu_burst"])
             share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
-                st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
+                st["cpu_bal"], dem_cpu, sc["cpu_baseline"], cpu_burst_t,
                 sc["cpu_capacity"], sc["cpu_unlimited"], nidx,
                 sc["dem_cpu"], dt=dt, impl=cfg.impl)
+            if mortal:
+                # down nodes' buckets FREEZE (instance paused): no spend —
+                # their demand is zero — and no regeneration either
+                cpu_bal = jnp.where(alive_t, cpu_bal, st["cpu_bal"])
 
         disk_bal = peak_bal = sus_bal = done_disk = done_net = None
         w_disk = w_net = zero_n
@@ -853,10 +1002,14 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         if act_disk:
             done_disk = st["done_disk"]
             dem_disk = per_node[1]
+            disk_burst_t = (sc["disk_burst"] * scale_t if degrading
+                            else sc["disk_burst"])
             share_disk, w_disk, disk_bal, _ = ops.bucket_serve_distribute(
                 st["disk_bal"], dem_disk, sc["disk_baseline"],
-                sc["disk_burst"], sc["disk_capacity"], zero_n, nidx,
+                disk_burst_t, sc["disk_capacity"], zero_n, nidx,
                 sc["dem_disk"], dt=dt, impl=cfg.impl)
+            if mortal:
+                disk_bal = jnp.where(alive_t, disk_bal, st["disk_bal"])
         if act_net:
             done_net = st["done_net"]
             dem_net = per_node[-1]
@@ -872,6 +1025,9 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                 st["sus_bal"], w_pk / dt, sc["sus_baseline"],
                 sc["sus_burst"], sc["sus_capacity"], zero_n, nidx,
                 sc["dem_net"], dt=dt, impl=cfg.impl, dist_demand=dem_net)
+            if mortal:
+                peak_bal = jnp.where(alive_t, peak_bal, st["peak_bal"])
+                sus_bal = jnp.where(alive_t, sus_bal, st["sus_bal"])
 
         # fold each pool's fused share into the done counters. The share is
         # already zero wherever the node's aggregate demand is — and done is
@@ -906,9 +1062,16 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             tel_cpu = tel_fused
         elif tel_cpu is not None:
             tel_cpu = _telemetry_observe(cfg, tel_cpu, cpu_bal, w_cpu / dt, now)
+            if mortal:
+                # a paused instance publishes nothing: freeze its metrics
+                tel_cpu = {k: jnp.where(alive_t, v, st["tel_cpu"][k])
+                           for k, v in tel_cpu.items()}
         if tel_disk is not None:
             tel_disk = _telemetry_observe(cfg, tel_disk, disk_bal,
                                           w_disk / dt, now)
+            if mortal:
+                tel_disk = {k: jnp.where(alive_t, v, st["tel_disk"][k])
+                            for k, v in tel_disk.items()}
 
         # mirror the initial carry exactly — inactive features stay out
         new_st = {
@@ -941,6 +1104,9 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             new_st["tel_disk"] = tel_disk
         if cfg.shuffle == "random":
             new_st["key"] = key
+        if mortal:
+            new_st["retry"] = retry
+            new_st["work_lost"] = work_lost
 
         # ---- 7) streaming timeline ys (static switch: off -> zero cost) --
         ys = None
@@ -970,8 +1136,8 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
     # unroll k tick bodies per scan step to amortize per-iteration dispatch
     # (lax.scan handles the non-divisible remainder natively; bitwise-
     # identical to k=1, asserted by tests/test_megatick.py)
-    st, ys = jax.lax.scan(tick, state,
-                          jnp.arange(cfg.n_ticks, dtype=jnp.int32),
+    xs_t = jnp.arange(cfg.n_ticks, dtype=jnp.int32)
+    st, ys = jax.lax.scan(tick, state, (xs_t, ev) if faulty else xs_t,
                           unroll=max(1, cfg.unroll))
 
     real = ~sc["task_pad"]
@@ -983,12 +1149,40 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         "cpu_work_served": st["cpu_work_total"],
         "node_busy_seconds": st["busy_seconds"],
     }
+    if faulty:
+        # stream-level event counts are reductions over the xs — free
+        out.update(_faults.event_totals(ev))
+        if mortal:
+            retry_r = jnp.where(real, st["retry"], 0)
+            out["n_preempted"] = jnp.sum(retry_r, dtype=jnp.int32)
+            out["n_reexec"] = jnp.sum(
+                jnp.minimum(retry_r, cfg.max_retries), dtype=jnp.int32)
+            out["n_shed"] = jnp.sum(real & (st["retry"] > cfg.max_retries),
+                                    dtype=jnp.int32)
+            out["work_lost"] = st["work_lost"]
+        else:
+            out["n_preempted"] = jnp.zeros((), jnp.int32)
+            out["n_reexec"] = jnp.zeros((), jnp.int32)
+            out["n_shed"] = jnp.zeros((), jnp.int32)
+            out["work_lost"] = jnp.zeros((), dtype)
+        # closed-path done counters are zeroed on kill, so total_cpu_work
+        # is already goodput (lost work lives in work_lost alone)
+        out["goodput"] = out["total_cpu_work"]
     # a task finishing work at tick k is released (and timestamped) at k+1 —
     # exactly the Python loop, whose makespan is `now` at the break check
     if cfg.emit_task_times:
-        makespan = jnp.where(all_done,
-                             jnp.max(jnp.where(real, st["finish"], -jnp.inf)),
-                             cfg.n_ticks * dt)
+        if mortal:
+            # shed tasks never finish: drop them from the makespan (all
+            # shed -> 0.0, mirroring the traffic drained convention)
+            fin_ok = real & (st["retry"] <= cfg.max_retries)
+            mk = jnp.max(jnp.where(fin_ok, st["finish"], -jnp.inf))
+            mk = jnp.where(jnp.any(fin_ok), mk, 0.0)
+            makespan = jnp.where(all_done, mk, cfg.n_ticks * dt)
+        else:
+            makespan = jnp.where(
+                all_done,
+                jnp.max(jnp.where(real, st["finish"], -jnp.inf)),
+                cfg.n_ticks * dt)
         if n_waves > 1:
             submit = st["wave_t"][jnp.clip(sc["wave"], 0, n_waves - 1)]
         else:
@@ -1009,7 +1203,11 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         })
     else:
         # without timestamps the last release time IS max(finish)
-        out["makespan"] = jnp.where(all_done, st["last_rel"],
+        last_rel = st["last_rel"]
+        if mortal:
+            # shed never updates last_rel; all-shed runs report 0.0
+            last_rel = jnp.maximum(last_rel, 0.0)
+        out["makespan"] = jnp.where(all_done, last_rel,
                                     cfg.n_ticks * dt)
     if emit_tl:
         # full per-tick series: `batched_engine` gathers the sample ticks
@@ -1109,6 +1307,20 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
     # placement cumsum either way
     fused = fusion_choice(cfg, active) == "fused"
 
+    # ---- fault injection statics (see _simulate_one) ------------------
+    faulty = cfg.faults != "none"
+    mortal = cfg.faults in ("spot", "crash")
+    degrading = cfg.faults == "degrade"
+    use_black = (cfg.scheduler == "cash"
+                 and (cfg.blacklist_horizon_s > 0.0
+                      or (mortal and cfg.preempt_notice_s > 0.0)))
+    ev = None
+    if faulty:
+        from repro.faults import processes as _faults
+        ev = _faults.fault_events(cfg, sc, dtype)
+    if use_black:
+        from repro.sched import straggler as _straggler
+
     edges = jnp.asarray(_slo.edges_for(cfg), dtype)       # (B + 1,) static
     ids = jnp.arange(N, dtype=jnp.int32)
     zero_n = jnp.zeros(N, dtype)
@@ -1149,6 +1361,16 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
     if cfg.shuffle == "random":
         state["key"] = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
                                           sc["rng_seed"])
+    if mortal:
+        # ring slots recycle, so per-job fault state rides in the table:
+        # full work (requeue resets rem to it; lost work = work - rem)
+        # and the retry count; stream counters are plain scalars
+        state["tb_work"] = jnp.zeros(C, dtype)
+        state["tb_retry"] = jnp.zeros(C, jnp.int32)
+        state["n_preempt"] = jnp.int32(0)
+        state["n_reexec"] = jnp.int32(0)
+        state["n_shed"] = jnp.int32(0)
+        state["work_lost"] = zero_s
 
     emit_tl = cfg.sample_period > 0.0
     # stacked float template columns — ONE (2, C) gather per tick at
@@ -1156,7 +1378,10 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
     tmplf = jnp.stack([sc["tmpl_work"], sc["tmpl_dem"]])
 
     def tick(st, inp):
-        t, k_t = inp
+        if faulty:
+            t, k_t, fx = inp
+        else:
+            t, k_t = inp
         now = t.astype(dtype) * dt
 
         # ---- 1) release finished jobs, bucket their SLOs, free slots -----
@@ -1177,6 +1402,62 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         tb_node = jnp.where(fin_now, -1, st["tb_node"])
         run_cnt = st["run_cnt"] - st["rel_cnt"]
 
+        # ---- 1b) fault step (repro.faults): kill/restore nodes -----------
+        # AFTER release (work finished last tick on a dying node still
+        # counts), BEFORE arrivals: requeued jobs rejoin their queue's
+        # tail AHEAD of this tick's arrivals.
+        alive_t = notice_t = scale_t = None
+        tb_rem0, tb_rank0, qlen0 = st["tb_rem"], st["tb_rank"], st.get("qlen")
+        tb_work = tb_retry = None
+        if degrading:
+            scale_t = fx["scale"]
+        if mortal:
+            alive_t, died_t = fx["alive"], fx["died"]
+            notice_t = fx.get("notice")
+            st = dict(st)
+            if cfg.faults == "crash":
+                fresh_t = fx["fresh"]
+                st["cpu_bal"] = jnp.where(fresh_t, sc["cpu_balance0"],
+                                          st["cpu_bal"])
+                if "tel_cpu" in st:
+                    blank = _fresh_telemetry(N, dtype)
+                    st["tel_cpu"] = {k: jnp.where(fresh_t, blank[k], v)
+                                     for k, v in st["tel_cpu"].items()}
+            tb_work = st["tb_work"]
+            resident = (tb_cls != CLS_PAD) & (tb_node >= 0)
+            hit = resident & died_t[jnp.clip(tb_node, 0, N - 1)]
+            tb_retry = st["tb_retry"] + hit.astype(jnp.int32)
+            shed_now = hit & (tb_retry > cfg.max_retries)
+            requeue = hit & ~shed_now
+            work_lost = st["work_lost"] + jnp.sum(
+                jnp.where(hit, tb_work - tb_rem0, 0.0))
+            n_hit = jnp.sum(hit, dtype=jnp.int32)
+            n_shed_t = jnp.sum(shed_now, dtype=jnp.int32)
+            n_preempt = st["n_preempt"] + n_hit
+            n_reexec = st["n_reexec"] + (n_hit - n_shed_t)
+            n_shed_c = st["n_shed"] + n_shed_t
+            tb_node = jnp.where(hit, -1, tb_node)
+            tb_rem0 = jnp.where(requeue, tb_work, tb_rem0)
+            run_cnt = jnp.where(alive_t, run_cnt, 0)
+            # requeued jobs keep FIFO order by slot index within the
+            # batch and append at their phase queue's current tail
+            if cfg.scheduler == "stock":
+                rq = [requeue]
+            else:
+                rq = []
+                if p_burst:
+                    rq.append(requeue & ((tb_cls == CLS_BURST_CPU)
+                                         | (tb_cls == CLS_BURST_DISK)))
+                if p_plain:
+                    rq.append(requeue & (tb_cls == CLS_NONE))
+            if rq:
+                rr = _packed_ranks(*rq)
+                for i, (m, r) in enumerate(zip(rq, rr)):
+                    tb_rank0 = jnp.where(m, qlen0[i] + r, tb_rank0)
+                qlen0 = qlen0 + jnp.stack([r[-1] + 1 for r in rr])
+            # shed LAST: a shed job leaves the table entirely
+            tb_cls = jnp.where(shed_now, CLS_PAD, tb_cls)
+
         # ---- 2) open-loop arrivals into recycled slots -------------------
         free_slot = tb_cls == CLS_PAD
         frank = jnp.cumsum(free_slot.astype(jnp.int32)) - 1
@@ -1192,10 +1473,15 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             sub_t = jnp.broadcast_to(now, (C,))
         cls_new = sc["tmpl_cls"][trow]
         wd = tmplf[:, trow]                     # (2, C): work, demand
-        tb_rem = jnp.where(adm, wd[0], st["tb_rem"])
+        tb_rem = jnp.where(adm, wd[0], tb_rem0)
         tb_dem = jnp.where(adm, wd[1], st["tb_dem"])
         tb_cls = jnp.where(adm, cls_new, tb_cls)
         tb_submit = jnp.where(adm, sub_t, st["tb_submit"])
+        if mortal:
+            # a recycled slot must not inherit the previous job's fault
+            # bookkeeping
+            tb_work = jnp.where(adm, wd[0], tb_work)
+            tb_retry = jnp.where(adm, 0, tb_retry)
         # NOTE: tb_start is NOT reset on admission — a recycled slot keeps
         # the previous job's start until placement overwrites it, and the
         # only read (wait at release) always happens after placement
@@ -1209,7 +1495,7 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         # first in arrival order, so `frank` IS that position when every
         # admitted job lands in one queue; a two-phase split needs one
         # extra packed cumsum)
-        tb_rank, qlen = st["tb_rank"], st.get("qlen")
+        tb_rank, qlen = tb_rank0, qlen0
         if P == 1 and (cfg.scheduler == "stock" or not active[3]):
             adm_pos = [(adm, frank, n_new)]
         elif P:
@@ -1239,6 +1525,31 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         occupied = tb_cls != CLS_PAD
         ready = occupied & (tb_node < 0)
         free = sc["slots"] - run_cnt
+        if mortal:
+            free = jnp.where(alive_t, free, 0)
+        if use_black:
+            # CASH blacklisting (see _simulate_one): estimated credits +
+            # currently-running demand -> time-to-deplete, plus the
+            # preemption notice window; void when nothing else is free
+            black = jnp.zeros(N, bool)
+            if cfg.blacklist_horizon_s > 0.0:
+                running0 = tb_node >= 0
+                col0 = jnp.where(running0 & (tb_rem > 0.0), tb_dem, 0.0)
+                oh0 = jnp.where((tb_node[:, None] == ids[None, :])
+                                & running0[:, None],
+                                jnp.ones((), dtype), 0.0)
+                dem_pre = jax.lax.dot_general(
+                    col0[None, :], oh0, (((1,), (0,)), ((), ())),
+                    preferred_element_type=dtype)[0]
+                burst_eff = (sc["cpu_burst"] * scale_t if degrading
+                             else sc["cpu_burst"])
+                black = _straggler.predictive_blacklist(
+                    est_cpu, dem_pre, sc["cpu_baseline"], burst_eff,
+                    sc["cpu_unlimited"], cfg.blacklist_horizon_s)
+            if notice_t is not None:
+                black = black | notice_t
+            ok = jnp.any((~black) & (free > 0))
+            free = jnp.where(black & ok, 0, free)
         if cfg.shuffle == "random":
             key, sub = jax.random.split(st["key"])
             order3 = jax.random.permutation(sub, ids)
@@ -1331,10 +1642,15 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             dem_cpu = jax.lax.dot_general(
                 col[None, :], onehot, (((1,), (0,)), ((), ())),
                 preferred_element_type=dtype)[0]
+            cpu_burst_t = (sc["cpu_burst"] * scale_t if degrading
+                           else sc["cpu_burst"])
             share_cpu, w_cpu, cpu_bal, sur_add = ops.bucket_serve_distribute(
-                st["cpu_bal"], dem_cpu, sc["cpu_baseline"], sc["cpu_burst"],
+                st["cpu_bal"], dem_cpu, sc["cpu_baseline"], cpu_burst_t,
                 sc["cpu_capacity"], sc["cpu_unlimited"], nidx, tb_dem,
                 dt=dt, impl=cfg.impl)
+            if mortal:
+                # down nodes' buckets FREEZE: no spend, no regeneration
+                cpu_bal = jnp.where(alive_t, cpu_bal, st["cpu_bal"])
         upd = running & (tb_rem > 0.0)
         inc = jnp.where(upd, jnp.minimum(share_cpu, tb_rem), 0.0)
         tb_rem = tb_rem - inc
@@ -1351,6 +1667,9 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         elif tel_cpu is not None:
             tel_cpu = _telemetry_observe(cfg, tel_cpu, cpu_bal, w_cpu / dt,
                                          now)
+            if mortal:
+                tel_cpu = {k: jnp.where(alive_t, v, st["tel_cpu"][k])
+                           for k, v in tel_cpu.items()}
 
         new_st = {
             "tb_rem": tb_rem, "tb_dem": tb_dem, "tb_cls": tb_cls,
@@ -1374,6 +1693,13 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             new_st["qlen"] = qlen
         if cfg.shuffle == "random":
             new_st["key"] = key
+        if mortal:
+            new_st["tb_work"] = tb_work
+            new_st["tb_retry"] = tb_retry
+            new_st["n_preempt"] = n_preempt
+            new_st["n_reexec"] = n_reexec
+            new_st["n_shed"] = n_shed_c
+            new_st["work_lost"] = work_lost
 
         # ---- 7) streaming timeline ys ------------------------------------
         ys = None
@@ -1398,10 +1724,13 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             }
         return new_st, ys
 
+    xs_t = jnp.arange(cfg.n_ticks, dtype=jnp.int32)
     st, ys = jax.lax.scan(tick, state,
-                          (jnp.arange(cfg.n_ticks, dtype=jnp.int32), counts))
+                          (xs_t, counts, ev) if faulty else (xs_t, counts))
 
-    drained = st["n_done"] == st["n_adm"]
+    # shed jobs left the table without completing — they still drain
+    drained = (st["n_done"] + st["n_shed"] == st["n_adm"]) if mortal \
+        else (st["n_done"] == st["n_adm"])
     if cfg.traffic == "replay":
         n_trace = jnp.sum(jnp.isfinite(sc["arr_t"]), dtype=jnp.int32)
         all_done = drained & (st["n_seen"] >= n_trace)
@@ -1426,6 +1755,21 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         "lat_max": st["lat_max"], "wait_max": st["wait_max"],
         "last_finish": st["last_rel"],
     }
+    if faulty:
+        out.update(_faults.event_totals(ev))
+        if mortal:
+            out["n_preempted"] = st["n_preempt"]
+            out["n_reexec"] = st["n_reexec"]
+            out["n_shed"] = st["n_shed"]
+            out["work_lost"] = st["work_lost"]
+        else:
+            out["n_preempted"] = jnp.zeros((), jnp.int32)
+            out["n_reexec"] = jnp.zeros((), jnp.int32)
+            out["n_shed"] = jnp.zeros((), jnp.int32)
+            out["work_lost"] = zero_s
+        # work_done counts every unit applied to job progress, including
+        # units later thrown away by a kill — goodput subtracts the waste
+        out["goodput"] = out["total_cpu_work"] - out["work_lost"]
     if emit_tl:
         out["timeline"] = ys
     return out

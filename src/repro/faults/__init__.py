@@ -1,0 +1,14 @@
+"""Fault injection for the vectorized simulator: declarative per-scenario
+fault processes (spot preemption, crash-and-replace, transient
+degradation) with one `fault_events` contract traced in-scan AND
+replayed eagerly by the numpy fault oracle."""
+from repro.faults.processes import (  # noqa: F401
+    FAULT_MODES,
+    FAULT_PARAM_KEYS,
+    FAULT_STREAM_TAG,
+    attach_fault_process,
+    event_totals,
+    fault_events,
+    has_fault_params,
+    stream_key,
+)

@@ -1,0 +1,599 @@
+"""Pure-Python fault oracles for the vectorized engine's fault paths.
+
+Two interpreters, one per engine path, each mirroring its jitted
+counterpart tick-for-tick over numpy float64 state with the fault step
+spliced in at the exact same point of the tick (after release, before
+admission/placement):
+
+  * `FaultTrafficOracle` — `vecsim._simulate_traffic` with
+    ``cfg.faults != "none"``: ring-buffer table, SLO histograms, node
+    mortality, requeue-at-tail with retry counts, lost-work accounting,
+    CASH blacklisting;
+  * `ClosedFaultOracle` — `vecsim._simulate_one` on the cpu pool
+    (cash|stock, ``shuffle="none"``, no disk/net work): fixed task
+    table, waves, dependency groups, the same fault step.
+
+The fault stream is the IDENTICAL stream: both oracles call
+`processes.fault_events` eagerly on the same ``(cfg, sc)`` the engine
+traces, so ``alive/died/fresh/notice/scale`` match bit-for-bit.
+Event counters (kills, re-executions, sheds, histograms) must then
+equal the engine's EXACTLY; float accumulators (lost work, goodput)
+match to summation-order tolerance, the same convention
+tests/test_traffic.py uses.
+
+Fault-step semantics mirrored here (the contract DESIGN.md documents):
+
+  * release happens BEFORE the fault step — work that completed last
+    tick on a node dying this tick still counts;
+  * tasks resident on a dying node requeue with ``retry += 1`` and this
+    attempt's progress added to ``work_lost``; past ``cfg.max_retries``
+    the task is SHED (leaves without finishing, still drains);
+  * ``spot`` freezes down nodes' buckets AND telemetry (instance
+    paused); ``crash`` replacements arrive fresh (``cpu_balance0`` +
+    blank telemetry) ``fl_replace_ticks`` after death; ``degrade``
+    multiplies the burst ceiling by ``fl_deg_factor`` inside windows;
+  * CASH blacklisting: nodes whose ESTIMATED bucket drains within
+    ``cfg.blacklist_horizon_s`` at their currently-running demand, plus
+    nodes inside the preemption notice window, take no placements —
+    unless every free slot is blacklisted, in which case the blacklist
+    is void.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.vecsim import (
+    CLS_BURST_CPU,
+    CLS_BURST_DISK,
+    CLS_NET,
+    CLS_NONE,
+    CLS_PAD,
+    VecSimConfig,
+    _NEVER,
+)
+from repro.faults import processes
+from repro.traffic.oracle import _serve_bucket
+
+
+def _eager_events(cfg: VecSimConfig, sc: Dict[str, np.ndarray]
+                  ) -> Dict[str, np.ndarray]:
+    """The engine's fault stream, replayed eagerly as numpy arrays."""
+    ev = processes.fault_events(cfg, sc, np.float64)
+    return {k: np.asarray(v) for k, v in ev.items()}
+
+
+def _blacklist(est: np.ndarray, dem_pre: np.ndarray, baseline: np.ndarray,
+               burst: np.ndarray, unlimited: np.ndarray,
+               horizon_s: float) -> np.ndarray:
+    """numpy mirror of `sched.straggler.predictive_blacklist` (same
+    elementwise float64 ops, same strict comparison)."""
+    if horizon_s <= 0.0:
+        return np.zeros(est.shape, bool)
+    rate = np.minimum(dem_pre, burst)
+    drain = rate - baseline
+    safe = np.where(drain > 0.0, drain, 1.0)
+    tdep = np.where((drain <= 0.0) | (unlimited > 0.0), np.inf, est / safe)
+    return tdep < horizon_s
+
+
+def _estimate(cfg: VecSimConfig, tel, bal, baseline, capacity, now):
+    """Mirror of the engine's `_telemetry_estimate` (Algorithm 2)."""
+    if cfg.telemetry == "oracle":
+        return bal.copy()
+    has = tel["act_t"] > _NEVER / 2
+    if cfg.telemetry == "stale":
+        return np.where(has, tel["act_bal"], capacity)
+    use_ok = tel["use_t"] >= tel["act_t"]
+    dt_act = now - np.where(has, tel["act_t"], now)
+    e = tel["act_bal"] + np.where(
+        use_ok, (baseline - tel["use_rate"]) * dt_act, 0.0)
+    return np.where(has, np.clip(e, 0.0, capacity), capacity)
+
+
+def _observe(cfg: VecSimConfig, tel, bal, w_node, now, dt):
+    """Mirror of the engine's `_telemetry_observe` (CloudWatch cadence)."""
+    tel["accum"] = tel["accum"] + w_node / dt
+    pub_a = now - tel["act_t"] >= cfg.actual_period
+    pub_u = now - tel["use_t"] >= cfg.usage_period
+    span = np.maximum(now - tel["win_start"], 1e-9)
+    avg = tel["accum"] / np.maximum(1.0, span)
+    tel["act_bal"] = np.where(pub_a, bal, tel["act_bal"])
+    tel["act_t"] = np.where(pub_a, now, tel["act_t"])
+    tel["use_rate"] = np.where(pub_u, avg, tel["use_rate"])
+    tel["use_t"] = np.where(pub_u, now, tel["use_t"])
+    tel["accum"] = np.where(pub_u, 0.0, tel["accum"])
+    tel["win_start"] = np.where(pub_u, now, tel["win_start"])
+    return tel
+
+
+def _fresh_tel(n: int) -> Dict[str, np.ndarray]:
+    return {"act_bal": np.zeros(n), "act_t": np.full(n, _NEVER),
+            "use_rate": np.zeros(n), "use_t": np.full(n, _NEVER),
+            "accum": np.zeros(n), "win_start": np.zeros(n)}
+
+
+class FaultTrafficOracle:
+    """Interpret one traffic scenario under a fault-enabled config;
+    `run()` returns the engine's output keys (scalars, histograms, fault
+    counters) as plain numpy values."""
+
+    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig):
+        from repro.traffic import arrivals, slo
+        if cfg.faults not in processes.FAULT_MODES:
+            raise ValueError(f"not a fault config: {cfg.faults!r}")
+        if cfg.shuffle != "none":
+            raise NotImplementedError("oracle mirrors shuffle='none' only")
+        if cfg.resource != "cpu" or cfg.scheduler not in ("cash", "stock"):
+            raise NotImplementedError("traffic scope is cpu + cash|stock")
+        self.sc = {k: np.asarray(v) for k, v in sc.items()}
+        self.cfg = cfg
+        self.N = len(self.sc["slots"])
+        smax = int(self.sc["slots"].max()) if self.N else 1
+        self.C = (cfg.table_slots if cfg.table_slots > 0
+                  else 2 * self.N * max(smax, 1))
+        self.edges = slo.edges_for(cfg)
+        self.counts = np.asarray(arrivals.arrival_counts(cfg, self.sc,
+                                                         np.float64))
+        self.ev = _eager_events(cfg, self.sc)
+        self._slo = slo
+
+    def run(self) -> Dict[str, np.ndarray]:
+        cfg, sc, N, C = self.cfg, self.sc, self.N, self.C
+        slo = self._slo
+        dt = cfg.dt
+        B = cfg.slo_bins
+        need_credits = cfg.scheduler != "stock"
+        mortal = cfg.faults in ("spot", "crash")
+        degrading = cfg.faults == "degrade"
+        use_black = (cfg.scheduler == "cash"
+                     and (cfg.blacklist_horizon_s > 0.0
+                          or (mortal and cfg.preempt_notice_s > 0.0)))
+        ev = self.ev
+
+        tb_rem = np.zeros(C)
+        tb_work = np.zeros(C)
+        tb_dem = np.zeros(C)
+        tb_cls = np.full(C, CLS_PAD, np.int64)
+        tb_seq = np.full(C, np.iinfo(np.int64).max, np.int64)
+        tb_retry = np.zeros(C, np.int64)
+        tb_submit = np.zeros(C)
+        tb_start = np.full(C, np.inf)
+        tb_node = np.full(C, -1, np.int64)
+        seq_ctr = 0               # queue-order counter: arrivals + requeues
+
+        run_cnt = np.zeros(N, np.int64)
+        rel_cnt = np.zeros(N, np.int64)
+        bal = sc["cpu_balance0"].astype(np.float64).copy()
+        bal0 = sc["cpu_balance0"].astype(np.float64)
+        sur = np.zeros(N)
+        baseline = sc["cpu_baseline"].astype(np.float64)
+        burst = sc["cpu_burst"].astype(np.float64)
+        capacity = sc["cpu_capacity"].astype(np.float64)
+        unlimited = sc["cpu_unlimited"].astype(np.float64)
+        slots = sc["slots"].astype(np.int64)
+        tel = _fresh_tel(N)
+
+        n_seen = n_adm = n_done = 0
+        n_preempt = n_reexec = n_shed = 0
+        work_lost = 0.0
+        lat_hist = np.zeros(B, np.int64)
+        wait_hist = np.zeros(B, np.int64)
+        lat_sum = wait_sum = 0.0
+        lat_max = wait_max = 0.0
+        last_rel = -np.inf
+        work_done = work_served = busy_seconds = 0.0
+
+        tmpl_n = max(int(sc["tmpl_n"]), 1)
+        replay = cfg.traffic == "replay"
+
+        for t in range(cfg.n_ticks):
+            now = float(t) * dt
+            alive = ev["alive"][t] if mortal else None
+            scale = ev["scale"][t] if degrading else None
+            burst_t = burst * scale if degrading else burst
+
+            # 1) release finished jobs, bucket SLOs, recycle slots
+            fin_now = np.flatnonzero((tb_cls != CLS_PAD) & (tb_node >= 0)
+                                     & (tb_rem <= 1e-9))
+            for i in fin_now:
+                lat = now - tb_submit[i]
+                wait = tb_start[i] - tb_submit[i]
+                lat_hist[slo.bucket_index(lat, self.edges)] += 1
+                wait_hist[slo.bucket_index(wait, self.edges)] += 1
+                lat_sum += lat
+                wait_sum += wait
+                lat_max = max(lat_max, lat)
+                wait_max = max(wait_max, wait)
+                tb_cls[i] = CLS_PAD
+                tb_node[i] = -1
+            if len(fin_now):
+                n_done += len(fin_now)
+                last_rel = now
+            run_cnt -= rel_cnt
+            rel_cnt = np.zeros(N, np.int64)
+
+            # 1b) fault step: kill/restore nodes, requeue resident jobs
+            if mortal:
+                died = ev["died"][t]
+                if cfg.faults == "crash":
+                    fresh = ev["fresh"][t]
+                    bal = np.where(fresh, bal0, bal)
+                    if need_credits and cfg.telemetry != "oracle":
+                        blank = _fresh_tel(N)
+                        for k in tel:
+                            tel[k] = np.where(fresh, blank[k], tel[k])
+                resident = (tb_cls != CLS_PAD) & (tb_node >= 0)
+                hit = np.flatnonzero(
+                    resident & died[np.clip(tb_node, 0, N - 1)])
+                for i in hit:                     # slot-index order
+                    tb_retry[i] += 1
+                    work_lost += tb_work[i] - tb_rem[i]
+                    n_preempt += 1
+                    tb_node[i] = -1
+                    if tb_retry[i] > cfg.max_retries:
+                        n_shed += 1               # shed: leaves the table
+                        tb_cls[i] = CLS_PAD
+                    else:
+                        n_reexec += 1
+                        tb_rem[i] = tb_work[i]    # restart from scratch
+                        tb_seq[i] = seq_ctr       # tail of its queue,
+                        seq_ctr += 1              # ahead of new arrivals
+                run_cnt = np.where(alive, run_cnt, 0)
+
+            # 2) arrivals into free slots, lowest index first, FIFO order
+            k = int(self.counts[t])
+            free_slots = np.flatnonzero(tb_cls == CLS_PAD)
+            admitted = free_slots[:k]
+            for r, i in enumerate(admitted):
+                aidx = n_seen + r
+                if replay:
+                    row = int(sc["arr_tmpl"][aidx])
+                    tb_submit[i] = float(sc["arr_t"][aidx])
+                else:
+                    row = aidx % tmpl_n
+                    tb_submit[i] = now
+                tb_rem[i] = float(sc["tmpl_work"][row])
+                tb_work[i] = float(sc["tmpl_work"][row])
+                tb_dem[i] = float(sc["tmpl_dem"][row])
+                tb_cls[i] = int(sc["tmpl_cls"][row])
+                tb_retry[i] = 0
+                tb_seq[i] = seq_ctr
+                seq_ctr += 1
+                tb_start[i] = np.inf
+            n_seen += k
+            n_adm += len(admitted)
+
+            # 3) telemetry estimate (pre-observe, Algorithm 2)
+            est = None
+            if need_credits:
+                est = _estimate(cfg, tel, bal, baseline, capacity, now)
+
+            # 4) placement: FIFO by queue seq within each phase
+            free = slots - run_cnt
+            if mortal:
+                free = np.where(alive, free, 0)
+            if use_black:
+                running0 = tb_node >= 0
+                dem_pre = np.zeros(N)
+                for i in np.flatnonzero(running0 & (tb_rem > 0.0)):
+                    dem_pre[tb_node[i]] += tb_dem[i]
+                black = _blacklist(est, dem_pre, baseline, burst_t,
+                                   unlimited, cfg.blacklist_horizon_s)
+                if mortal and "notice" in ev:
+                    black = black | ev["notice"][t]
+                if np.any(~black & (free > 0)):
+                    free = np.where(black, 0, free)
+
+            def fifo(mask: np.ndarray) -> List[int]:
+                q = np.flatnonzero(mask)
+                return list(q[np.argsort(tb_seq[q], kind="stable")])
+
+            def pack(order, queue):
+                for n in order:
+                    while free[n] > 0 and queue:
+                        i = queue.pop(0)
+                        tb_node[i] = n
+                        tb_start[i] = now
+                        free[n] -= 1
+                        run_cnt[n] += 1
+
+            ready = (tb_cls != CLS_PAD) & (tb_node < 0)
+            if cfg.scheduler == "stock":
+                pack(range(N), fifo(ready))
+            else:
+                desc = sorted(range(N), key=lambda n: (-est[n], n))
+                pack(desc, fifo(ready & ((tb_cls == CLS_BURST_CPU)
+                                         | (tb_cls == CLS_BURST_DISK))))
+                pack(range(N), fifo(ready & (tb_cls == CLS_NONE)))
+
+            # 5) serve + pro-rata distribute
+            running = tb_node >= 0
+            live = running & (tb_rem > 0.0)
+            dem_node = np.zeros(N)
+            for i in np.flatnonzero(live):
+                dem_node[tb_node[i]] += tb_dem[i]
+            bal_prev = bal.copy()
+            w_node = np.zeros(N)
+            for n in range(N):
+                w, bal[n], over = _serve_bucket(
+                    bal[n], dem_node[n], baseline[n], burst_t[n],
+                    capacity[n], unlimited[n] > 0.0, dt)
+                w_node[n] = w
+                sur[n] += over
+                work_served += w
+            if mortal:
+                # down nodes' buckets freeze: no spend, no regeneration
+                bal = np.where(alive, bal, bal_prev)
+            for i in np.flatnonzero(live):
+                n = tb_node[i]
+                share = (w_node[n] * tb_dem[i] / dem_node[n]
+                         if dem_node[n] > 0.0 else 0.0)
+                inc = min(share, tb_rem[i])
+                tb_rem[i] -= inc
+                work_done += inc
+                if tb_rem[i] <= 1e-9:
+                    rel_cnt[n] += 1
+            busy_seconds += float(np.sum(run_cnt > 0)) * dt
+
+            # 6) CloudWatch observe (frozen for down nodes)
+            if need_credits and cfg.telemetry != "oracle":
+                tel_prev = {k: v.copy() for k, v in tel.items()}
+                tel = _observe(cfg, tel, bal, w_node, now, dt)
+                if mortal:
+                    for k in tel:
+                        tel[k] = np.where(alive, tel[k], tel_prev[k])
+
+        drained = n_done + n_shed == n_adm
+        if replay:
+            all_done = drained and n_seen >= int(
+                np.sum(np.isfinite(sc["arr_t"])))
+        else:
+            all_done = drained
+        makespan = ((last_rel if n_done > 0 else 0.0) if all_done
+                    else cfg.n_ticks * dt)
+        out = {
+            "makespan": makespan, "all_done": all_done,
+            "surplus_credits": float(np.sum(sur)),
+            "total_cpu_work": work_done, "cpu_work_served": work_served,
+            "node_busy_seconds": busy_seconds,
+            "n_arrived": n_seen, "n_admitted": n_adm,
+            "n_dropped": n_seen - n_adm, "n_completed": n_done,
+            "lat_hist": lat_hist, "wait_hist": wait_hist,
+            "lat_sum": lat_sum, "wait_sum": wait_sum,
+            "lat_max": lat_max, "wait_max": wait_max,
+            "last_finish": last_rel,
+            "n_preempted": n_preempt, "n_reexec": n_reexec,
+            "n_shed": n_shed, "work_lost": work_lost,
+            "goodput": work_done - work_lost,
+        }
+        if mortal:
+            out["n_kill_events"] = int(np.sum(ev["died"]))
+            out["node_down_ticks"] = int(np.sum(~ev["alive"]))
+        else:
+            out["n_kill_events"] = 0
+            out["node_down_ticks"] = 0
+        for pfx in ("lat", "wait"):
+            for q, tag in slo.DEFAULT_QS:
+                out[f"{pfx}_{tag}"] = float(slo.hist_percentile(
+                    out[f"{pfx}_hist"], self.edges, q))
+        return out
+
+
+class ClosedFaultOracle:
+    """Interpret one closed (fixed task table) scenario under a
+    fault-enabled config, mirroring `vecsim._simulate_one` on the cpu
+    pool: cash|stock, ``shuffle="none"``, no disk/net work, no
+    round-robin network class. Waves and dependency groups ARE
+    mirrored."""
+
+    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig):
+        if cfg.faults not in processes.FAULT_MODES:
+            raise ValueError(f"not a fault config: {cfg.faults!r}")
+        if cfg.shuffle != "none":
+            raise NotImplementedError("oracle mirrors shuffle='none' only")
+        if cfg.resource != "cpu" or cfg.scheduler not in ("cash", "stock"):
+            raise NotImplementedError("closed scope is cpu + cash|stock")
+        sc = {k: np.asarray(v) for k, v in sc.items()}
+        if np.any(sc["work_disk"] > 0) or np.any(sc["work_net"] > 0):
+            raise NotImplementedError("closed scope is cpu work only")
+        if np.any(sc["cls"] == CLS_NET):
+            raise NotImplementedError("no round-robin network phase")
+        self.sc = sc
+        self.cfg = cfg
+        self.N = len(sc["slots"])
+        self.T = len(sc["work_cpu"])
+        self.ev = _eager_events(cfg, sc)
+
+    def run(self) -> Dict[str, np.ndarray]:
+        cfg, sc, N, T = self.cfg, self.sc, self.N, self.T
+        dt = cfg.dt
+        need_credits = cfg.scheduler != "stock"
+        mortal = cfg.faults in ("spot", "crash")
+        degrading = cfg.faults == "degrade"
+        use_black = (cfg.scheduler == "cash"
+                     and (cfg.blacklist_horizon_s > 0.0
+                          or (mortal and cfg.preempt_notice_s > 0.0)))
+        ev = self.ev
+        n_waves = int(sc.get("n_waves", 1))
+        G = sc["member"].shape[0]
+
+        work = sc["work_cpu"].astype(np.float64)
+        dem = sc["dem_cpu"].astype(np.float64)
+        cls = sc["cls"].astype(np.int64)
+        wave = sc["wave"].astype(np.int64)
+        is_burst = (cls == CLS_BURST_CPU) | (cls == CLS_BURST_DISK)
+        is_plain = cls == CLS_NONE
+
+        done = np.zeros(T)
+        node_of = np.full(T, -1, np.int64)
+        released = sc["task_pad"].astype(bool).copy()
+        retry = np.zeros(T, np.int64)
+        finish = np.full(T, np.inf)
+        run_cnt = np.zeros(N, np.int64)
+        rel_cnt = np.zeros(N, np.int64)
+        bal = sc["cpu_balance0"].astype(np.float64).copy()
+        bal0 = sc["cpu_balance0"].astype(np.float64)
+        sur = np.zeros(N)
+        baseline = sc["cpu_baseline"].astype(np.float64)
+        burst = sc["cpu_burst"].astype(np.float64)
+        capacity = sc["cpu_capacity"].astype(np.float64)
+        unlimited = sc["cpu_unlimited"].astype(np.float64)
+        slots = sc["slots"].astype(np.int64)
+        tel = _fresh_tel(N)
+        wave_adm = 0
+        work_lost = 0.0
+        work_served = busy_seconds = 0.0
+
+        for t in range(cfg.n_ticks):
+            now = float(t) * dt
+            alive = ev["alive"][t] if mortal else None
+            scale = ev["scale"][t] if degrading else None
+            burst_t = burst * scale if degrading else burst
+
+            # 1) release finished tasks (work completed last tick)
+            rem = work - done
+            newly = (rem <= 1e-9) & (node_of >= 0) & ~released
+            released = released | newly
+            finish = np.where(newly, now, finish)
+            run_cnt -= rel_cnt
+            rel_cnt = np.zeros(N, np.int64)
+
+            # 1b) fault step
+            if mortal:
+                died = ev["died"][t]
+                if cfg.faults == "crash":
+                    fresh = ev["fresh"][t]
+                    bal = np.where(fresh, bal0, bal)
+                    if need_credits and cfg.telemetry != "oracle":
+                        blank = _fresh_tel(N)
+                        for k in tel:
+                            tel[k] = np.where(fresh, blank[k], tel[k])
+                resident = (node_of >= 0) & ~released
+                hit = resident & died[np.clip(node_of, 0, N - 1)]
+                retry = retry + hit.astype(np.int64)
+                shed_now = hit & (retry > cfg.max_retries)
+                work_lost += float(np.sum(np.where(hit, done, 0.0)))
+                done = np.where(hit, 0.0, done)
+                rem = work - done
+                node_of = np.where(hit, -1, node_of)
+                released = released | shed_now
+                run_cnt = np.where(alive, run_cnt, 0)
+
+            # 2) sequential wave admission
+            if n_waves > 1:
+                pending = (~released) & (wave <= wave_adm)
+                if not np.any(pending) and wave_adm < n_waves - 1:
+                    wave_adm += 1
+
+            # 3) telemetry estimate
+            est = None
+            if need_credits:
+                est = _estimate(cfg, tel, bal, baseline, capacity, now)
+
+            # 4) placement
+            dep_ok = np.ones(T, bool)
+            if G > 0:
+                done_cnt = sc["member"] @ released.astype(np.float64)
+                g = np.clip(sc["dep_group"], 0, G - 1)
+                frac = done_cnt[g] / sc["group_size"][g]
+                dep_ok = (sc["dep_group"] < 0) | \
+                    (frac + 1e-12 >= sc["dep_threshold"])
+            ready = (node_of < 0) & (~released) & dep_ok & (cls != CLS_PAD)
+            if n_waves > 1:
+                ready &= wave <= wave_adm
+            free = slots - run_cnt
+            if mortal:
+                free = np.where(alive, free, 0)
+            if use_black:
+                running0 = (node_of >= 0) & ~released
+                dem_pre = np.zeros(N)
+                for i in np.flatnonzero(running0 & (rem > 0.0)):
+                    dem_pre[node_of[i]] += dem[i]
+                black = _blacklist(est, dem_pre, baseline, burst_t,
+                                   unlimited, cfg.blacklist_horizon_s)
+                if mortal and "notice" in ev:
+                    black = black | ev["notice"][t]
+                if np.any(~black & (free > 0)):
+                    free = np.where(black, 0, free)
+
+            def pack(order, queue):
+                for n in order:
+                    while free[n] > 0 and queue:
+                        i = queue.pop(0)
+                        node_of[i] = n
+                        free[n] -= 1
+                        run_cnt[n] += 1
+
+            # phase queues in task-index order (the engine's cumsum rank)
+            if cfg.scheduler == "stock":
+                pack(range(N), list(np.flatnonzero(ready)))
+            else:
+                desc = sorted(range(N), key=lambda n: (-est[n], n))
+                pack(desc, list(np.flatnonzero(ready & is_burst)))
+                pack(range(N), list(np.flatnonzero(ready & is_plain)))
+
+            # 5) serve + pro-rata distribute
+            running = (node_of >= 0) & ~released
+            live = running & (rem > 0.0)
+            dem_node = np.zeros(N)
+            for i in np.flatnonzero(live):
+                dem_node[node_of[i]] += dem[i]
+            bal_prev = bal.copy()
+            w_node = np.zeros(N)
+            for n in range(N):
+                w, bal[n], over = _serve_bucket(
+                    bal[n], dem_node[n], baseline[n], burst_t[n],
+                    capacity[n], unlimited[n] > 0.0, dt)
+                w_node[n] = w
+                sur[n] += over
+                work_served += w
+            if mortal:
+                bal = np.where(alive, bal, bal_prev)
+            for i in np.flatnonzero(live):
+                n = node_of[i]
+                share = (w_node[n] * dem[i] / dem_node[n]
+                         if dem_node[n] > 0.0 else 0.0)
+                done[i] = min(work[i], done[i] + share)
+                if work[i] - done[i] <= 1e-9:
+                    rel_cnt[n] += 1
+            busy_seconds += float(np.sum(run_cnt > 0)) * dt
+
+            # 6) observe (frozen for down nodes)
+            if need_credits and cfg.telemetry != "oracle":
+                tel_prev = {k: v.copy() for k, v in tel.items()}
+                tel = _observe(cfg, tel, bal, w_node, now, dt)
+                if mortal:
+                    for k in tel:
+                        tel[k] = np.where(alive, tel[k], tel_prev[k])
+
+        real = ~sc["task_pad"].astype(bool)
+        all_done = bool(np.all(released | ~real))
+        shed = real & (retry > cfg.max_retries)
+        fin_ok = real & ~shed
+        if all_done:
+            makespan = (float(np.max(finish[fin_ok]))
+                        if np.any(fin_ok) else 0.0)
+        else:
+            makespan = cfg.n_ticks * dt
+        retry_r = np.where(real, retry, 0)
+        out = {
+            "makespan": makespan, "all_done": all_done,
+            "surplus_credits": float(np.sum(sur)),
+            "total_cpu_work": float(np.sum(np.where(real, done, 0.0))),
+            "cpu_work_served": work_served,
+            "node_busy_seconds": busy_seconds,
+            "n_preempted": int(np.sum(retry_r)),
+            "n_reexec": int(np.sum(np.minimum(retry_r, cfg.max_retries))),
+            "n_shed": int(np.sum(shed)),
+            "work_lost": work_lost,
+        }
+        out["goodput"] = out["total_cpu_work"]
+        if mortal:
+            out["n_kill_events"] = int(np.sum(ev["died"]))
+            out["node_down_ticks"] = int(np.sum(~ev["alive"]))
+        else:
+            out["n_kill_events"] = 0
+            out["node_down_ticks"] = 0
+        return out

@@ -1,0 +1,204 @@
+"""Declarative per-scenario fault processes for the batched engine:
+jit-compatible node-mortality/health streams plus scenario attachment.
+
+Three processes, selected by the *static* ``VecSimConfig.faults`` field
+(so every scenario in a compile group shares one process):
+
+  * ``spot`` — spot-instance preemption as a two-state Markov on/off
+    chain: an alive node is preempted each tick with probability
+    ``fl_p_kill``, a preempted node is restored with ``fl_p_restore``.
+    The node's token bucket and telemetry FREEZE while it is down (the
+    instance is paused, not replaced) and resume where they left off;
+  * ``crash`` — crash-and-replace: an alive node dies with
+    ``fl_p_crash``; exactly ``fl_replace_ticks`` later a REPLACEMENT
+    arrives with a fresh bucket (``cpu_balance0``) and blank telemetry —
+    the public-cloud replace-the-VM path;
+  * ``degrade`` — transient IOPS/CPU degradation windows: with
+    probability ``fl_p_degrade`` a healthy node enters a window of
+    ``fl_deg_ticks`` ticks during which its burst ceiling is multiplied
+    by ``fl_deg_factor`` (< 1). Nodes stay alive; only throughput sags.
+
+Event streams are *derived, not carried* (exactly the
+`traffic.arrivals.arrival_counts` shape): `fault_events` produces the
+whole ``(n_ticks, N)`` per-tick stream inside the jitted program — ONE
+vectorized uniform draw plus a tiny boolean/int chain scan per scenario,
+fed to the tick scan as xs — and the numpy fault oracle replays the
+IDENTICAL stream by calling `fault_events` eagerly. The draws key off
+``fold_in(fold_in(PRNGKey(cfg.seed), FAULT_STREAM_TAG), rng_seed)`` —
+the same per-scenario ``rng_seed`` plumbing the arrival and shuffle
+streams use, under a distinct tag so no stream ever aliases another. A
+seed sweep over fault realizations therefore batches into ONE compile,
+and CASH-vs-stock comparisons at equal ``(seed, rng_seed, fl_*)`` see
+bit-identical fault streams: the scheduler axis never perturbs the
+faults it is judged under.
+
+This module is deliberately vecsim-free (``cfg`` is duck-typed, reading
+``faults / n_ticks / dt / seed / preempt_notice_s``) so `core.vecsim`
+can import it without a cycle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fold_in tag separating the fault stream from the arrival (0x0A51) and
+# shuffle streams that share PRNGKey(cfg.seed) + rng_seed
+FAULT_STREAM_TAG = 0xFA17
+
+FAULT_MODES = ("spot", "crash", "degrade")
+
+# batched per-scenario scalars a fault-attached scenario carries. All
+# seven ride on EVERY faulty scenario (irrelevant ones at their inert
+# defaults) so stackers pass them through uniformly and the WorkQueue
+# content digest always covers the full parameterization.
+FAULT_PARAM_KEYS = ("fl_p_kill", "fl_p_restore", "fl_p_crash",
+                    "fl_replace_ticks", "fl_p_degrade", "fl_deg_ticks",
+                    "fl_deg_factor")
+
+
+def stream_key(seed: int, rng_seed) -> jax.Array:
+    """The per-scenario fault-stream key: static config seed folded with
+    the batched scenario seed (one compile per static config)."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), FAULT_STREAM_TAG)
+    return jax.random.fold_in(base, rng_seed)
+
+
+def attach_fault_process(sc: Dict[str, np.ndarray], *, mode: str,
+                         dt: float = 1.0,
+                         kill_rate: float = 0.0, restore_rate: float = 0.0,
+                         crash_rate: float = 0.0, replace_s: float = 0.0,
+                         degrade_rate: float = 0.0, degrade_s: float = 0.0,
+                         degrade_factor: float = 1.0
+                         ) -> Dict[str, np.ndarray]:
+    """Attach a fault process to a (closed or traffic) scenario: rates are
+    per simulated second and convert to per-tick probabilities at ``dt``
+    (clipped to [0, 1]); durations convert to whole ticks (min 1). The
+    returned copy carries all `FAULT_PARAM_KEYS`; ``mode`` must agree
+    with the static ``VecSimConfig.faults`` the scenario runs under."""
+    if mode not in FAULT_MODES:
+        raise ValueError(f"mode must be one of {FAULT_MODES}, got {mode!r}")
+    if dt <= 0.0:
+        raise ValueError(f"dt must be positive, got {dt}")
+    if not (0.0 < degrade_factor <= 1.0):
+        raise ValueError(
+            f"degrade_factor must be in (0, 1], got {degrade_factor}")
+    f = np.float64
+
+    def prob(rate: float) -> np.float64:
+        return f(min(max(rate * dt, 0.0), 1.0))
+
+    def ticks(seconds: float) -> np.int32:
+        return np.int32(max(1, int(round(seconds / dt))))
+
+    out = dict(sc)
+    out["fl_p_kill"] = prob(kill_rate)
+    out["fl_p_restore"] = prob(restore_rate)
+    out["fl_p_crash"] = prob(crash_rate)
+    out["fl_replace_ticks"] = ticks(replace_s)
+    out["fl_p_degrade"] = prob(degrade_rate)
+    out["fl_deg_ticks"] = ticks(degrade_s)
+    out["fl_deg_factor"] = f(degrade_factor)
+    return out
+
+
+def has_fault_params(sc: Dict[str, np.ndarray]) -> bool:
+    return "fl_p_kill" in sc
+
+
+def _notice_window(alive: jnp.ndarray, k_notice: int) -> jnp.ndarray:
+    """``notice[t, n]``: node ``n`` is alive at tick ``t`` but will be
+    down at some tick in ``(t, t + k_notice]`` — the spot two-minute
+    warning, as a cumulative-count window over the liveness stream."""
+    n_ticks = alive.shape[0]
+    dead_cum = jnp.cumsum((~alive).astype(jnp.int32), axis=0)
+    idx = jnp.clip(jnp.arange(n_ticks) + k_notice, 0, n_ticks - 1)
+    return alive & ((dead_cum[idx] - dead_cum) > 0)
+
+
+def fault_events(cfg, sc: Dict[str, jnp.ndarray], dtype
+                 ) -> Dict[str, jnp.ndarray]:
+    """Per-tick ``(n_ticks, N)`` fault streams for one scenario. Traced
+    inside the engine (per scenario, under vmap) AND called eagerly by
+    the fault oracle — both sides see the identical stream.
+
+    Keys by mode (absent keys are statically absent, never carried):
+
+      * ``spot``    — ``alive`` (bool), ``died`` (bool: alive->down edge,
+        resident tasks requeue this tick), plus ``notice`` when
+        ``cfg.preempt_notice_s > 0``;
+      * ``crash``   — ``alive``, ``died``, ``fresh`` (bool: the
+        replacement arrives this tick — reset bucket + telemetry), plus
+        ``notice`` when configured;
+      * ``degrade`` — ``scale`` (float: burst multiplier, 1 outside
+        windows).
+    """
+    if cfg.faults not in FAULT_MODES:
+        raise ValueError(f"not a fault config: {cfg.faults!r}")
+    n = sc["slots"].shape[0]
+    u = jax.random.uniform(stream_key(cfg.seed, sc["rng_seed"]),
+                           (cfg.n_ticks, n), dtype=dtype)
+    k_notice = int(round(cfg.preempt_notice_s / cfg.dt)) \
+        if cfg.preempt_notice_s > 0.0 else 0
+
+    if cfg.faults == "spot":
+        p_kill = sc["fl_p_kill"].astype(dtype)
+        p_rest = sc["fl_p_restore"].astype(dtype)
+
+        def step(prev, ut):
+            alive = jnp.where(prev, ut >= p_kill, ut < p_rest)
+            return alive, (alive, prev & ~alive)
+
+        _, (alive, died) = jax.lax.scan(step, jnp.ones(n, bool), u)
+        ev = {"alive": alive, "died": died}
+
+    elif cfg.faults == "crash":
+        p_crash = sc["fl_p_crash"].astype(dtype)
+        rt = sc["fl_replace_ticks"].astype(jnp.int32)
+
+        def step(down, ut):
+            # down == 0: alive; down > 0: ticks until the replacement
+            alive_prev = down == 0
+            die = alive_prev & (ut < p_crash)
+            down = jnp.where(die, rt, jnp.maximum(down - 1, 0))
+            alive = down == 0
+            fresh = (~alive_prev) & alive
+            return down, (alive, die, fresh)
+
+        _, (alive, died, fresh) = jax.lax.scan(
+            step, jnp.zeros(n, jnp.int32), u)
+        ev = {"alive": alive, "died": died, "fresh": fresh}
+
+    else:  # degrade
+        p_deg = sc["fl_p_degrade"].astype(dtype)
+        dticks = sc["fl_deg_ticks"].astype(jnp.int32)
+        factor = sc["fl_deg_factor"].astype(dtype)
+
+        def step(deg, ut):
+            begin = (deg == 0) & (ut < p_deg)
+            deg = jnp.where(begin, dticks, jnp.maximum(deg - 1, 0))
+            scale = jnp.where(deg > 0, factor, jnp.ones((), dtype))
+            return deg, scale
+
+        _, scale = jax.lax.scan(step, jnp.zeros(n, jnp.int32), u)
+        return {"scale": scale}
+
+    if k_notice > 0:
+        ev["notice"] = _notice_window(ev["alive"], k_notice)
+    return ev
+
+
+def event_totals(ev: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Whole-stream event counts a fault run reports (computed OUTSIDE
+    the scan — the streams are xs, so these reductions are free):
+    ``n_kill_events`` (node-death edges) and ``node_down_ticks``
+    (node-ticks spent dead)."""
+    if "alive" not in ev:           # degrade: nodes never die
+        z = jnp.zeros((), jnp.int32)
+        return {"n_kill_events": z, "node_down_ticks": z}
+    return {
+        "n_kill_events": jnp.sum(ev["died"], dtype=jnp.int32),
+        "node_down_ticks": jnp.sum(~ev["alive"], dtype=jnp.int32),
+    }

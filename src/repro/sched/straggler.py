@@ -6,13 +6,46 @@ the next rebalance horizon is a straggler-to-be — shrink its shard share
 now (paper SS4.1: assigning burst-intensive work to throttled VMs "can
 severely affect performance" and heightens "possibility of being deemed
 stragglers").
+
+`predictive_blacklist` is the vectorized form of the same contract: the
+batched engine calls it per tick (on *estimated* credits — CASH sees
+telemetry, not ground truth) to mask predicted-to-throttle nodes out of
+placement, and the fault oracle calls it eagerly on the same state, so
+the Python `StragglerMonitor` and the in-scan mask must agree
+flag-for-flag on identical bucket states (tests/test_straggler.py).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+import jax.numpy as jnp
+
 from repro.core.token_bucket import TokenBucket
+
+
+def time_to_deplete_vec(balance, demand, baseline, burst, unlimited):
+    """Vectorized `TokenBucket.time_to_deplete`: seconds until each
+    node's bucket empties at current demand (+inf when not draining or
+    unlimited). Elementwise float64 — bit-identical whether traced in
+    the engine or replayed eagerly by the oracle."""
+    rate = jnp.minimum(demand, burst)
+    drain = rate - baseline
+    inf = jnp.asarray(jnp.inf, dtype=jnp.asarray(balance).dtype)
+    return jnp.where((drain <= 0.0) | (unlimited > 0.0), inf,
+                     balance / jnp.where(drain > 0.0, drain, 1.0))
+
+
+def predictive_blacklist(balance, demand, baseline, burst, unlimited,
+                         horizon_s: float):
+    """Boolean per-node mask: bucket depletes strictly within
+    ``horizon_s`` at current demand — `StragglerMonitor.
+    predictive_stragglers`, array form. ``horizon_s <= 0`` flags
+    nothing."""
+    if horizon_s <= 0.0:
+        return jnp.zeros(jnp.shape(balance), bool)
+    return time_to_deplete_vec(balance, demand, baseline, burst,
+                               unlimited) < horizon_s
 
 
 @dataclasses.dataclass

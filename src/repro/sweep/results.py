@@ -35,7 +35,11 @@ SCALAR_OUTPUTS = ("makespan", "all_done", "surplus_credits",
                   "n_arrived", "n_admitted", "n_dropped", "n_completed",
                   "lat_p50", "lat_p95", "lat_p99", "lat_mean", "lat_max",
                   "wait_p50", "wait_p95", "wait_p99", "wait_mean",
-                  "wait_max", "last_finish")
+                  "wait_max", "last_finish",
+                  # fault-injection metrics (cfg.faults != "none" only;
+                  # scalars() skips columns any group lacks)
+                  "n_preempted", "n_reexec", "n_shed", "work_lost",
+                  "goodput", "n_kill_events", "node_down_ticks")
 
 # outputs that are group-level (no leading scenario axis). Identified by
 # NAME, never by shape — a shape heuristic misfires whenever the sample

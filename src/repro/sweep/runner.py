@@ -67,6 +67,18 @@ class RunnerOptions:
     # thread (bitwise-identical to the synchronous path — same compiled
     # program, the overlap is host-side only)
     pipeline: bool = True
+    # self-healing: a live runner renews its claim mtimes every
+    # ``lease_s / 3`` (heartbeat thread), so ``lease_s`` bounds CRASH
+    # detection latency instead of worst-case chunk wall time — a slow
+    # chunk on a live host is never stolen. False restores the
+    # write-once lease clock.
+    heartbeat: bool = True
+    # chunk compute failures retry with exponential backoff
+    # (``backoff_s * 2**attempt``); a chunk failing ``max_attempts``
+    # times is QUARANTINED — marked on disk so no peer re-attempts it,
+    # its scenario rows NaN-filled — and the rest of the grid drains.
+    max_attempts: int = 3
+    backoff_s: float = 1.0
 
 
 # --------------------------------------------------------------------------
@@ -154,7 +166,13 @@ class WorkQueue:
       * ``group*_chunk*.claim`` — an in-flight lease, created with
         ``O_CREAT|O_EXCL`` (atomic test-and-set); a claim older than
         ``lease_s`` is presumed dead and stolen by renaming it aside
-        (exactly one stealer's rename succeeds).
+        (exactly one stealer's rename succeeds). A live owner renews the
+        mtime of every claim it holds via `heartbeat` (driven by the
+        `start_heartbeat` thread), so only a DEAD owner's claims age out.
+      * ``group*_chunk*.quarantine.json`` — a poisoned chunk: it failed
+        ``max_attempts`` compute attempts somewhere, no peer should burn
+        more attempts on it. Mirrored (best-effort) into the manifest's
+        ``quarantined`` list; the marker files are the authority.
 
     Leftover ``*.tmp.npz`` from a crashed mid-save are ignored by readers
     (loads address final paths only) and swept on startup once stale.
@@ -169,6 +187,10 @@ class WorkQueue:
         self.lease_s = lease_s
         self.poll_s = poll_s
         self.owner = f"{os.getpid()}-{uuid.uuid4().hex[:8]}"
+        self._owned: Dict[Tuple[int, int], pathlib.Path] = {}
+        self._owned_lock = threading.Lock()
+        self._hb_stop: Optional[threading.Event] = None
+        self._hb_thread: Optional[threading.Thread] = None
         self._check_manifest(fingerprint, components or {})
         self._sweep_stale_tmp()
 
@@ -231,11 +253,11 @@ class WorkQueue:
         """Atomically claim (group, chunk) for this process. False means a
         live peer holds it — poll `load` for its finished NPZ instead.
 
-        The claim's mtime is the lease clock and is written once: a chunk
-        whose compute exceeds ``lease_s`` can be presumed dead and stolen
-        by a peer, so size ``lease_s`` above the worst-case chunk wall
-        time (`RunnerOptions.lease_s`). `release` is ownership-checked, so
-        even then a slow owner never yanks the thief's live claim."""
+        The claim's mtime is the lease clock, renewed by `heartbeat` while
+        the owner lives: a claim older than ``lease_s`` means its owner
+        stopped heartbeating (crashed / was killed) and is stolen by a
+        peer. `release` is ownership-checked, so even a comatose owner
+        that wakes up late never yanks the thief's live claim."""
         path = self._claim_path(gi, ci)
         for _ in range(3):
             try:
@@ -259,6 +281,8 @@ class WorkQueue:
                 continue
             with os.fdopen(fd, "w") as f:
                 json.dump({"owner": self.owner, "t": time.time()}, f)
+            with self._owned_lock:
+                self._owned[(gi, ci)] = path
             return True
         return False
 
@@ -266,12 +290,95 @@ class WorkQueue:
         """Drop OUR claim. Ownership-checked: if the lease expired mid-
         compute and a peer stole it, the live thief's claim stays put."""
         path = self._claim_path(gi, ci)
+        with self._owned_lock:
+            self._owned.pop((gi, ci), None)
         try:
             if json.loads(path.read_text()).get("owner") != self.owner:
                 return
         except (FileNotFoundError, json.JSONDecodeError):
             return
         path.unlink(missing_ok=True)
+
+    # ------------------------------------------------------------- heartbeat
+    def heartbeat(self) -> None:
+        """Renew the lease clock (mtime) of every claim this process still
+        owns. A claim that vanished or changed owner (stolen after a
+        genuine lease expiry) is dropped from the renewal set — the thief
+        owns it now."""
+        now = time.time()
+        with self._owned_lock:
+            owned = list(self._owned.items())
+        for key, path in owned:
+            try:
+                if json.loads(path.read_text()).get("owner") != self.owner:
+                    raise FileNotFoundError(path)
+                os.utime(path, (now, now))
+            except (FileNotFoundError, json.JSONDecodeError, OSError):
+                with self._owned_lock:
+                    self._owned.pop(key, None)
+
+    def start_heartbeat(self, period_s: Optional[float] = None) -> None:
+        """Spawn the daemon renewal thread (default period: a third of the
+        lease, so one missed beat never expires a live claim)."""
+        if self._hb_thread is not None:
+            return
+        period = period_s if period_s else self.lease_s / 3.0
+        self._hb_stop = threading.Event()
+
+        def loop(stop=self._hb_stop):
+            while not stop.wait(period):
+                self.heartbeat()
+
+        self._hb_thread = threading.Thread(
+            target=loop, name="workqueue-heartbeat", daemon=True)
+        self._hb_thread.start()
+
+    def stop_heartbeat(self) -> None:
+        if self._hb_thread is None:
+            return
+        self._hb_stop.set()
+        self._hb_thread.join()
+        self._hb_thread = None
+        self._hb_stop = None
+
+    # ------------------------------------------------------------ quarantine
+    def _quarantine_path(self, gi: int, ci: int) -> pathlib.Path:
+        return self.dir / f"group{gi:03d}_chunk{ci:04d}.quarantine.json"
+
+    def quarantined(self, gi: int, ci: int) -> Optional[Dict[str, Any]]:
+        """The chunk's quarantine record, or None if it is healthy."""
+        try:
+            return json.loads(self._quarantine_path(gi, ci).read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def quarantine(self, gi: int, ci: int, error: str,
+                   attempts: int) -> None:
+        """Mark (group, chunk) poisoned: write the marker file (tmp-then-
+        rename) and mirror it into the manifest's ``quarantined`` list so
+        the directory's state is legible without globbing. The marker is
+        the authority — the manifest mirror is best-effort (concurrent
+        quarantines race read-modify-write, markers never do)."""
+        path = self._quarantine_path(gi, ci)
+        doc = {"owner": self.owner, "group": gi, "chunk": ci,
+               "attempts": attempts, "error": error, "t": time.time()}
+        tmp = path.with_name(f"{path.stem}.{self.owner}.tmp.json")
+        tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        tmp.replace(path)
+        mpath = self.dir / "manifest.json"
+        try:
+            man = json.loads(mpath.read_text())
+            rec = [gi, ci]
+            quar = man.setdefault("quarantined", [])
+            if rec not in quar:
+                quar.append(rec)
+                quar.sort()
+                mtmp = mpath.with_name(f"manifest.{self.owner}.tmp.json")
+                mtmp.write_text(json.dumps(man, indent=2, sort_keys=True)
+                                + "\n")
+                mtmp.replace(mpath)
+        except (FileNotFoundError, json.JSONDecodeError):
+            pass
 
 
 class _ChunkWriter:
@@ -323,6 +430,49 @@ class _ChunkWriter:
         self._q.put(None)
         self._t.join()
         self._raise_pending()
+
+
+# placeholder parked in `outs` for a quarantined chunk until siblings
+# provide the output structure to NaN-fill (resolved post-drain)
+_QUARANTINED = object()
+
+
+def _retry_chunk(attempt, opts: RunnerOptions, first=None):
+    """Run one chunk compute with retry + exponential backoff. ``first``
+    (when given) is tried once before ``attempt`` — the pipeline path uses
+    it to consume an already-dispatched device tree, then falls back to
+    full re-dispatches. Raises the last error after ``max_attempts``."""
+    tries = max(1, opts.max_attempts)
+    last: Optional[BaseException] = None
+    for i in range(tries):
+        try:
+            if i == 0 and first is not None:
+                return first()
+            return attempt()
+        except Exception as e:          # noqa: BLE001 — quarantine decides
+            last = e
+            if i + 1 < tries:
+                time.sleep(opts.backoff_s * (2.0 ** i))
+    raise last
+
+
+def _nan_outputs(tmpl: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """A quarantined chunk's stand-in outputs: the sibling chunk ``tmpl``'s
+    structure with ``n`` scenario rows of NaN (floats) / zeros (ints,
+    bools — ``all_done`` reads False). Keeps the grid drainable and the
+    poisoned rows unmistakable in the scalar table."""
+    def conv(k, v):
+        if k in GROUP_LEVEL_OUTPUTS:
+            return v
+        if isinstance(v, dict):
+            return {kk: conv(kk, vv) for kk, vv in v.items()}
+        a = np.asarray(v)
+        shape = (n,) + a.shape[1:]
+        if np.issubdtype(a.dtype, np.floating):
+            return np.full(shape, np.nan, a.dtype)
+        return np.zeros(shape, a.dtype)
+
+    return {k: conv(k, v) for k, v in tmpl.items()}
 
 
 def _trim_outputs(out: Dict[str, Any], n_real: int) -> Dict[str, Any]:
@@ -438,6 +588,9 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
         cached[gi] = 0
         pool.extend((gi, ci) for ci in range(-(-n // steps[gi])))
 
+    quar: List[Tuple[int, int]] = []    # poisoned chunks (writer-appended)
+    if ckpt is not None and opts.heartbeat:
+        ckpt.start_heartbeat()
     writer = _ChunkWriter() if opts.pipeline else None
     try:
         while pool:
@@ -448,6 +601,13 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                 step = steps[gi]
                 lo = ci * step
                 real = min(step, len(g.scenarios) - lo)
+                if ckpt is not None and ckpt.quarantined(gi, ci):
+                    # a peer (or an earlier run) burned this chunk's
+                    # attempts — don't re-attempt a poisoned chunk
+                    outs[gi][ci] = _QUARANTINED
+                    quar.append((gi, ci))
+                    progressed = True
+                    continue
                 out = ckpt.load(gi, ci) if ckpt else None
                 if out is None and ckpt is not None:
                     if not ckpt.try_claim(gi, ci):
@@ -487,11 +647,28 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
 
                         def job(*, skip, gi=gi, ci=ci, dev=dev,
                                 n_real=n_real, cfg=g.cfg, real=real,
-                                pad_tail=pad_tail):
+                                pad_tail=pad_tail, sub=sub,
+                                statics=statics):
                             try:
                                 if skip:
                                     return
-                                res = _finalize_arrays(dev, n_real, cfg)
+                                try:
+                                    # attempt 1 consumes the dispatched
+                                    # tree; retries re-dispatch from `sub`
+                                    res = _retry_chunk(
+                                        lambda: _run_arrays(
+                                            sub, cfg, statics, opts.shards,
+                                            opts.donate),
+                                        opts,
+                                        first=lambda: _finalize_arrays(
+                                            dev, n_real, cfg))
+                                except Exception as e:  # noqa: BLE001
+                                    if ckpt:
+                                        ckpt.quarantine(gi, ci, repr(e),
+                                                        opts.max_attempts)
+                                    outs[gi][ci] = _QUARANTINED
+                                    quar.append((gi, ci))
+                                    return
                                 if pad_tail:
                                     res = _trim_outputs(res, real)
                                 if ckpt:
@@ -504,8 +681,19 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                         writer.submit(job)
                         handed_off = True
                     else:
-                        out = _run_arrays(sub, g.cfg, statics, opts.shards,
-                                          opts.donate)
+                        try:
+                            out = _retry_chunk(
+                                lambda: _run_arrays(sub, g.cfg, statics,
+                                                    opts.shards,
+                                                    opts.donate), opts)
+                        except Exception as e:      # noqa: BLE001
+                            if ckpt:
+                                ckpt.quarantine(gi, ci, repr(e),
+                                                opts.max_attempts)
+                            outs[gi][ci] = _QUARANTINED
+                            quar.append((gi, ci))
+                            progressed = True
+                            continue
                         if pad_tail:
                             out = _trim_outputs(out, real)
                         if ckpt:
@@ -521,6 +709,23 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
     finally:
         if writer is not None:
             writer.close()    # drain in-flight saves; re-raise their errors
+        if ckpt is not None:
+            ckpt.stop_heartbeat()
+
+    # resolve quarantined chunks: NaN-fill from a healthy sibling chunk's
+    # output structure so the grid stays drainable and concatenable. A
+    # group with NO healthy chunk has no structure to clone — that is a
+    # fully-poisoned sweep, not a drainable grid.
+    for gi, ci in quar:
+        g = groups[gi]
+        tmpl = next((v for v in outs[gi].values() if v is not _QUARANTINED),
+                    None)
+        if tmpl is None:
+            raise RuntimeError(
+                f"every chunk of group {gi} is quarantined — nothing "
+                f"healthy to drain (see {opts.checkpoint_dir})")
+        real = min(steps[gi], len(g.scenarios) - ci * steps[gi])
+        outs[gi][ci] = _nan_outputs(tmpl, real)
 
     results: List[GroupResult] = []
     for gi, g in enumerate(groups):
@@ -543,6 +748,9 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
         "pipeline": bool(opts.pipeline),
         "resumed_scenarios": n_cached,
         "computed_scenarios": n_scen - n_cached,
+        # poisoned chunks NaN-filled this run ([group, chunk] pairs) —
+        # their scenario rows are NaN in the scalar table
+        "quarantined_chunks": sorted([gi, ci] for gi, ci in quar),
         "mesh": mesh.mesh_topology(),
         "ticks_nodes_scen_per_s": scen_ticks / max(wall, 1e-9),
     }

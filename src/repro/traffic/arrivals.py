@@ -225,6 +225,12 @@ def stack_traffic_scenarios(
         for k in ("tmpl_n", "rng_seed", "arr_rate", "arr_amp",
                   "arr_period", "arr_phase"):
             row[k] = s[k]
+        # fault-process scalars (repro.faults.attach_fault_process) ride
+        # through per-scenario; the key-set check above already enforces
+        # uniform presence across the group
+        for k in s:
+            if k.startswith("fl_"):
+                row[k] = s[k]
         if has_trace:
             m_pad = M - len(s["arr_t"])
             row["arr_t"] = pad(s["arr_t"], m_pad, np.inf)

@@ -1,0 +1,458 @@
+"""Fault injection & recovery (ISSUE 8): the fault-enabled engine must be
+float64-exact against the numpy fault oracles across the scheduler x
+fault-kind grid, bitwise-stable under unroll and `shard_map`, and pay
+ZERO carried-state overhead when faults are disabled.
+
+Parity conventions follow tests/test_traffic.py: integer event counters
+and SLO histograms compare with `array_equal`; float accumulators
+(work sums, goodput) use rtol/atol 1e-9 because summation order differs
+between `jnp.sum` and the oracle's Python loop.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import vecsim
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.simulator import Job
+from repro.faults import (FAULT_PARAM_KEYS, attach_fault_process,
+                          event_totals, fault_events)
+from repro.faults.oracle import ClosedFaultOracle, FaultTrafficOracle
+from repro.traffic import arrivals
+
+TOL = 1e-9
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+FAULT_KW = {
+    "spot": dict(kill_rate=1 / 600.0, restore_rate=1 / 900.0),
+    "crash": dict(crash_rate=1 / 900.0, replace_s=300.0),
+    "degrade": dict(degrade_rate=1 / 600.0, degrade_s=240.0,
+                    degrade_factor=0.4),
+}
+
+# exact-match keys per path: everything integer-counted or histogram-
+# bucketed, including the fault event totals and re-execution counters
+_EXACT_TRAFFIC = ("n_arrived", "n_admitted", "n_dropped", "n_completed",
+                  "lat_hist", "wait_hist", "all_done",
+                  "n_preempted", "n_reexec", "n_shed",
+                  "n_kill_events", "node_down_ticks")
+_EXACT_CLOSED = ("all_done", "n_preempted", "n_reexec", "n_shed",
+                 "n_kill_events", "node_down_ticks")
+
+
+def _fleet(n=4, slots=3, frac=0.3):
+    return make_cluster(n, "t3.large", slots_per_node=slots,
+                        cpu_initial_fraction=frac)
+
+
+def _traffic_scenario(mode, rng_seed=7, **kw):
+    tmpl = arrivals.make_template(6, seed=3)
+    sc = arrivals.build_traffic_scenario(_fleet(), tmpl, mode="poisson",
+                                         rate=0.05, rng_seed=rng_seed)
+    return attach_fault_process(sc, mode=mode, dt=5.0,
+                                **{**FAULT_KW[mode], **kw})
+
+
+def _traffic_cfg(mode, scheduler="cash", **kw):
+    base = dict(n_ticks=300, dt=5.0, scheduler=scheduler,
+                telemetry="predicted", traffic="poisson", table_slots=24,
+                slo_bins=16, faults=mode, max_retries=2,
+                blacklist_horizon_s=120.0, preempt_notice_s=20.0)
+    base.update(kw)
+    return vecsim.VecSimConfig(**base)
+
+
+def _cpu_jobs(seed, n_jobs=3, tasks_per=5):
+    rng = np.random.default_rng(seed)
+    jobs, tid = [], 0
+    for j in range(n_jobs):
+        tasks = []
+        for _ in range(tasks_per):
+            ann = (Annotation.BURST_CPU if rng.random() < 0.6
+                   else Annotation.NONE)
+            tasks.append(Task(tid=tid, job=f"j{j}", vertex="map",
+                              work_cpu=float(rng.uniform(20, 80)),
+                              demand_cpu=float(rng.uniform(0.4, 1.0)),
+                              annotation=ann))
+            tid += 1
+        jobs.append(Job(name=f"j{j}", tasks=tasks))
+    return jobs
+
+
+def _closed_scenario(mode, seed=11):
+    nodes = make_cluster(3, "t3.large", slots_per_node=2,
+                         cpu_initial_fraction=0.3)
+    sc = vecsim.build_scenario(nodes, _cpu_jobs(seed), submit="parallel")
+    return attach_fault_process(sc, mode=mode, dt=5.0, **FAULT_KW[mode])
+
+
+def _closed_cfg(mode, scheduler="cash", **kw):
+    base = dict(n_ticks=400, dt=5.0, scheduler=scheduler,
+                telemetry="predicted", faults=mode, max_retries=2,
+                blacklist_horizon_s=120.0, preempt_notice_s=20.0)
+    base.update(kw)
+    return vecsim.VecSimConfig(**base)
+
+
+def _row(res, i=0):
+    return {k: np.asarray(v)[i] for k, v in res.items()
+            if not isinstance(v, dict)}
+
+
+def _bitwise_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return np.array_equal(a, b, equal_nan=True)
+    return np.array_equal(a, b)
+
+
+def _assert_parity(eng, ora, exact):
+    for k, ov in ora.items():
+        ev, ov = np.asarray(eng[k]), np.asarray(ov)
+        if k in exact:
+            assert np.array_equal(ev, ov), f"{k}: engine {ev} != oracle {ov}"
+        else:
+            assert np.allclose(ev, ov, rtol=TOL, atol=TOL, equal_nan=True), \
+                f"{k}: engine {ev} != oracle {ov}"
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle parity: scheduler x fault-kind grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ("cash", "stock"))
+@pytest.mark.parametrize("mode", ("spot", "crash", "degrade"))
+def test_traffic_fault_parity(scheduler, mode):
+    """Open-loop path under faults: counters/histograms exact, float
+    accumulators to 1e-9, vs the eager `FaultTrafficOracle` replay."""
+    sc = _traffic_scenario(mode)
+    cfg = _traffic_cfg(mode, scheduler)
+    eng = _row(vecsim.run_scenarios([sc], cfg))
+    ora = FaultTrafficOracle(sc, cfg).run()
+    _assert_parity(eng, ora, _EXACT_TRAFFIC)
+    assert ora["n_completed"] > 0
+    if mode != "degrade":
+        # the faults actually bite: kills happened and work re-executed
+        assert ora["n_kill_events"] > 0 and ora["n_reexec"] > 0
+        # a drained table accounts for every admitted task exactly once
+        assert ora["n_completed"] + ora["n_shed"] == ora["n_admitted"] \
+            or not ora["all_done"]
+
+
+@pytest.mark.parametrize("scheduler", ("cash", "stock"))
+@pytest.mark.parametrize("mode", ("spot", "crash", "degrade"))
+def test_closed_fault_parity(scheduler, mode):
+    """Closed-batch path under faults vs the eager `ClosedFaultOracle`:
+    the kill/requeue/shed bookkeeping and makespan agree."""
+    sc = _closed_scenario(mode)
+    cfg = _closed_cfg(mode, scheduler)
+    eng = _row(vecsim.run_scenarios([sc], cfg))
+    ora = ClosedFaultOracle(sc, cfg).run()
+    _assert_parity(eng, ora, _EXACT_CLOSED)
+    if mode != "degrade":
+        assert ora["n_kill_events"] > 0
+
+
+def test_shed_past_max_retries():
+    """A task killed more than `max_retries` times is SHED: it leaves the
+    table (stream still drains) and counts in `n_shed`, never in
+    `n_completed` — engine and oracle agree exactly."""
+    sc = _traffic_scenario("spot", kill_rate=1 / 80.0,
+                           restore_rate=1 / 120.0)
+    cfg = _traffic_cfg("spot", max_retries=0, blacklist_horizon_s=0.0,
+                       preempt_notice_s=0.0)
+    eng = _row(vecsim.run_scenarios([sc], cfg))
+    ora = FaultTrafficOracle(sc, cfg).run()
+    _assert_parity(eng, ora, _EXACT_TRAFFIC)
+    assert ora["n_shed"] > 0
+    assert ora["n_completed"] + ora["n_shed"] == ora["n_admitted"] \
+        or not ora["all_done"]
+
+
+# ---------------------------------------------------------------------------
+# determinism & zero-overhead acceptance
+# ---------------------------------------------------------------------------
+
+def test_zero_kill_spot_bitwise_equals_fault_free():
+    """A spot process with kill_rate=0 must reproduce the fault-free run
+    bit for bit: the liveness machinery is a no-op when nobody dies."""
+    tmpl = arrivals.make_template(6, seed=3)
+    plain = arrivals.build_traffic_scenario(_fleet(), tmpl, mode="poisson",
+                                            rate=0.05, rng_seed=7)
+    faulty = attach_fault_process(plain, mode="spot", dt=5.0,
+                                  kill_rate=0.0, restore_rate=0.0)
+    kw = dict(n_ticks=300, dt=5.0, scheduler="cash", telemetry="predicted",
+              traffic="poisson", table_slots=24, slo_bins=16)
+    a = vecsim.run_scenarios([plain], vecsim.VecSimConfig(**kw))
+    b = vecsim.run_scenarios([faulty], vecsim.VecSimConfig(
+        faults="spot", max_retries=2, **kw))
+    for k, va in a.items():
+        if isinstance(va, dict):
+            continue
+        assert _bitwise_equal(va, b[k]), k
+
+
+def test_fault_stream_ignores_scheduler_axis():
+    """CASH-vs-stock comparisons see bit-identical fault streams: the
+    stream keys off (seed, rng_seed, fl_*) only, so the scheduler axis
+    never perturbs the faults it is judged under."""
+    sc = _traffic_scenario("spot")
+    evs = [fault_events(_traffic_cfg("spot", s), sc, np.float64)
+           for s in ("cash", "stock")]
+    for k in evs[0]:
+        assert np.array_equal(np.asarray(evs[0][k]), np.asarray(evs[1][k]))
+    # and replays are deterministic: eager call == eager call
+    again = fault_events(_traffic_cfg("spot", "cash"), sc, np.float64)
+    assert all(np.array_equal(np.asarray(evs[0][k]), np.asarray(again[k]))
+               for k in evs[0])
+    tot = event_totals(evs[0])
+    assert int(tot["n_kill_events"]) == int(np.sum(np.asarray(
+        evs[0]["died"])))
+    assert int(tot["node_down_ticks"]) == int(np.sum(~np.asarray(
+        evs[0]["alive"])))
+
+
+def test_notice_stream_presence():
+    """`notice` rides the spot/crash streams only when a preemption
+    notice is configured, and only flags nodes that really die within
+    the window."""
+    sc = _traffic_scenario("spot")
+    ev = fault_events(_traffic_cfg("spot", preempt_notice_s=20.0), sc,
+                      np.float64)
+    assert "notice" in ev
+    alive = np.asarray(ev["alive"])
+    notice = np.asarray(ev["notice"])
+    k = int(round(20.0 / 5.0))
+    n_ticks = alive.shape[0]
+    for t, n in zip(*np.nonzero(notice)):
+        hz = alive[t + 1: min(t + 1 + k, n_ticks), n]
+        assert alive[t, n] and not hz.all(), (t, n)
+    ev0 = fault_events(_traffic_cfg("spot", preempt_notice_s=0.0), sc,
+                       np.float64)
+    assert "notice" not in ev0
+
+
+@pytest.mark.parametrize("unroll", (2, 4))
+def test_faulty_unroll_bitwise(unroll):
+    """The k-unrolled tick scan stays bitwise-identical under faults
+    (the fault xs slice cleanly across unrolled steps)."""
+    sc = _traffic_scenario("spot")
+    a = vecsim.run_scenarios([sc], _traffic_cfg("spot", unroll=1))
+    b = vecsim.run_scenarios([sc], _traffic_cfg("spot", unroll=unroll))
+    for k, va in a.items():
+        if isinstance(va, dict):
+            continue
+        assert _bitwise_equal(va, b[k]), k
+
+
+def test_fault_free_scan_carries_no_fault_state(monkeypatch):
+    """Zero-overhead acceptance: with `faults='none'` the tick scan's
+    carry must not contain ANY fault bookkeeping (retry counts, lost
+    work, re-exec counters) — the machinery is statically absent, not
+    zero-filled."""
+    captured = []
+    orig = jax.lax.scan
+
+    def spy(f, init, xs=None, **kw):
+        if isinstance(init, dict):
+            captured.append(set(init.keys()))
+        return orig(f, init, xs, **kw)
+
+    monkeypatch.setattr(jax.lax, "scan", spy)
+    fault_keys = {"retry", "work_lost", "tb_retry", "tb_work",
+                  "n_reexec", "n_shed"}
+
+    # unique n_ticks force fresh traces so the spy sees the carry
+    tmpl = arrivals.make_template(6, seed=3)
+    tsc = arrivals.build_traffic_scenario(_fleet(), tmpl, mode="poisson",
+                                          rate=0.05, rng_seed=7)
+    vecsim.run_scenarios([tsc], vecsim.VecSimConfig(
+        n_ticks=311, dt=5.0, traffic="poisson", table_slots=24,
+        slo_bins=16))
+    csc = vecsim.build_scenario(make_cluster(3, "t3.large",
+                                             slots_per_node=2,
+                                             cpu_initial_fraction=0.3),
+                                _cpu_jobs(11), submit="parallel")
+    vecsim.run_scenarios([csc], vecsim.VecSimConfig(n_ticks=313, dt=5.0))
+    assert captured, "spy saw no dict-carry scans (stale jit cache?)"
+    for keys in captured:
+        assert not (keys & fault_keys), keys & fault_keys
+
+    # and the same carries DO appear once faults are on
+    captured.clear()
+    fsc = attach_fault_process(tsc, mode="spot", dt=5.0, **FAULT_KW["spot"])
+    vecsim.run_scenarios([fsc], vecsim.VecSimConfig(
+        n_ticks=311, dt=5.0, traffic="poisson", table_slots=24,
+        slo_bins=16, faults="spot", max_retries=2))
+    assert any(keys & fault_keys for keys in captured)
+
+
+def test_stacker_rejects_half_faulty_group():
+    """One compile group must be uniformly faulty or uniformly clean —
+    a mixed group has no consistent static `cfg.faults`."""
+    plain = vecsim.build_scenario(make_cluster(2, "t3.large",
+                                               slots_per_node=2),
+                                  _cpu_jobs(1, n_jobs=1))
+    faulty = attach_fault_process(plain, mode="spot", dt=5.0,
+                                  kill_rate=0.01)
+    with pytest.raises(ValueError, match="uniform"):
+        vecsim.stack_scenarios([plain, faulty])
+    stacked = vecsim.stack_scenarios([faulty, faulty])
+    for k in FAULT_PARAM_KEYS:
+        assert k in stacked and stacked[k].shape == (2,)
+
+
+def test_attach_fault_process_validates_and_copies():
+    sc = {"slots": np.array([2, 2])}
+    out = attach_fault_process(sc, mode="spot", dt=5.0, kill_rate=0.01)
+    assert "fl_p_kill" not in sc          # original untouched
+    assert set(FAULT_PARAM_KEYS) <= set(out)
+    with pytest.raises(ValueError, match="mode"):
+        attach_fault_process(sc, mode="meteor")
+    with pytest.raises(ValueError, match="dt"):
+        attach_fault_process(sc, mode="spot", dt=0.0)
+    with pytest.raises(ValueError, match="degrade_factor"):
+        attach_fault_process(sc, mode="degrade", degrade_factor=0.0)
+
+
+# ---------------------------------------------------------------------------
+# shard_map bitwise parity (forced devices need a fresh process)
+# ---------------------------------------------------------------------------
+
+_FAULT_SHARD_SCRIPT = textwrap.dedent("""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro import sweep
+    from repro.core import vecsim
+    from repro.core.cluster import make_cluster
+    from repro.faults import attach_fault_process
+    from repro.traffic import arrivals
+
+    tmpl = arrivals.make_template(6, seed=3)
+
+    def builder(rng_seed):
+        fleet = make_cluster(4, "t3.large", slots_per_node=3,
+                             cpu_initial_fraction=0.3)
+        sc = arrivals.build_traffic_scenario(fleet, tmpl, mode="poisson",
+                                             rate=0.05, rng_seed=rng_seed)
+        return attach_fault_process(sc, mode="spot", dt=5.0,
+                                    kill_rate=1 / 600.0,
+                                    restore_rate=1 / 900.0)
+
+    spec = sweep.SweepSpec(builder, axes={"rng_seed": list(range(4))},
+                           base=vecsim.VecSimConfig(
+                               n_ticks=300, dt=5.0, traffic="poisson",
+                               faults="spot", max_retries=2,
+                               blacklist_horizon_s=120.0,
+                               preempt_notice_s=20.0, table_slots=24,
+                               slo_bins=16))
+    a = sweep.run_sweep(spec.groups(), shards=1)
+    b = sweep.run_sweep(spec.groups(), shards=2)
+    sa, sb = a.scalars(), b.scalars()
+    assert set(sa) == set(sb)
+    for k in sa:
+        ka, kb = np.asarray(sa[k]), np.asarray(sb[k])
+        eq = (np.array_equal(ka, kb, equal_nan=True)
+              if ka.dtype.kind == "f" else np.array_equal(ka, kb))
+        assert eq, k
+    assert sa["n_kill_events"].sum() > 0
+    print("BITWISE_OK")
+""")
+
+
+def test_faulty_shard_map_bitwise_subprocess():
+    """A fault-enabled sweep sharded 2-way over the scenario axis must
+    reproduce the unsharded run bit for bit, fault counters included."""
+    proc = subprocess.run([sys.executable, "-c", _FAULT_SHARD_SCRIPT],
+                          capture_output=True, text=True,
+                          env=_subprocess_env(2), timeout=300)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "BITWISE_OK" in proc.stdout
+
+
+def _subprocess_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    flags = " ".join(f for f in env.get("XLA_FLAGS", "").split()
+                     if "xla_force_host_platform_device_count" not in f)
+    env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count="
+                        + str(n_devices)).strip()
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# churn benchmark gate (ISSUE 8 satellite): fast in tier-1, saturation slow
+# ---------------------------------------------------------------------------
+
+def test_churn_fast_gate():
+    """The fast-mode churn benchmark: identical fault streams across the
+    scheduler axis, real preemptions, and CASH (credit-aware blacklist +
+    preempt notice) wasting no more work than credit-blind stock."""
+    from benchmarks import churn_bench
+    stats = churn_bench.run(fast=True)     # asserts the <= 1.0 gate itself
+    assert stats["kill_events"] > 0
+    assert stats["wasted_work_ratio_cash_vs_stock"] <= 1.0
+    for s in ("cash", "stock"):
+        assert stats["schedulers"][s]["goodput_vcpu_s"] > 0
+
+
+@pytest.mark.slow
+def test_churn_saturation_slow():
+    """Saturation variant: double the arrival rate so the fleet runs a
+    standing backlog under churn. The grid must still produce finite
+    metrics, identical kill streams across schedulers, and a shed/drop
+    pressure-release path that actually engages."""
+    from repro import sweep as sweeplib
+
+    n_nodes, slots, n_seeds, n_ticks, dt = 6, 4, 3, 1500, 5.0
+    tmpl = arrivals.make_template(8, seed=1, work=(30.0, 90.0),
+                                  burst_fraction=0.75)
+    rate = 2.0 * n_nodes * slots / 300.0
+
+    def builder(rng_seed):
+        fleet = make_cluster(n_nodes, "t3.large", slots_per_node=slots,
+                             cpu_initial_fraction=0.3)
+        sc = arrivals.build_traffic_scenario(fleet, tmpl, mode="poisson",
+                                             rate=rate, rng_seed=rng_seed)
+        return attach_fault_process(sc, mode="spot", dt=dt,
+                                    kill_rate=1 / 1000.0,
+                                    restore_rate=1 / 400.0)
+
+    spec = sweeplib.SweepSpec(
+        builder,
+        axes={"scheduler": ("cash", "stock"),
+              "rng_seed": list(range(n_seeds))},
+        base=vecsim.VecSimConfig(
+            n_ticks=n_ticks, dt=dt, traffic="poisson", faults="spot",
+            max_retries=3, blacklist_horizon_s=120.0,
+            preempt_notice_s=120.0, table_slots=2 * n_nodes * slots,
+            slo_bins=32))
+    res = sweeplib.run_sweep(spec, shards=1)
+    cols = res.scalars()
+    seeds = np.array([p.coord_dict["rng_seed"] for p in res.points])
+    kills = cols["n_kill_events"].astype(int)
+    assert kills.sum() > 0
+    # identical streams: kill counts match per seed across schedulers
+    for s in range(n_seeds):
+        assert len(set(kills[seeds == s])) == 1, (s, kills[seeds == s])
+    for k in ("goodput", "work_lost", "n_completed"):
+        assert np.isfinite(cols[k]).all(), k
+    # saturated: admission control or shedding released pressure
+    assert (cols["n_dropped"].sum() + cols["n_shed"].sum()) > 0

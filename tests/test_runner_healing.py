@@ -1,0 +1,417 @@
+"""Self-healing sweep runner (ISSUE 8): heartbeat lease renewal (a slow
+chunk on a live host is never stolen; a killed runner's chunks are),
+retry with exponential backoff on transient chunk failures, and
+quarantine of chunks that fail every attempt — the rest of the grid
+drains with the poisoned rows NaN-filled."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import sweep
+from repro.core import vecsim
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.simulator import Job
+from repro.sweep import runner as runner_mod
+from repro.sweep.runner import RunnerOptions, WorkQueue
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _scenario(seed):
+    rng = np.random.RandomState(seed)
+    tasks = [Task(tid=100 * seed + k, job="j", vertex="map",
+                  work_cpu=float(rng.uniform(20, 60)),
+                  demand_cpu=float(rng.uniform(0.3, 0.9)),
+                  annotation=Annotation.BURST_CPU if k % 2
+                  else Annotation.NONE)
+             for k in range(6)]
+    nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                         cpu_initial_fraction=0.3)
+    return vecsim.build_scenario(nodes, [Job(name="j", tasks=tasks)],
+                                 rng_seed=seed)
+
+
+def _spec(n_seeds=4):
+    return sweep.SweepSpec(_scenario, axes={"seed": list(range(n_seeds))},
+                           base=vecsim.VecSimConfig(n_ticks=200))
+
+
+# ---------------------------------------------------------------------------
+# heartbeat: the lease clock tracks owner LIVENESS, not chunk wall time
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_renews_and_drops_stolen_claims(tmp_path):
+    """A heartbeating owner keeps its claim past many lease periods; once
+    the heartbeat stops the lease ages out and a peer steals it — and the
+    comatose owner's next heartbeat/release must NOT touch the thief's
+    claim."""
+    q1 = WorkQueue(tmp_path, "fp", lease_s=0.6)
+    q2 = WorkQueue(tmp_path, "fp", lease_s=0.6)
+    assert q1.try_claim(0, 0)
+    assert not q2.try_claim(0, 0)
+
+    q1.start_heartbeat(period_s=0.15)
+    time.sleep(1.5)                       # 2.5 lease periods
+    assert not q2.try_claim(0, 0), "live owner's claim was stolen"
+    q1.stop_heartbeat()
+
+    time.sleep(0.9)                       # now genuinely stale
+    assert q2.try_claim(0, 0), "stale claim not stolen"
+
+    # the old owner wakes up: heartbeat drops the stolen claim from its
+    # renewal set, release leaves the thief's claim in place
+    q1.heartbeat()
+    assert (0, 0) not in q1._owned
+    q1.release(0, 0)
+    claim = tmp_path / "group000_chunk0000.claim"
+    assert claim.exists()
+    assert json.loads(claim.read_text())["owner"] == q2.owner
+
+
+def test_slow_chunk_on_live_host_never_stolen(tmp_path, monkeypatch):
+    """Regression (ISSUE 8 satellite): chunk wall time 3x the lease, two
+    workers draining the same queue — with heartbeat renewal every chunk
+    is computed exactly ONCE across the pair (the write-once lease clock
+    used to let worker B steal worker A's still-running chunk)."""
+    lease = 0.5
+    calls = []
+    orig = runner_mod._run_arrays
+
+    def slow(arrays, cfg, statics, shards, donate):
+        calls.append(threading.get_ident())
+        time.sleep(3 * lease)             # claim older than lease mid-compute
+        return orig(arrays, cfg, statics, shards, donate)
+
+    monkeypatch.setattr(runner_mod, "_run_arrays", slow)
+    spec = _spec(2)
+    opts = RunnerOptions(shards=1, chunk_size=1, pipeline=False,
+                         checkpoint_dir=str(tmp_path), lease_s=lease)
+    results = {}
+
+    def work(name):
+        results[name] = sweep.run_sweep(spec, opts)
+
+    ta = threading.Thread(target=work, args=("a",))
+    tb = threading.Thread(target=work, args=("b",))
+    ta.start(); time.sleep(0.1); tb.start()
+    ta.join(timeout=120); tb.join(timeout=120)
+    assert set(results) == {"a", "b"}
+
+    # zero double-compute: 2 chunks, exactly 2 computes across both
+    assert len(calls) == 2, f"chunk stolen mid-compute: {len(calls)} computes"
+    sa, sb = results["a"].scalars(), results["b"].scalars()
+    assert np.array_equal(sa["makespan"], sb["makespan"])
+    assert not list(tmp_path.glob("*.claim"))
+    assert not list(tmp_path.glob("*.quarantine.json"))
+
+
+_HANG_SCRIPT = textwrap.dedent("""
+    import os, sys, time
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro import sweep
+    from repro.core import vecsim
+    from repro.core.annotations import Annotation, Task
+    from repro.core.cluster import make_cluster
+    from repro.core.simulator import Job
+    from repro.sweep import runner
+
+    def scenario(seed):
+        rng = np.random.RandomState(seed)
+        tasks = [Task(tid=100 * seed + k, job="j", vertex="map",
+                      work_cpu=float(rng.uniform(20, 60)),
+                      demand_cpu=float(rng.uniform(0.3, 0.9)),
+                      annotation=Annotation.BURST_CPU if k % 2
+                      else Annotation.NONE)
+                 for k in range(6)]
+        nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                             cpu_initial_fraction=0.3)
+        return vecsim.build_scenario(nodes, [Job(name="j", tasks=tasks)],
+                                     rng_seed=seed)
+
+    orig = runner._run_arrays
+    calls = {"n": 0}
+
+    def hang(arrays, cfg, statics, shards, donate):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            # second chunk: signal the parent, then wedge mid-compute
+            # while HOLDING the claim — the parent SIGKILLs us here
+            open(sys.argv[2], "w").write("hung")
+            time.sleep(600)
+        return orig(arrays, cfg, statics, shards, donate)
+
+    runner._run_arrays = hang
+    spec = sweep.SweepSpec(scenario, axes={"seed": [0, 1]},
+                           base=vecsim.VecSimConfig(n_ticks=200))
+    sweep.run_sweep(spec, shards=1, chunk_size=1,
+                    checkpoint_dir=sys.argv[1],
+                    options=sweep.RunnerOptions(pipeline=False))
+""")
+
+
+def _subprocess_env() -> dict:
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def test_killed_runner_chunk_retried_by_peer_exactly_once(tmp_path):
+    """ISSUE 8 acceptance: SIGKILL a runner mid-chunk; a peer with the
+    same queue steals the dead claim after the lease expires and computes
+    that chunk exactly once — the dead runner's finished chunk is resumed
+    from its NPZ, not recomputed."""
+    marker = tmp_path / "hung"
+    qdir = tmp_path / "q"
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _HANG_SCRIPT, str(qdir), str(marker)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        env=_subprocess_env())
+    try:
+        deadline = time.time() + 120
+        while not marker.exists():
+            assert proc.poll() is None, proc.stderr.read().decode()[-4000:]
+            assert time.time() < deadline, "worker never reached chunk 2"
+            time.sleep(0.05)
+        proc.kill()
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    # the kill left chunk 0 saved and chunk 1's claim orphaned
+    assert (qdir / "group000_chunk0000.npz").exists()
+    (orphan,) = list(qdir.glob("*.claim"))
+    # expire the dead owner's lease (instead of sleeping lease_s out)
+    old = time.time() - 7200
+    os.utime(orphan, (old, old))
+
+    calls = []
+    orig = runner_mod._run_arrays
+
+    def counting(arrays, cfg, statics, shards, donate):
+        calls.append(int(np.asarray(arrays["rng_seed"]).ravel()[0]))
+        return orig(arrays, cfg, statics, shards, donate)
+
+    runner_mod._run_arrays = counting
+    try:
+        res = sweep.run_sweep(
+            sweep.SweepSpec(_scenario, axes={"seed": [0, 1]},
+                            base=vecsim.VecSimConfig(n_ticks=200)),
+            shards=1, chunk_size=1, checkpoint_dir=str(qdir),
+            options=RunnerOptions(pipeline=False))
+    finally:
+        runner_mod._run_arrays = orig
+
+    # exactly ONE compute (the dead runner's in-flight chunk, seed 1);
+    # chunk 0 resumed from the dead runner's finished NPZ
+    assert calls == [1]
+    assert res.meta["computed_scenarios"] == 1
+    assert res.meta["resumed_scenarios"] == 1
+    assert res.meta["quarantined_chunks"] == []
+    assert np.isfinite(res.scalars()["makespan"]).all()
+    assert not list(qdir.glob("*.claim"))
+
+
+# ---------------------------------------------------------------------------
+# retry with backoff; quarantine after max_attempts
+# ---------------------------------------------------------------------------
+
+def test_transient_failure_retries_then_succeeds(tmp_path, monkeypatch):
+    """A chunk that fails twice then succeeds completes within
+    max_attempts=3 — correct results, no quarantine, and the backoff
+    schedule (b, 2b) actually waited between attempts."""
+    clean = sweep.run_sweep(_spec(1), shards=1,
+                            options=RunnerOptions(pipeline=False))
+    times = []
+    orig = runner_mod._run_arrays
+
+    def flaky(arrays, cfg, statics, shards, donate):
+        times.append(time.perf_counter())
+        if len(times) <= 2:
+            raise RuntimeError("transient device loss")
+        return orig(arrays, cfg, statics, shards, donate)
+
+    monkeypatch.setattr(runner_mod, "_run_arrays", flaky)
+    backoff = 0.2
+    res = sweep.run_sweep(_spec(1), shards=1,
+                          options=RunnerOptions(
+                              pipeline=False, max_attempts=3,
+                              backoff_s=backoff,
+                              checkpoint_dir=str(tmp_path)))
+    assert len(times) == 3
+    assert times[1] - times[0] >= backoff            # b
+    assert times[2] - times[1] >= 2 * backoff        # 2b
+    assert res.meta["quarantined_chunks"] == []
+    assert np.array_equal(res.scalars()["makespan"],
+                          clean.scalars()["makespan"])
+    assert not list(tmp_path.glob("*.quarantine.json"))
+
+
+def test_pipeline_finalize_failure_falls_back_to_redispatch(monkeypatch):
+    """Pipeline path: when consuming the already-dispatched device tree
+    fails, the retry re-dispatches the chunk from host arrays — the sweep
+    still completes with correct results."""
+    clean = sweep.run_sweep(_spec(2), shards=1,
+                            options=RunnerOptions(pipeline=False))
+    state = {"n": 0}
+    orig = runner_mod._finalize_arrays
+
+    def flaky_finalize(dev, n_real, cfg):
+        state["n"] += 1
+        if state["n"] == 1:           # tear the first device->host transfer
+            raise RuntimeError("transfer torn")
+        return orig(dev, n_real, cfg)
+
+    monkeypatch.setattr(runner_mod, "_finalize_arrays", flaky_finalize)
+    res = sweep.run_sweep(_spec(2), shards=1,
+                          options=RunnerOptions(pipeline=True,
+                                                max_attempts=2,
+                                                backoff_s=0.01))
+    assert state["n"] >= 2            # retry re-dispatched and re-finalized
+    assert res.meta["quarantined_chunks"] == []
+    assert np.array_equal(res.scalars()["makespan"],
+                          clean.scalars()["makespan"])
+
+
+def _poison(target_seed):
+    """A compute wrapper that always fails for the chunk holding
+    ``target_seed``."""
+    orig = runner_mod._run_arrays
+    calls = {"n": 0}
+
+    def run(arrays, cfg, statics, shards, donate):
+        if target_seed in np.asarray(arrays["rng_seed"]).ravel():
+            calls["n"] += 1
+            raise RuntimeError("poisoned input")
+        return orig(arrays, cfg, statics, shards, donate)
+
+    return run, calls
+
+
+def test_quarantine_poisoned_chunk_grid_drains(tmp_path, monkeypatch):
+    """A chunk failing every attempt is quarantined: marker on disk,
+    mirrored in the manifest, listed in meta, its scenario rows NaN — and
+    every OTHER point of the grid drains intact."""
+    poison, calls = _poison(target_seed=3)
+    monkeypatch.setattr(runner_mod, "_run_arrays", poison)
+    res = sweep.run_sweep(_spec(4), shards=1,
+                          options=RunnerOptions(
+                              pipeline=False, chunk_size=2, max_attempts=2,
+                              backoff_s=0.01, checkpoint_dir=str(tmp_path)))
+    assert calls["n"] == 2                    # exactly max_attempts tries
+
+    # marker file is the authority; the manifest mirror stays legible and
+    # leaves the fingerprint components untouched
+    rec = json.loads(
+        (tmp_path / "group000_chunk0001.quarantine.json").read_text())
+    assert rec["attempts"] == 2 and "poisoned" in rec["error"]
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["quarantined"] == [[0, 1]]
+    assert set(man["components"]) == {"spec", "chunk_size", "layout"}
+    assert res.meta["quarantined_chunks"] == [[0, 1]]
+
+    cols = res.scalars()
+    seeds = np.array([p.coord_dict["seed"] for p in res.points])
+    healthy, poisoned = seeds < 2, seeds >= 2
+    assert np.isfinite(cols["makespan"][healthy]).all()
+    assert np.isnan(cols["makespan"][poisoned]).all()
+    assert not cols["all_done"][poisoned].any()
+    assert cols["all_done"][healthy].all()
+    assert not list(tmp_path.glob("*.claim"))
+
+
+def test_resumed_run_honors_quarantine_marker(tmp_path, monkeypatch):
+    """A later run against the same queue must NOT burn attempts on a
+    quarantined chunk, even with healthy compute: the marker is respected,
+    healthy chunks resume from their NPZs, the rows stay NaN."""
+    poison, _ = _poison(target_seed=3)
+    monkeypatch.setattr(runner_mod, "_run_arrays", poison)
+    sweep.run_sweep(_spec(4), shards=1,
+                    options=RunnerOptions(
+                        pipeline=False, chunk_size=2, max_attempts=2,
+                        backoff_s=0.01, checkpoint_dir=str(tmp_path)))
+
+    calls = []
+
+    def counting(arrays, cfg, statics, shards, donate):
+        calls.append(1)
+        raise AssertionError("resumed run should not recompute anything")
+
+    monkeypatch.setattr(runner_mod, "_run_arrays", counting)
+    res = sweep.run_sweep(_spec(4), shards=1,
+                          options=RunnerOptions(
+                              pipeline=False, chunk_size=2, max_attempts=2,
+                              backoff_s=0.01, checkpoint_dir=str(tmp_path)))
+    assert not calls
+    assert res.meta["resumed_scenarios"] == 2
+    assert res.meta["quarantined_chunks"] == [[0, 1]]
+    cols = res.scalars()
+    seeds = np.array([p.coord_dict["seed"] for p in res.points])
+    assert np.isnan(cols["makespan"][seeds >= 2]).all()
+    assert np.isfinite(cols["makespan"][seeds < 2]).all()
+
+
+def test_quarantine_without_checkpoint_dir(monkeypatch):
+    """Quarantine is not a WorkQueue-only feature: an un-checkpointed
+    sweep with a poisoned chunk still drains, NaN rows and meta intact
+    (pipeline path — the writer thread does the quarantining there)."""
+    poison, calls = _poison(target_seed=3)
+    monkeypatch.setattr(runner_mod, "_run_arrays", poison)
+    orig_fin = runner_mod._finalize_arrays
+    state = {"n": 0}
+
+    def flaky_finalize(dev, n_real, cfg):
+        # writer jobs run in submission order: call 1 is chunk 0's first
+        # attempt (healthy), call 2 is chunk 1's — fail that one so the
+        # retry falls through to the poisoned `_run_arrays`
+        state["n"] += 1
+        if state["n"] == 2:
+            raise RuntimeError("poisoned input")
+        return orig_fin(dev, n_real, cfg)
+
+    monkeypatch.setattr(runner_mod, "_finalize_arrays", flaky_finalize)
+    res = sweep.run_sweep(_spec(4), shards=1,
+                          options=RunnerOptions(
+                              pipeline=True, chunk_size=2, max_attempts=2,
+                              backoff_s=0.01))
+    # chunk 0 recovers on the re-dispatch attempt; chunk 1 (seed 3) fails
+    # every attempt and is NaN-filled in-memory
+    assert res.meta["quarantined_chunks"] == [[0, 1]]
+    cols = res.scalars()
+    seeds = np.array([p.coord_dict["seed"] for p in res.points])
+    assert np.isfinite(cols["makespan"][seeds < 2]).all()
+    assert np.isnan(cols["makespan"][seeds >= 2]).all()
+
+
+def test_fully_poisoned_group_raises(monkeypatch):
+    """A group with NO healthy chunk has no structure to NaN-fill from —
+    that is a fully-poisoned sweep, and it must fail loudly."""
+
+    def always_fail(arrays, cfg, statics, shards, donate):
+        raise RuntimeError("dead on arrival")
+
+    monkeypatch.setattr(runner_mod, "_run_arrays", always_fail)
+    with pytest.raises(RuntimeError, match="quarantined"):
+        sweep.run_sweep(_spec(2), shards=1,
+                        options=RunnerOptions(pipeline=False, chunk_size=2,
+                                              max_attempts=1,
+                                              backoff_s=0.01))

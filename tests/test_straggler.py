@@ -1,0 +1,140 @@
+"""Straggler detection (ISSUE 8 satellite): the reactive median-EMA
+detector, the predictive time-to-deplete flag, and flag-for-flag
+agreement between the Python `StragglerMonitor` and the vectorized
+`predictive_blacklist` the batched engine traces per tick."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.token_bucket import TokenBucket
+from repro.sched.straggler import (StragglerMonitor, predictive_blacklist,
+                                   time_to_deplete_vec)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+# ---------------------------------------------------------------------------
+# reactive: median-EMA step timings
+# ---------------------------------------------------------------------------
+
+def test_reactive_flags_only_slow_hosts():
+    mon = StragglerMonitor(4, slow_factor=1.5)
+    for _ in range(5):
+        for h in range(3):
+            mon.record_step(h, 1.0)
+        mon.record_step(3, 2.0)        # 2x the median: a straggler
+    assert mon.reactive_stragglers() == [3]
+    assert mon.flagged() == [3]
+
+
+def test_reactive_first_sample_replaces_then_ema():
+    mon = StragglerMonitor(1)
+    mon.record_step(0, 10.0)
+    assert mon.timings[0].ema == 10.0          # n=0: seed, not blend
+    mon.record_step(0, 0.0)
+    assert mon.timings[0].ema == pytest.approx(0.7 * 10.0)
+
+
+def test_reactive_ignores_silent_hosts():
+    """Hosts with no recorded steps join neither the median nor the
+    flag list; an all-silent monitor flags nothing."""
+    mon = StragglerMonitor(3, slow_factor=1.5)
+    assert mon.reactive_stragglers() == []
+    mon.record_step(0, 1.0)
+    mon.record_step(1, 10.0)
+    med = sorted(t.ema for t in mon.timings.values() if t.n > 0)
+    assert len(med) == 2
+    assert 2 not in mon.reactive_stragglers()
+
+
+# ---------------------------------------------------------------------------
+# predictive: credit-forecast time-to-deplete
+# ---------------------------------------------------------------------------
+
+def _bucket(balance, baseline=0.6, burst=2.0, unlimited=False):
+    return TokenBucket(baseline=baseline, burst=burst, capacity=3000.0,
+                       balance=balance, unlimited=unlimited)
+
+
+def test_predictive_flags_soon_to_deplete():
+    mon = StragglerMonitor(3, horizon_s=120.0)
+    buckets = {
+        0: _bucket(100.0),     # t_dep = 100 / (2.0 - 0.6) ~= 71 s  < 120
+        1: _bucket(1000.0),    # t_dep ~= 714 s                     > 120
+        2: _bucket(0.0, unlimited=True),    # never throttles
+    }
+    demand = {h: 2.0 for h in buckets}
+    assert mon.predictive_stragglers(buckets, demand) == [0]
+    # below-baseline demand never drains regardless of balance
+    assert mon.predictive_stragglers(buckets, {h: 0.5 for h in buckets}) \
+        == []
+
+
+def test_time_to_deplete_vec_matches_python():
+    """The vectorized form IS `TokenBucket.time_to_deplete`, elementwise
+    (inf where not draining or unlimited)."""
+    rng = np.random.default_rng(0)
+    n = 64
+    balance = rng.uniform(0.0, 500.0, n)
+    demand = rng.uniform(0.0, 3.0, n)
+    baseline = rng.uniform(0.3, 1.0, n)
+    burst = baseline + rng.uniform(0.0, 2.0, n)
+    unlimited = rng.random(n) < 0.2
+    vec = np.asarray(time_to_deplete_vec(balance, demand, baseline, burst,
+                                         unlimited.astype(np.float64)))
+    for i in range(n):
+        b = TokenBucket(baseline=baseline[i], burst=burst[i],
+                        capacity=1e9, balance=balance[i],
+                        unlimited=bool(unlimited[i]))
+        assert vec[i] == b.time_to_deplete(demand[i]), i
+
+
+def test_vectorized_blacklist_agrees_with_monitor():
+    """ISSUE 8 acceptance: `predictive_blacklist` (traced in the engine)
+    and `StragglerMonitor.predictive_stragglers` (eager Python) must
+    agree flag-for-flag on identical bucket states."""
+    rng = np.random.default_rng(7)
+    n, horizon = 48, 120.0
+    balance = rng.uniform(0.0, 300.0, n)
+    demand = rng.uniform(0.0, 3.0, n)
+    baseline = rng.uniform(0.3, 1.0, n)
+    burst = baseline + rng.uniform(0.0, 2.0, n)
+    unlimited = rng.random(n) < 0.15
+
+    mask = np.asarray(predictive_blacklist(
+        balance, demand, baseline, burst, unlimited.astype(np.float64),
+        horizon))
+    mon = StragglerMonitor(n, horizon_s=horizon)
+    buckets = {i: TokenBucket(baseline=baseline[i], burst=burst[i],
+                              capacity=1e9, balance=balance[i],
+                              unlimited=bool(unlimited[i]))
+               for i in range(n)}
+    flags = mon.predictive_stragglers(buckets,
+                                      {i: demand[i] for i in range(n)})
+    assert sorted(np.nonzero(mask)[0].tolist()) == flags
+    assert flags, "degenerate draw: no straggler-to-be in the fixture"
+    assert len(flags) < n, "degenerate draw: everyone flagged"
+
+
+def test_blacklist_horizon_zero_flags_nothing():
+    mask = predictive_blacklist(np.zeros(4), np.full(4, 3.0),
+                                np.full(4, 0.6), np.full(4, 2.0),
+                                np.zeros(4), 0.0)
+    assert not np.asarray(mask).any()
+
+
+def test_flagged_merges_reactive_and_predictive():
+    mon = StragglerMonitor(3, slow_factor=1.5, horizon_s=120.0)
+    for _ in range(4):
+        mon.record_step(0, 1.0)
+        mon.record_step(1, 1.0)
+        mon.record_step(2, 5.0)              # reactive straggler
+    buckets = {0: _bucket(10.0), 1: _bucket(1000.0), 2: _bucket(1000.0)}
+    demand = {h: 2.0 for h in buckets}       # node 0: predicted depletion
+    assert mon.flagged(buckets, demand) == [0, 2]
