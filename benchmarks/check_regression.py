@@ -1,0 +1,143 @@
+"""Throughput regression gate over ``BENCH_vecsim.json``.
+
+Compares a candidate benchmark document against the committed baseline
+and fails when any *gated* per-mode throughput metric drops by more than
+the threshold (default 15%). Gated keys are the tracked engine numbers —
+one per execution path:
+
+    fast / full : vec_ticks_nodes_scen_per_s        (vmap batch path)
+                  sharded.ticks_nodes_scen_per_s    (shard_map mesh path)
+    traffic     : traffic_ticks_nodes_scen_per_s    (open-loop ring path)
+
+Everything else in the document (SLO tails, churn ratios, phase
+breakdowns) is informational: those have their own acceptance asserts in
+the benchmarks that produce them, and gating them on wall-clock-noise
+thresholds would only flake. A section missing from either document is
+skipped — a fast CI run never gates the full-mode numbers and vice
+versa.
+
+Use standalone::
+
+    python -m benchmarks.check_regression BENCH_vecsim.json new.json
+
+or let the driver do it: ``python -m benchmarks.run --fast --check``
+snapshots the committed baseline *before* overwriting it and compares
+the fresh numbers against the snapshot.
+
+Faster-is-better is assumed for every gated key; improvements never
+fail. Exit status: 0 when no gated metric regressed, 1 otherwise
+(also 1 for unreadable inputs).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+THRESHOLD = 0.15
+
+# section -> dotted key paths into that section (gated, higher-is-better)
+GATED: Dict[str, Tuple[str, ...]] = {
+    "fast": ("vec_ticks_nodes_scen_per_s",
+             "sharded.ticks_nodes_scen_per_s"),
+    "full": ("vec_ticks_nodes_scen_per_s",
+             "sharded.ticks_nodes_scen_per_s"),
+    "traffic": ("traffic_ticks_nodes_scen_per_s",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    section: str
+    key: str
+    baseline: float
+    candidate: float
+
+    @property
+    def drop(self) -> float:
+        return (self.baseline - self.candidate) / self.baseline
+
+    def __str__(self) -> str:
+        return (f"{self.section}/{self.key}: {self.candidate:,.0f} "
+                f"vs baseline {self.baseline:,.0f} "
+                f"({self.drop:+.1%} drop)")
+
+
+def _lookup(section: dict, dotted: str) -> Optional[float]:
+    cur = section
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    try:
+        v = float(cur)
+    except (TypeError, ValueError):
+        return None
+    return v
+
+
+def compare(baseline: dict, candidate: dict,
+            threshold: float = THRESHOLD) -> List[Regression]:
+    """Gated metrics that regressed past ``threshold``, in section order.
+
+    A key absent (or non-numeric, or non-positive) on either side is
+    skipped: a first run against an empty baseline, or a baseline written
+    before a section existed, must not fail the gate.
+    """
+    regs: List[Regression] = []
+    for section, keys in GATED.items():
+        old_sec = baseline.get(section)
+        new_sec = candidate.get(section)
+        if not isinstance(old_sec, dict) or not isinstance(new_sec, dict):
+            continue
+        for key in keys:
+            old = _lookup(old_sec, key)
+            new = _lookup(new_sec, key)
+            if old is None or new is None or old <= 0.0:
+                continue
+            if (old - new) / old > threshold:
+                regs.append(Regression(section, key, old, new))
+    return regs
+
+
+def check_docs(baseline: dict, candidate: dict,
+               threshold: float = THRESHOLD,
+               out=None) -> bool:
+    """Print a verdict for each regression; True when the gate passes."""
+    out = sys.stderr if out is None else out    # late-bound: respect redirects
+    regs = compare(baseline, candidate, threshold)
+    for r in regs:
+        print(f"PERF REGRESSION {r}", file=out)
+    if regs:
+        print(f"{len(regs)} gated metric(s) regressed more than "
+              f"{threshold:.0%}", file=out)
+    return not regs
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_regression",
+        description="Fail when a gated BENCH_vecsim.json throughput "
+                    "metric drops more than --threshold vs the baseline.")
+    p.add_argument("baseline", help="committed BENCH_vecsim.json")
+    p.add_argument("candidate", help="freshly measured BENCH_vecsim.json")
+    p.add_argument("--threshold", type=float, default=THRESHOLD,
+                   help="max tolerated fractional drop (default 0.15)")
+    args = p.parse_args(argv)
+    try:
+        baseline = json.loads(pathlib.Path(args.baseline).read_text())
+        candidate = json.loads(pathlib.Path(args.candidate).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    if check_docs(baseline, candidate, args.threshold):
+        print("regression gate: PASS", file=sys.stderr)
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,14 +26,49 @@ identical fault streams (wasted work, goodput, re-executions).
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import pathlib
+import platform as _platform
+import subprocess
 import sys
 import traceback
 
 _FORCE_DEVICES = "--xla_force_host_platform_device_count=2"
 _NO_THUNKS = "--xla_cpu_use_thunk_runtime=false"
+
+
+def _provenance() -> dict:
+    """Where these numbers came from: git SHA (+dirty flag), UTC
+    timestamp, jax/jaxlib versions, host platform. Rides at the top
+    level of BENCH_vecsim.json so a perf delta PR-over-PR can always be
+    tied back to the exact tree and toolchain that produced each side."""
+    here = pathlib.Path(__file__).resolve().parent
+    sha, dirty = None, None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=here, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=here,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        pass                      # not a checkout / no git: sha stays None
+    import jax
+    import jaxlib
+
+    return {
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "python": _platform.python_version(),
+        "platform": _platform.platform(),
+    }
 
 
 def _tune_xla_flags() -> None:
@@ -95,8 +130,23 @@ def main(argv=None) -> None:
                         help="reduced-scale smoke run (batched paths only)")
     parser.add_argument("--out", default="BENCH_vecsim.json",
                         help="where to write the vecsim throughput JSON")
+    parser.add_argument("--check", action="store_true",
+                        help="fail if a gated throughput metric regresses "
+                             ">15%% vs the committed --out baseline "
+                             "(benchmarks/check_regression.py)")
     args = parser.parse_args(argv)
     _tune_xla_flags()
+
+    # snapshot the committed baseline BEFORE this run overwrites it —
+    # the regression gate compares fresh numbers against this snapshot
+    out_path = pathlib.Path(args.out)
+    baseline = None
+    if args.check and out_path.exists():
+        try:
+            baseline = json.loads(out_path.read_text())
+        except json.JSONDecodeError:
+            print(f"--check: unreadable baseline {args.out}; "
+                  "gate skipped", file=sys.stderr)
 
     from benchmarks import (
         ablation_joint,
@@ -150,7 +200,6 @@ def main(argv=None) -> None:
     # vecsim throughput JSON: the tracked perf metric, one section per mode,
     # plus a "traffic" section for the open-loop ring-buffer engine
     mode = "fast" if args.fast else "full"
-    out_path = pathlib.Path(args.out)
     doc = None
     try:
         stats = vecsim_bench.run(fast=args.fast)
@@ -212,8 +261,18 @@ def main(argv=None) -> None:
         failures.append(("churn_bench", e))
         traceback.print_exc()
     if doc is not None:
+        doc["provenance"] = _provenance()
         out_path.write_text(json.dumps(doc, indent=2) + "\n")
         print(f"wrote {args.out} [{mode}]", file=sys.stderr)
+
+    if args.check and baseline is not None and doc is not None:
+        from benchmarks import check_regression
+
+        if not check_regression.check_docs(baseline, doc):
+            failures.append(("regression_gate", AssertionError(
+                "throughput regressed vs committed baseline")))
+        else:
+            print("regression gate: PASS", file=sys.stderr)
 
     if failures:
         print(f"FAILED benchmarks: {[n for n, _ in failures]}", file=sys.stderr)

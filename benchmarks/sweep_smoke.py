@@ -27,6 +27,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro import sweep as sweeplib
 from repro.core import vecsim
+from repro.obs import registry
 from repro.core.annotations import Annotation, Task
 from repro.core.cluster import make_cluster
 from repro.core.simulator import Job
@@ -77,6 +78,12 @@ def run(fast: bool = False) -> dict:
     emit("sweep/smoke/grid_wall_s", wall * 1e6, f"{wall:.2f}")
     emit("sweep/smoke/grid_all_done", 0.0, "PASS" if ok else "FAIL")
     assert ok, "smoke grid did not finish"
+    # every engine output (including the streamed timelines) must be a
+    # declared metric — an undeclared key is a registry omission, caught
+    # here before it can reach a persisted artifact
+    for g in res.groups:
+        registry.validate_outputs(g.outputs)
+    emit("sweep/smoke/registry_valid", 0.0, "PASS")
     assert res.meta["n_groups"] == 4, res.meta
     # the stock groups never read telemetry, but they are still distinct
     # static configs — the spec must keep them apart
@@ -160,6 +167,8 @@ def run(fast: bool = False) -> dict:
     emit("sweep/smoke/traffic_points", 0.0, str(res_tr1.n_points))
     emit("sweep/smoke/traffic_completed", 0.0, f"{completed}/{arrived}")
     assert completed > 0, "traffic smoke completed no jobs"
+    for g in res_tr1.groups:        # traffic outputs (SLO hists) too
+        registry.validate_outputs(g.outputs)
     tr_parity = None
     if n_dev > 1:
         res_trd = sweeplib.run_sweep(tr_groups, shards=n_dev)

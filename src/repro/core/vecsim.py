@@ -111,6 +111,12 @@ class VecSimConfig:
     # two-minute warning). 0 disables either term.
     blacklist_horizon_s: float = 0.0
     preempt_notice_s: float = 0.0
+    # decision-trace event ring (repro.obs.ring) carried through the scan:
+    # ring capacity in events (grown to one per-tick candidate block when
+    # smaller). 0 disables tracing entirely — the scan carries ZERO trace
+    # state and compiles to the identical program (the same contract as
+    # faults/traffic; asserted by tests/test_obs.py).
+    trace_slots: int = 0
 
 
 def sample_tick_indices(n_ticks: int, dt: float,
@@ -368,6 +374,18 @@ def _node_orders(key_vals: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return jnp.sum(jnp.where(m, ids[None, :], 0), axis=1).astype(jnp.int32)
 
     return invert(rank_desc), invert(rank_asc)
+
+
+def _rank_desc(key_vals: jnp.ndarray) -> jnp.ndarray:
+    """Per-node position in the descending credit visit order (the
+    uninverted first half of `_node_orders`): rank_desc[n] = rank of node
+    n in ``sorted(nodes, key=(-credit, nid))``. The decision trace records
+    it on placement events as "the credit rank that won the slot"."""
+    n = key_vals.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    ck, cj = key_vals[None, :], key_vals[:, None]
+    tie = (ck == cj) & (ids[None, :] < ids[:, None])
+    return jnp.sum((ck > cj) | tie, axis=1, dtype=jnp.int32)
 
 
 def _unpermute(order_ids: jnp.ndarray, vals_sorted: jnp.ndarray) -> jnp.ndarray:
@@ -696,6 +714,25 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
         state["retry"] = jnp.zeros(T, jnp.int32)
         state["work_lost"] = jnp.zeros((), dtype)
 
+    # ---- decision trace (repro.obs.ring): carried event ring ----------
+    # trace_slots == 0 adds NO carries and NO ops: the compiled program is
+    # identical to an untraced run (tests/test_obs.py asserts bitwise).
+    tracing = cfg.trace_slots > 0
+    if tracing:
+        if (cfg.resource != "cpu" or cfg.scheduler not in ("cash", "stock")
+                or cfg.shuffle != "none" or act_disk or act_net or p_netcls):
+            raise NotImplementedError(
+                "trace_slots > 0 mirrors the replay-oracle scope: cpu pool "
+                "only, cash|stock, shuffle='none', no disk/net work")
+        from repro.obs import ring as _obsring
+        # per-tick candidate block width: PLACE(T) + DEPLETE/REGEN(2N),
+        # plus PREEMPT/SHED(2T) under mortal faults and BLACKLIST(N) when
+        # blacklisting is on — scatter-index uniqueness needs one block
+        width = T + 2 * N + (2 * T if mortal else 0) \
+            + (N if use_black else 0)
+        state["ev_i"], state["ev_f"], state["ev_head"] = \
+            _obsring.ring_init(max(cfg.trace_slots, width))
+
     emit_tl = cfg.sample_period > 0.0
 
     def tick(st, inp):
@@ -780,6 +817,7 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             if act_net:
                 st["done_net"] = jnp.where(hit, 0.0, st["done_net"])
                 rem_net = sc["work_net"] - st["done_net"]
+            node_pre = st["node_of"]        # trace: node before the clear
             st["node_of"] = jnp.where(hit, -1, st["node_of"])
             started = st["node_of"] >= 0
             released = released | shed_now
@@ -830,6 +868,7 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             # (sched.straggler contract) and nodes inside the preemption
             # notice window
             black = jnp.zeros(N, bool)
+            tdep = jnp.full(N, jnp.inf, dtype)
             if cfg.blacklist_horizon_s > 0.0:
                 running0 = (st["node_of"] >= 0) & ~released
                 col0 = jnp.where(running0 & (rem_cpu > 0.0),
@@ -842,9 +881,13 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                     preferred_element_type=dtype)[0]
                 burst_eff = (sc["cpu_burst"] * scale_t if degrading
                              else sc["cpu_burst"])
-                black = _straggler.predictive_blacklist(
+                # predictive_blacklist IS `time_to_deplete < horizon`;
+                # computed in two steps so the trace's blacklist events
+                # can carry the predicted time-to-deplete itself
+                tdep = _straggler.time_to_deplete_vec(
                     est_cpu, dem_pre, sc["cpu_baseline"], burst_eff,
-                    sc["cpu_unlimited"], cfg.blacklist_horizon_s)
+                    sc["cpu_unlimited"])
+                black = tdep < cfg.blacklist_horizon_s
             if notice_t is not None:
                 black = black | notice_t
             # deadlock guard: when every free slot is blacklisted the
@@ -954,6 +997,19 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
                 assign = jnp.full(T, -1, jnp.int32)
 
         placed = assign >= 0
+        tr_place = None
+        if tracing:
+            if cfg.scheduler == "cash":
+                # fused path: recompute the kernel's internal Algorithm-2
+                # estimate via the SAME dispatch-layer function — bitwise-
+                # identical to what megatick ranked nodes by
+                est_tr = est_cpu if not fused else ops.megatick_estimate(
+                    st.get("tel_cpu"), st["cpu_bal"], sc["cpu_baseline"],
+                    sc["cpu_capacity"], now, tel_mode=tel_mode)
+                nsel = jnp.clip(assign, 0, N - 1)
+                tr_place = (_rank_desc(est_tr)[nsel], est_tr[nsel])
+            else:        # stock never consults credits: rank = node id
+                tr_place = (assign, jnp.zeros(T, dtype))
         node_of = jnp.where(placed, assign, st["node_of"])
         start = (jnp.where(placed, now, st["start"])
                  if cfg.emit_task_times else None)
@@ -1108,6 +1164,33 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             new_st["retry"] = retry
             new_st["work_lost"] = work_lost
 
+        # ---- 6b) decision trace: one masked ring scatter per tick --------
+        if tracing:
+            nmask_tr = ~sc["node_pad"]
+            # bucket crossings measured serve-input -> post-freeze balance
+            dep = (st["cpu_bal"] > 1e-9) & (cpu_bal <= 1e-9) & nmask_tr
+            reg = (st["cpu_bal"] <= 1e-9) & (cpu_bal > 1e-9) & nmask_tr
+            tidx = jnp.arange(T, dtype=jnp.int32)
+            blocks = []
+            if mortal:
+                blocks.append((hit, _obsring.EV_PREEMPT, tidx, node_pre,
+                               retry, lost))
+                blocks.append((shed_now, _obsring.EV_SHED, tidx, node_pre,
+                               retry, jnp.zeros(T, dtype)))
+            if use_black:
+                notice_i = (notice_t.astype(jnp.int32)
+                            if notice_t is not None
+                            else jnp.zeros(N, jnp.int32))
+                blocks.append((black & ok, _obsring.EV_BLACKLIST, ids,
+                               notice_i, -1, tdep))
+            blocks.append((placed, _obsring.EV_PLACE, tidx, assign,
+                           tr_place[0], tr_place[1]))
+            blocks.append((dep, _obsring.EV_DEPLETE, ids, -1, -1, cpu_bal))
+            blocks.append((reg, _obsring.EV_REGEN, ids, -1, -1, cpu_bal))
+            (new_st["ev_i"], new_st["ev_f"],
+             new_st["ev_head"]) = _obsring.record_blocks(
+                st["ev_i"], st["ev_f"], st["ev_head"], t, blocks)
+
         # ---- 7) streaming timeline ys (static switch: off -> zero cost) --
         ys = None
         if emit_tl:
@@ -1209,6 +1292,10 @@ def _simulate_one(cfg: VecSimConfig, smax: int, n_waves: int, n_jobs: int,
             last_rel = jnp.maximum(last_rel, 0.0)
         out["makespan"] = jnp.where(all_done, last_rel,
                                     cfg.n_ticks * dt)
+    if tracing:
+        out["trace_ev_i"] = st["ev_i"]
+        out["trace_ev_f"] = st["ev_f"]
+        out["trace_head"] = st["ev_head"]
     if emit_tl:
         # full per-tick series: `batched_engine` gathers the sample ticks
         # ONCE per batch (still inside the compiled/sharded program)
@@ -1372,6 +1459,21 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         state["n_shed"] = jnp.int32(0)
         state["work_lost"] = zero_s
 
+    # ---- decision trace (repro.obs.ring): see _simulate_one -----------
+    tracing = cfg.trace_slots > 0
+    if tracing:
+        if cfg.shuffle != "none":
+            raise NotImplementedError(
+                "trace_slots > 0 mirrors the replay-oracle scope: "
+                "shuffle='none' only")
+        from repro.obs import ring as _obsring
+        # SLO_OVER(C) + DROP(1) + PLACE(C) + DEPLETE/REGEN(2N), plus
+        # PREEMPT/SHED(2C) under mortal faults and BLACKLIST(N)
+        width = 2 * C + 1 + 2 * N + (2 * C if mortal else 0) \
+            + (N if use_black else 0)
+        state["ev_i"], state["ev_f"], state["ev_head"] = \
+            _obsring.ring_init(max(cfg.trace_slots, width))
+
     emit_tl = cfg.sample_period > 0.0
     # stacked float template columns — ONE (2, C) gather per tick at
     # admission instead of two (C,) gathers
@@ -1388,6 +1490,10 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         occupied = st["tb_cls"] != CLS_PAD
         fin_now = occupied & (st["tb_node"] >= 0) & (st["tb_rem"] <= 1e-9)
         nfin = jnp.sum(fin_now, dtype=jnp.int32)
+        if tracing:
+            # SLO-bucket overflow: released latency beyond the top edge
+            lat_all = now - st["tb_submit"]
+            slo_over = fin_now & (lat_all >= edges[-1])
 
         hadd, sums, maxs = _slo_hist_update(edges, nfin, fin_now, now,
                                             st["tb_start"], st["tb_submit"])
@@ -1436,6 +1542,13 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             n_preempt = st["n_preempt"] + n_hit
             n_reexec = st["n_reexec"] + (n_hit - n_shed_t)
             n_shed_c = st["n_shed"] + n_shed_t
+            if tracing:
+                # captured BEFORE the clears below — and retry before the
+                # admission-time reset, which can recycle a shed slot
+                # within this same tick
+                node_pre = tb_node
+                retry_tr = tb_retry
+                lost_tr = tb_work - tb_rem0
             tb_node = jnp.where(hit, -1, tb_node)
             tb_rem0 = jnp.where(requeue, tb_work, tb_rem0)
             run_cnt = jnp.where(alive_t, run_cnt, 0)
@@ -1532,6 +1645,7 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             # currently-running demand -> time-to-deplete, plus the
             # preemption notice window; void when nothing else is free
             black = jnp.zeros(N, bool)
+            tdep = jnp.full(N, jnp.inf, dtype)
             if cfg.blacklist_horizon_s > 0.0:
                 running0 = tb_node >= 0
                 col0 = jnp.where(running0 & (tb_rem > 0.0), tb_dem, 0.0)
@@ -1543,9 +1657,12 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
                     preferred_element_type=dtype)[0]
                 burst_eff = (sc["cpu_burst"] * scale_t if degrading
                              else sc["cpu_burst"])
-                black = _straggler.predictive_blacklist(
+                # predictive_blacklist IS tdep < horizon — keep tdep so
+                # the trace can record the predicted time-to-deplete
+                tdep = _straggler.time_to_deplete_vec(
                     est_cpu, dem_pre, sc["cpu_baseline"], burst_eff,
-                    sc["cpu_unlimited"], cfg.blacklist_horizon_s)
+                    sc["cpu_unlimited"])
+                black = tdep < cfg.blacklist_horizon_s
             if notice_t is not None:
                 black = black | notice_t
             ok = jnp.any((~black) & (free > 0))
@@ -1616,6 +1733,18 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
                 assign = jnp.full(C, -1, jnp.int32)
 
         placed = assign >= 0
+        tr_place = None
+        if tracing:
+            if cfg.scheduler == "cash":
+                # fused path: recompute the kernel's internal Algorithm-2
+                # estimate (bitwise-identical standalone form)
+                est_tr = est_cpu if not fused else ops.megatick_estimate(
+                    st.get("tel_cpu"), st["cpu_bal"], sc["cpu_baseline"],
+                    sc["cpu_capacity"], now, tel_mode=tel_mode)
+                nsel = jnp.clip(assign, 0, N - 1)
+                tr_place = (_rank_desc(est_tr)[nsel], est_tr[nsel])
+            else:        # stock never consults credits: rank = node id
+                tr_place = (assign, jnp.zeros(C, dtype))
         tb_node = jnp.where(placed, assign, tb_node)
         tb_start = jnp.where(placed, now, tb_start)
         running = tb_node >= 0
@@ -1701,6 +1830,36 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
             new_st["n_shed"] = n_shed_c
             new_st["work_lost"] = work_lost
 
+        # ---- 6b) decision trace: one masked scatter per tick -------------
+        if tracing:
+            nmask_tr = ~sc["node_pad"]
+            dep = (st["cpu_bal"] > 1e-9) & (cpu_bal <= 1e-9) & nmask_tr
+            reg = (st["cpu_bal"] <= 1e-9) & (cpu_bal > 1e-9) & nmask_tr
+            cidx = jnp.arange(C, dtype=jnp.int32)
+            blocks = [(slo_over, _obsring.EV_SLO_OVER, cidx, -1, -1,
+                       lat_all)]
+            if mortal:
+                blocks.append((hit, _obsring.EV_PREEMPT, cidx, node_pre,
+                               retry_tr, lost_tr))
+                blocks.append((shed_now, _obsring.EV_SHED, cidx, node_pre,
+                               retry_tr, jnp.zeros(C, dtype)))
+            dropped_tr = (k_t - n_new).astype(jnp.int32)
+            blocks.append(((dropped_tr > 0)[None], _obsring.EV_DROP, -1,
+                           dropped_tr, -1, 0.0))
+            if use_black:
+                notice_i = (notice_t.astype(jnp.int32)
+                            if notice_t is not None
+                            else jnp.zeros(N, jnp.int32))
+                blocks.append((black & ok, _obsring.EV_BLACKLIST, ids,
+                               notice_i, -1, tdep))
+            blocks.append((placed, _obsring.EV_PLACE, cidx, assign,
+                           tr_place[0], tr_place[1]))
+            blocks.append((dep, _obsring.EV_DEPLETE, ids, -1, -1, cpu_bal))
+            blocks.append((reg, _obsring.EV_REGEN, ids, -1, -1, cpu_bal))
+            (new_st["ev_i"], new_st["ev_f"],
+             new_st["ev_head"]) = _obsring.record_blocks(
+                st["ev_i"], st["ev_f"], st["ev_head"], t, blocks)
+
         # ---- 7) streaming timeline ys ------------------------------------
         ys = None
         if emit_tl:
@@ -1755,6 +1914,10 @@ def _simulate_traffic(cfg: VecSimConfig, smax: int, n_waves: int,
         "lat_max": st["lat_max"], "wait_max": st["wait_max"],
         "last_finish": st["last_rel"],
     }
+    if tracing:
+        out["trace_ev_i"] = st["ev_i"]
+        out["trace_ev_f"] = st["ev_f"]
+        out["trace_head"] = st["ev_head"]
     if faulty:
         out.update(_faults.event_totals(ev))
         if mortal:

@@ -40,7 +40,7 @@ Fault-step semantics mirrored here (the contract DESIGN.md documents):
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, FrozenSet, List, Optional
 
 import numpy as np
 
@@ -54,6 +54,7 @@ from repro.core.vecsim import (
     _NEVER,
 )
 from repro.faults import processes
+from repro.obs import ring as _ring
 from repro.traffic.oracle import _serve_bucket
 
 
@@ -65,17 +66,19 @@ def _eager_events(cfg: VecSimConfig, sc: Dict[str, np.ndarray]
 
 
 def _blacklist(est: np.ndarray, dem_pre: np.ndarray, baseline: np.ndarray,
-               burst: np.ndarray, unlimited: np.ndarray,
-               horizon_s: float) -> np.ndarray:
+               burst: np.ndarray, unlimited: np.ndarray, horizon_s: float,
+               n: int):
     """numpy mirror of `sched.straggler.predictive_blacklist` (same
-    elementwise float64 ops, same strict comparison)."""
+    elementwise float64 ops, same strict comparison). Returns
+    ``(mask, tdep)`` — the time-to-deplete vector is what the trace's
+    blacklist events carry (+inf when the horizon term is off)."""
     if horizon_s <= 0.0:
-        return np.zeros(est.shape, bool)
+        return np.zeros(n, bool), np.full(n, np.inf)
     rate = np.minimum(dem_pre, burst)
     drain = rate - baseline
     safe = np.where(drain > 0.0, drain, 1.0)
     tdep = np.where((drain <= 0.0) | (unlimited > 0.0), np.inf, est / safe)
-    return tdep < horizon_s
+    return tdep < horizon_s, tdep
 
 
 def _estimate(cfg: VecSimConfig, tel, bal, baseline, capacity, now):
@@ -115,13 +118,19 @@ def _fresh_tel(n: int) -> Dict[str, np.ndarray]:
 
 
 class FaultTrafficOracle:
-    """Interpret one traffic scenario under a fault-enabled config;
-    `run()` returns the engine's output keys (scalars, histograms, fault
-    counters) as plain numpy values."""
+    """Interpret one traffic scenario under a fault-enabled (or, for the
+    decision-trace replay, fault-free) config; `run()` returns the
+    engine's output keys (scalars, histograms, fault counters) as plain
+    numpy values. With ``trace`` (an `repro.obs.ring.EventCollector`)
+    the oracle also emits the engine's decision-trace events at the
+    mirrored tick points, and ``snap_ticks`` records pre-placement
+    snapshots (est/free/blacklist/queues) into ``self.snaps`` for the
+    explainer."""
 
-    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig):
+    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig,
+                 trace=None, snap_ticks: FrozenSet[int] = frozenset()):
         from repro.traffic import arrivals, slo
-        if cfg.faults not in processes.FAULT_MODES:
+        if cfg.faults != "none" and cfg.faults not in processes.FAULT_MODES:
             raise ValueError(f"not a fault config: {cfg.faults!r}")
         if cfg.shuffle != "none":
             raise NotImplementedError("oracle mirrors shuffle='none' only")
@@ -136,8 +145,12 @@ class FaultTrafficOracle:
         self.edges = slo.edges_for(cfg)
         self.counts = np.asarray(arrivals.arrival_counts(cfg, self.sc,
                                                          np.float64))
-        self.ev = _eager_events(cfg, self.sc)
+        self.ev = (_eager_events(cfg, self.sc)
+                   if cfg.faults != "none" else {})
         self._slo = slo
+        self.trace = trace
+        self.snap_ticks = frozenset(snap_ticks)
+        self.snaps: Dict[int, Dict[str, np.ndarray]] = {}
 
     def run(self) -> Dict[str, np.ndarray]:
         cfg, sc, N, C = self.cfg, self.sc, self.N, self.C
@@ -151,6 +164,9 @@ class FaultTrafficOracle:
                      and (cfg.blacklist_horizon_s > 0.0
                           or (mortal and cfg.preempt_notice_s > 0.0)))
         ev = self.ev
+        tr = self.trace
+        pad = (sc["node_pad"].astype(bool) if "node_pad" in sc
+               else np.zeros(N, bool))
 
         tb_rem = np.zeros(C)
         tb_work = np.zeros(C)
@@ -200,6 +216,8 @@ class FaultTrafficOracle:
             for i in fin_now:
                 lat = now - tb_submit[i]
                 wait = tb_start[i] - tb_submit[i]
+                if tr is not None and lat >= self.edges[-1]:
+                    tr.emit(t, _ring.EV_SLO_OVER, int(i), -1, -1, lat)
                 lat_hist[slo.bucket_index(lat, self.edges)] += 1
                 wait_hist[slo.bucket_index(wait, self.edges)] += 1
                 lat_sum += lat
@@ -227,19 +245,29 @@ class FaultTrafficOracle:
                 resident = (tb_cls != CLS_PAD) & (tb_node >= 0)
                 hit = np.flatnonzero(
                     resident & died[np.clip(tb_node, 0, N - 1)])
+                shed_buf = []          # SHED events trail the PREEMPT block
                 for i in hit:                     # slot-index order
+                    node_pre = int(tb_node[i])
                     tb_retry[i] += 1
-                    work_lost += tb_work[i] - tb_rem[i]
+                    lost_i = tb_work[i] - tb_rem[i]
+                    work_lost += lost_i
                     n_preempt += 1
                     tb_node[i] = -1
+                    if tr is not None:
+                        tr.emit(t, _ring.EV_PREEMPT, int(i), node_pre,
+                                int(tb_retry[i]), lost_i)
                     if tb_retry[i] > cfg.max_retries:
                         n_shed += 1               # shed: leaves the table
                         tb_cls[i] = CLS_PAD
+                        shed_buf.append((int(i), node_pre, int(tb_retry[i])))
                     else:
                         n_reexec += 1
                         tb_rem[i] = tb_work[i]    # restart from scratch
                         tb_seq[i] = seq_ctr       # tail of its queue,
                         seq_ctr += 1              # ahead of new arrivals
+                if tr is not None:
+                    for i, npre, rt in shed_buf:
+                        tr.emit(t, _ring.EV_SHED, i, npre, rt, 0.0)
                 run_cnt = np.where(alive, run_cnt, 0)
 
             # 2) arrivals into free slots, lowest index first, FIFO order
@@ -264,6 +292,9 @@ class FaultTrafficOracle:
                 tb_start[i] = np.inf
             n_seen += k
             n_adm += len(admitted)
+            dropped = k - len(admitted)
+            if tr is not None and dropped > 0:
+                tr.emit(t, _ring.EV_DROP, -1, dropped, -1, 0.0)
 
             # 3) telemetry estimate (pre-observe, Algorithm 2)
             est = None
@@ -274,21 +305,33 @@ class FaultTrafficOracle:
             free = slots - run_cnt
             if mortal:
                 free = np.where(alive, free, 0)
+            black = np.zeros(N, bool)
+            tdep = np.full(N, np.inf)
+            notice = np.zeros(N, bool)
             if use_black:
                 running0 = tb_node >= 0
                 dem_pre = np.zeros(N)
                 for i in np.flatnonzero(running0 & (tb_rem > 0.0)):
                     dem_pre[tb_node[i]] += tb_dem[i]
-                black = _blacklist(est, dem_pre, baseline, burst_t,
-                                   unlimited, cfg.blacklist_horizon_s)
+                black, tdep = _blacklist(est, dem_pre, baseline, burst_t,
+                                         unlimited, cfg.blacklist_horizon_s,
+                                         N)
                 if mortal and "notice" in ev:
-                    black = black | ev["notice"][t]
-                if np.any(~black & (free > 0)):
+                    notice = ev["notice"][t].astype(bool)
+                    black = black | notice
+                ok = bool(np.any(~black & (free > 0)))
+                if ok:
                     free = np.where(black, 0, free)
+                if tr is not None and ok:
+                    for n in np.flatnonzero(black):
+                        tr.emit(t, _ring.EV_BLACKLIST, int(n),
+                                int(notice[n]), -1, tdep[n])
 
             def fifo(mask: np.ndarray) -> List[int]:
                 q = np.flatnonzero(mask)
                 return list(q[np.argsort(tb_seq[q], kind="stable")])
+
+            placed_map: Dict[int, int] = {}
 
             def pack(order, queue):
                 for n in order:
@@ -298,15 +341,35 @@ class FaultTrafficOracle:
                         tb_start[i] = now
                         free[n] -= 1
                         run_cnt[n] += 1
+                        placed_map[int(i)] = int(n)
 
             ready = (tb_cls != CLS_PAD) & (tb_node < 0)
             if cfg.scheduler == "stock":
-                pack(range(N), fifo(ready))
+                order = list(range(N))
+                queues = [fifo(ready)]
             else:
-                desc = sorted(range(N), key=lambda n: (-est[n], n))
-                pack(desc, fifo(ready & ((tb_cls == CLS_BURST_CPU)
-                                         | (tb_cls == CLS_BURST_DISK))))
-                pack(range(N), fifo(ready & (tb_cls == CLS_NONE)))
+                order = sorted(range(N), key=lambda n: (-est[n], n))
+                queues = [fifo(ready & ((tb_cls == CLS_BURST_CPU)
+                                        | (tb_cls == CLS_BURST_DISK))),
+                          fifo(ready & (tb_cls == CLS_NONE))]
+            if t in self.snap_ticks:
+                self.snaps[t] = {
+                    "est": (est.copy() if est is not None else None),
+                    "free": free.copy(), "black": black.copy(),
+                    "tdep": tdep.copy(), "order": list(order),
+                    "queues": [list(q) for q in queues],
+                }
+            pack(order, queues[0])
+            if cfg.scheduler != "stock":
+                pack(range(N), queues[1])
+            if tr is not None:
+                rank_of = {n: r for r, n in enumerate(order)}
+                for i in sorted(placed_map):
+                    n = placed_map[i]
+                    if cfg.scheduler == "cash":
+                        tr.emit(t, _ring.EV_PLACE, i, n, rank_of[n], est[n])
+                    else:  # stock never consults credits: rank = node id
+                        tr.emit(t, _ring.EV_PLACE, i, n, n, 0.0)
 
             # 5) serve + pro-rata distribute
             running = tb_node >= 0
@@ -326,6 +389,13 @@ class FaultTrafficOracle:
             if mortal:
                 # down nodes' buckets freeze: no spend, no regeneration
                 bal = np.where(alive, bal, bal_prev)
+            if tr is not None:
+                dep = (bal_prev > 1e-9) & (bal <= 1e-9) & ~pad
+                reg = (bal_prev <= 1e-9) & (bal > 1e-9) & ~pad
+                for n in np.flatnonzero(dep):
+                    tr.emit(t, _ring.EV_DEPLETE, int(n), -1, -1, bal[n])
+                for n in np.flatnonzero(reg):
+                    tr.emit(t, _ring.EV_REGEN, int(n), -1, -1, bal[n])
             for i in np.flatnonzero(live):
                 n = tb_node[i]
                 share = (w_node[n] * tb_dem[i] / dem_node[n]
@@ -364,16 +434,20 @@ class FaultTrafficOracle:
             "lat_sum": lat_sum, "wait_sum": wait_sum,
             "lat_max": lat_max, "wait_max": wait_max,
             "last_finish": last_rel,
-            "n_preempted": n_preempt, "n_reexec": n_reexec,
-            "n_shed": n_shed, "work_lost": work_lost,
-            "goodput": work_done - work_lost,
         }
-        if mortal:
-            out["n_kill_events"] = int(np.sum(ev["died"]))
-            out["node_down_ticks"] = int(np.sum(~ev["alive"]))
-        else:
-            out["n_kill_events"] = 0
-            out["node_down_ticks"] = 0
+        if cfg.faults != "none":
+            # fault counters exist only on the fault-enabled engine path
+            out["n_preempted"] = n_preempt
+            out["n_reexec"] = n_reexec
+            out["n_shed"] = n_shed
+            out["work_lost"] = work_lost
+            out["goodput"] = work_done - work_lost
+            if mortal:
+                out["n_kill_events"] = int(np.sum(ev["died"]))
+                out["node_down_ticks"] = int(np.sum(~ev["alive"]))
+            else:
+                out["n_kill_events"] = 0
+                out["node_down_ticks"] = 0
         for pfx in ("lat", "wait"):
             for q, tag in slo.DEFAULT_QS:
                 out[f"{pfx}_{tag}"] = float(slo.hist_percentile(
@@ -383,13 +457,15 @@ class FaultTrafficOracle:
 
 class ClosedFaultOracle:
     """Interpret one closed (fixed task table) scenario under a
-    fault-enabled config, mirroring `vecsim._simulate_one` on the cpu
-    pool: cash|stock, ``shuffle="none"``, no disk/net work, no
-    round-robin network class. Waves and dependency groups ARE
-    mirrored."""
+    fault-enabled (or, for the decision-trace replay, fault-free) config,
+    mirroring `vecsim._simulate_one` on the cpu pool: cash|stock,
+    ``shuffle="none"``, no disk/net work, no round-robin network class.
+    Waves and dependency groups ARE mirrored. ``trace``/``snap_ticks``
+    behave as in `FaultTrafficOracle`."""
 
-    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig):
-        if cfg.faults not in processes.FAULT_MODES:
+    def __init__(self, sc: Dict[str, np.ndarray], cfg: VecSimConfig,
+                 trace=None, snap_ticks: FrozenSet[int] = frozenset()):
+        if cfg.faults != "none" and cfg.faults not in processes.FAULT_MODES:
             raise ValueError(f"not a fault config: {cfg.faults!r}")
         if cfg.shuffle != "none":
             raise NotImplementedError("oracle mirrors shuffle='none' only")
@@ -404,7 +480,11 @@ class ClosedFaultOracle:
         self.cfg = cfg
         self.N = len(sc["slots"])
         self.T = len(sc["work_cpu"])
-        self.ev = _eager_events(cfg, sc)
+        self.ev = (_eager_events(cfg, sc)
+                   if cfg.faults != "none" else {})
+        self.trace = trace
+        self.snap_ticks = frozenset(snap_ticks)
+        self.snaps: Dict[int, Dict[str, np.ndarray]] = {}
 
     def run(self) -> Dict[str, np.ndarray]:
         cfg, sc, N, T = self.cfg, self.sc, self.N, self.T
@@ -416,6 +496,9 @@ class ClosedFaultOracle:
                      and (cfg.blacklist_horizon_s > 0.0
                           or (mortal and cfg.preempt_notice_s > 0.0)))
         ev = self.ev
+        tr = self.trace
+        pad = (sc["node_pad"].astype(bool) if "node_pad" in sc
+               else np.zeros(N, bool))
         n_waves = int(sc.get("n_waves", 1))
         G = sc["member"].shape[0]
 
@@ -474,6 +557,13 @@ class ClosedFaultOracle:
                 hit = resident & died[np.clip(node_of, 0, N - 1)]
                 retry = retry + hit.astype(np.int64)
                 shed_now = hit & (retry > cfg.max_retries)
+                if tr is not None:       # before done/node_of are cleared
+                    for i in np.flatnonzero(hit):
+                        tr.emit(t, _ring.EV_PREEMPT, int(i), int(node_of[i]),
+                                int(retry[i]), done[i])
+                    for i in np.flatnonzero(shed_now):
+                        tr.emit(t, _ring.EV_SHED, int(i), int(node_of[i]),
+                                int(retry[i]), 0.0)
                 work_lost += float(np.sum(np.where(hit, done, 0.0)))
                 done = np.where(hit, 0.0, done)
                 rem = work - done
@@ -506,17 +596,29 @@ class ClosedFaultOracle:
             free = slots - run_cnt
             if mortal:
                 free = np.where(alive, free, 0)
+            black = np.zeros(N, bool)
+            tdep = np.full(N, np.inf)
+            notice = np.zeros(N, bool)
             if use_black:
                 running0 = (node_of >= 0) & ~released
                 dem_pre = np.zeros(N)
                 for i in np.flatnonzero(running0 & (rem > 0.0)):
                     dem_pre[node_of[i]] += dem[i]
-                black = _blacklist(est, dem_pre, baseline, burst_t,
-                                   unlimited, cfg.blacklist_horizon_s)
+                black, tdep = _blacklist(est, dem_pre, baseline, burst_t,
+                                         unlimited, cfg.blacklist_horizon_s,
+                                         N)
                 if mortal and "notice" in ev:
-                    black = black | ev["notice"][t]
-                if np.any(~black & (free > 0)):
+                    notice = ev["notice"][t].astype(bool)
+                    black = black | notice
+                ok = bool(np.any(~black & (free > 0)))
+                if ok:
                     free = np.where(black, 0, free)
+                if tr is not None and ok:
+                    for n in np.flatnonzero(black):
+                        tr.emit(t, _ring.EV_BLACKLIST, int(n),
+                                int(notice[n]), -1, tdep[n])
+
+            placed_map: Dict[int, int] = {}
 
             def pack(order, queue):
                 for n in order:
@@ -525,14 +627,34 @@ class ClosedFaultOracle:
                         node_of[i] = n
                         free[n] -= 1
                         run_cnt[n] += 1
+                        placed_map[int(i)] = int(n)
 
             # phase queues in task-index order (the engine's cumsum rank)
             if cfg.scheduler == "stock":
-                pack(range(N), list(np.flatnonzero(ready)))
+                order = list(range(N))
+                queues = [list(np.flatnonzero(ready))]
             else:
-                desc = sorted(range(N), key=lambda n: (-est[n], n))
-                pack(desc, list(np.flatnonzero(ready & is_burst)))
-                pack(range(N), list(np.flatnonzero(ready & is_plain)))
+                order = sorted(range(N), key=lambda n: (-est[n], n))
+                queues = [list(np.flatnonzero(ready & is_burst)),
+                          list(np.flatnonzero(ready & is_plain))]
+            if t in self.snap_ticks:
+                self.snaps[t] = {
+                    "est": (est.copy() if est is not None else None),
+                    "free": free.copy(), "black": black.copy(),
+                    "tdep": tdep.copy(), "order": list(order),
+                    "queues": [list(q) for q in queues],
+                }
+            pack(order, queues[0])
+            if cfg.scheduler != "stock":
+                pack(range(N), queues[1])
+            if tr is not None:
+                rank_of = {n: r for r, n in enumerate(order)}
+                for i in sorted(placed_map):
+                    n = placed_map[i]
+                    if cfg.scheduler == "cash":
+                        tr.emit(t, _ring.EV_PLACE, i, n, rank_of[n], est[n])
+                    else:  # stock never consults credits: rank = node id
+                        tr.emit(t, _ring.EV_PLACE, i, n, n, 0.0)
 
             # 5) serve + pro-rata distribute
             running = (node_of >= 0) & ~released
@@ -551,6 +673,13 @@ class ClosedFaultOracle:
                 work_served += w
             if mortal:
                 bal = np.where(alive, bal, bal_prev)
+            if tr is not None:
+                dep = (bal_prev > 1e-9) & (bal <= 1e-9) & ~pad
+                reg = (bal_prev <= 1e-9) & (bal > 1e-9) & ~pad
+                for n in np.flatnonzero(dep):
+                    tr.emit(t, _ring.EV_DEPLETE, int(n), -1, -1, bal[n])
+                for n in np.flatnonzero(reg):
+                    tr.emit(t, _ring.EV_REGEN, int(n), -1, -1, bal[n])
             for i in np.flatnonzero(live):
                 n = node_of[i]
                 share = (w_node[n] * dem[i] / dem_node[n]
@@ -584,16 +713,19 @@ class ClosedFaultOracle:
             "total_cpu_work": float(np.sum(np.where(real, done, 0.0))),
             "cpu_work_served": work_served,
             "node_busy_seconds": busy_seconds,
-            "n_preempted": int(np.sum(retry_r)),
-            "n_reexec": int(np.sum(np.minimum(retry_r, cfg.max_retries))),
-            "n_shed": int(np.sum(shed)),
-            "work_lost": work_lost,
         }
-        out["goodput"] = out["total_cpu_work"]
-        if mortal:
-            out["n_kill_events"] = int(np.sum(ev["died"]))
-            out["node_down_ticks"] = int(np.sum(~ev["alive"]))
-        else:
-            out["n_kill_events"] = 0
-            out["node_down_ticks"] = 0
+        if cfg.faults != "none":
+            # fault counters exist only on the fault-enabled engine path
+            out["n_preempted"] = int(np.sum(retry_r))
+            out["n_reexec"] = int(np.sum(np.minimum(retry_r,
+                                                    cfg.max_retries)))
+            out["n_shed"] = int(np.sum(shed))
+            out["work_lost"] = work_lost
+            out["goodput"] = out["total_cpu_work"]
+            if mortal:
+                out["n_kill_events"] = int(np.sum(ev["died"]))
+                out["node_down_ticks"] = int(np.sum(~ev["alive"]))
+            else:
+                out["n_kill_events"] = 0
+                out["node_down_ticks"] = 0
         return out

@@ -152,6 +152,18 @@ def megatick(m_pend, rank, n_pend, node_prev, alive, dem_task, live,
                            interpret=(impl == "interpret"), **kw)
 
 
+def megatick_estimate(tel, balance, baseline, capacity, now, *,
+                      tel_mode: str):
+    """The megakernel's Algorithm-2 credit estimate, standalone — the SAME
+    `kernels.megatick.telemetry_estimate` the fused tick evaluates
+    internally. The engine's decision trace (core.vecsim, trace_slots>0)
+    calls this on the fused path so recorded placement events carry the
+    bitwise-identical credit estimate the kernel ranked nodes by."""
+    from repro.kernels import megatick as _mk
+    return _mk.telemetry_estimate(tel, balance, baseline, capacity, now,
+                                  tel_mode)
+
+
 attention_jit = jax.jit(attention, static_argnames=(
     "causal", "impl", "block_q", "block_k"))
 decode_attention_jit = jax.jit(decode_attention, static_argnames=(

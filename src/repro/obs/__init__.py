@@ -1,0 +1,33 @@
+"""repro.obs: end-to-end observability for the vectorized engine.
+
+Submodules:
+
+  ring      device-side event ring carried through the jitted scan
+            (structured placement/blacklist/preempt/SLO events) + the
+            numpy decode and the replay oracle's `EventCollector`
+  registry  declared names/units/schemas for every streamed metric
+            (`sweep.results` derives its table columns from it)
+  spans     host-side structured spans for the sweep runner
+  trace     trace sink: decode rings, bundle traces, export
+            Chrome/Perfetto `trace_event` JSON + JSONL
+  oracle    numpy replay -> decision-event stream (explainer backend)
+  explain   ``python -m repro.obs.explain`` decision explainer
+
+``trace``/``oracle``/``explain`` import the engine, and the engine
+imports ``obs.ring`` back — those three load lazily so the package
+never cycles.
+"""
+from repro.obs import registry, ring, spans  # noqa: F401
+
+_LAZY = ("trace", "oracle", "explain")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

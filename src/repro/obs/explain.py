@@ -1,0 +1,158 @@
+"""``python -m repro.obs.explain <trace.npz> --tick K [--task T]``: the
+decision explainer.
+
+Loads a `repro.obs.trace.save_trace` bundle, replays the scenario
+against the numpy oracle (`repro.obs.oracle.replay_events`) with a
+pre-placement snapshot at the requested tick, verifies the recorded
+ring agrees with the replay event-for-event, and narrates WHY the
+engine decided what it decided at that tick: which nodes were free,
+their estimated credits and rank, who was blacklisted (and the
+predicted time-to-deplete that triggered it), what the queues held,
+and — for ``--task`` — where the task went and why.
+
+Exit status: 0 when the ring and the replay agree, 2 on any mismatch
+(a real engine/oracle divergence — file a bug), 1 for usage errors
+(tick out of range, tick's events already overwritten in the ring).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.obs import oracle as _oracle
+from repro.obs import trace as _trace
+from repro.obs.ring import (
+    EV_BLACKLIST,
+    EV_PLACE,
+    Event,
+    assert_event_parity,
+)
+
+
+def _fmt_val(v: float) -> str:
+    if not np.isfinite(v):
+        return repr(float(v))
+    return f"{v:.6g}"
+
+
+def _narrate_tick(events: Sequence[Event], tick: int,
+                  task: Optional[int]) -> List[str]:
+    lines = []
+    at_tick = [e for e in events if e.tick == tick]
+    if not at_tick:
+        lines.append(f"tick {tick}: no events recorded")
+        return lines
+    lines.append(f"tick {tick}: {len(at_tick)} event(s)")
+    for e in at_tick:
+        if task is not None and e.kind not in (EV_BLACKLIST,) \
+                and e.subject != task:
+            continue
+        if e.kind == EV_PLACE:
+            lines.append(
+                f"  place: task/slot {e.subject} -> node {e.aux} "
+                f"(credit rank {e.rank}, est {_fmt_val(e.value)})")
+        elif e.kind == EV_BLACKLIST:
+            why = "preemption notice" if e.aux else \
+                f"time-to-deplete {_fmt_val(e.value)} s under horizon"
+            lines.append(f"  blacklist: node {e.subject} ({why})")
+        else:
+            lines.append(
+                f"  {e.kind_name}: subject {e.subject} aux {e.aux} "
+                f"rank {e.rank} value {_fmt_val(e.value)}")
+    return lines
+
+
+def _narrate_snapshot(snap: dict, task: Optional[int]) -> List[str]:
+    lines = ["pre-placement state:"]
+    est = snap.get("est")
+    free = np.asarray(snap["free"])
+    black = np.asarray(snap["black"])
+    tdep = np.asarray(snap["tdep"])
+    order = snap["order"]
+    if est is not None:
+        est = np.asarray(est)
+        lines.append("  node  est-credits  free-slots  blacklisted")
+        for n in range(len(free)):
+            b = ""
+            if black[n]:
+                b = (f"YES (tdep {_fmt_val(float(tdep[n]))} s)"
+                     if np.isfinite(tdep[n]) else "YES (notice)")
+            lines.append(f"  {n:4d}  {est[n]:11.4f}  {int(free[n]):10d}"
+                         f"  {b}")
+        lines.append(f"  placement order (desc est, id ties): {order}")
+    else:
+        lines.append("  node  free-slots")
+        for n in range(len(free)):
+            lines.append(f"  {n:4d}  {int(free[n]):10d}")
+    for i, q in enumerate(snap["queues"]):
+        qi = [int(x) for x in q]
+        shown = qi if len(qi) <= 16 else qi[:16] + ["..."]
+        lines.append(f"  queue[{i}] ({len(q)} waiting): {shown}")
+    if task is not None:
+        where = [i for i, q in enumerate(snap["queues"]) if task in q]
+        if where:
+            i = where[0]
+            lines.append(f"  task {task}: rank "
+                         f"{snap['queues'][i].index(task)} in queue[{i}]")
+    return lines
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.explain",
+        description="Replay a saved trace against the numpy oracle and "
+                    "explain one tick's scheduling decisions.")
+    p.add_argument("trace", help="bundle written by repro.obs.trace"
+                                 ".save_trace (.npz)")
+    p.add_argument("--tick", type=int, required=True,
+                   help="tick to explain")
+    p.add_argument("--task", type=int, default=None,
+                   help="focus on one task/slot's events")
+    args = p.parse_args(argv)
+
+    # the replay mirrors the engine's float64 math (the fault-event
+    # streams regenerate through jax) — force x64 before any tracing
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    cfg, sc, engine_events, head = _trace.load_trace(args.trace)
+    if not (0 <= args.tick < cfg.n_ticks):
+        print(f"error: --tick {args.tick} outside [0, {cfg.n_ticks})",
+              file=sys.stderr)
+        return 1
+
+    events, snaps, _ = _oracle.replay_events(sc, cfg,
+                                             snap_ticks=(args.tick,))
+    try:
+        assert_event_parity(engine_events, events, total=head)
+    except AssertionError as e:
+        print(f"RING/REPLAY MISMATCH: {e}", file=sys.stderr)
+        return 2
+    print(f"ring/replay agreement: {head} event(s), "
+          f"{len(engine_events)} retained — OK")
+
+    # the ring keeps the LAST `len(engine_events)` events; refuse to
+    # "explain" a tick whose records were overwritten
+    oldest = head - len(engine_events)
+    tick_seqs = [e.seq for e in events if e.tick == args.tick]
+    if tick_seqs and tick_seqs[0] < oldest:
+        print(f"error: tick {args.tick}'s events (seq {tick_seqs[0]}..) "
+              f"were overwritten in the ring (oldest retained seq "
+              f"{oldest}); re-run with a larger trace_slots",
+              file=sys.stderr)
+        return 1
+
+    for line in _narrate_tick(events, args.tick, args.task):
+        print(line)
+    snap = snaps.get(args.tick)
+    if snap is not None:
+        for line in _narrate_snapshot(snap, args.task):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

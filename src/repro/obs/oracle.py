@@ -1,0 +1,39 @@
+"""Replay front-end for the decision trace: run the numpy fault oracle
+(repro.faults.oracle) over one scenario with an `EventCollector`
+attached, yielding the decision-event stream the engine's ring records —
+plus optional pre-placement state snapshots at requested ticks, which is
+what ``python -m repro.obs.explain`` narrates from.
+
+The heavy lifting (mirrored tick math, emit points) lives in the fault
+oracles themselves; this module only routes a scenario to the right one
+(closed vs open-loop) and packages the results.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Tuple
+
+import numpy as np
+
+from repro.core.vecsim import VecSimConfig
+from repro.obs.ring import Event, EventCollector
+
+
+def replay_events(sc: Dict[str, np.ndarray], cfg: VecSimConfig,
+                  snap_ticks: Iterable[int] = ()
+                  ) -> Tuple[list, Dict[int, dict], dict]:
+    """Replay one (unstacked) scenario eagerly, collecting the decision
+    events the engine's ring would record.
+
+    Returns ``(events, snaps, outputs)``: the chronological `Event`
+    list, ``{tick: snapshot}`` pre-placement state snapshots for every
+    requested tick (est / free / blacklist / queue contents — see
+    `faults.oracle`), and the oracle's scalar output dict.
+    """
+    from repro.faults.oracle import ClosedFaultOracle, FaultTrafficOracle
+
+    col = EventCollector()
+    snaps = frozenset(int(t) for t in snap_ticks)
+    cls = FaultTrafficOracle if cfg.traffic != "none" else ClosedFaultOracle
+    oracle = cls(sc, cfg, trace=col, snap_ticks=snaps)
+    out = oracle.run()
+    return col.events, oracle.snaps, out

@@ -1,0 +1,171 @@
+"""Metrics registry: declared names/units/schemas for every metric the
+vectorized engine streams.
+
+The engine's output dict grew organically (~20 ad-hoc keys across the
+closed, traffic, and fault paths); this module is the single source of
+truth for what each is called, what unit it carries, its dtype kind, and
+which scope it lives in:
+
+  scalar    one value per scenario, assembled into the flat metric table
+            (`sweep.results.SCALAR_OUTPUTS` is derived from this order)
+  aux       per-scenario scalar NOT surfaced in the table (summation
+            inputs the percentile reduction consumes)
+  array     per-scenario dense array (per-task timestamps, histograms,
+            the decision-trace ring)
+  timeline  sampled per-tick series under the nested ``timeline`` dict
+  group     group-level axis, no leading scenario axis (timeline_t,
+            slo_edges — the `results.GROUP_LEVEL_OUTPUTS` set)
+
+`validate_outputs` walks one group's output dict and raises on any
+undeclared key or dtype-kind mismatch — `SweepResult.to_tidy` calls it
+at persist time and benchmarks/sweep_smoke.py asserts it directly, so a
+new engine output cannot ship without a declared name/unit/schema.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+# dtype kinds: "f" float, "i" integer, "b" boolean
+_KIND_OK = {"f": ("f",), "i": ("i", "u"), "b": ("b",)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    name: str
+    unit: str
+    kind: str          # f | i | b
+    scope: str         # scalar | aux | array | timeline | group
+    description: str
+
+
+def _m(name, unit, kind, scope, description) -> MetricSpec:
+    return MetricSpec(name, unit, kind, scope, description)
+
+
+METRICS: Tuple[MetricSpec, ...] = (
+    # ---- scalar table (declaration order IS the table column order) ----
+    _m("makespan", "s", "f", "scalar",
+       "time of the last release; horizon when not drained"),
+    _m("all_done", "bool", "b", "scalar",
+       "every (non-shed) job released by the horizon"),
+    _m("surplus_credits", "credits", "f", "scalar",
+       "fleet-total surplus (unlimited overdraft) credits"),
+    _m("total_cpu_work", "vcpu-s", "f", "scalar",
+       "cpu work applied to job progress"),
+    _m("cpu_work_served", "vcpu-s", "f", "scalar",
+       "cpu work the buckets served (incl. later-lost work)"),
+    _m("node_busy_seconds", "node-s", "f", "scalar",
+       "seconds with at least one resident task, summed over nodes"),
+    _m("n_arrived", "jobs", "i", "scalar", "open-loop arrivals seen"),
+    _m("n_admitted", "jobs", "i", "scalar", "arrivals admitted to the table"),
+    _m("n_dropped", "jobs", "i", "scalar", "arrivals shed to a full table"),
+    _m("n_completed", "jobs", "i", "scalar", "jobs released by the horizon"),
+    _m("lat_p50", "s", "f", "scalar", "completion latency p50 (upper-edge)"),
+    _m("lat_p95", "s", "f", "scalar", "completion latency p95"),
+    _m("lat_p99", "s", "f", "scalar", "completion latency p99"),
+    _m("lat_mean", "s", "f", "scalar", "completion latency mean"),
+    _m("lat_max", "s", "f", "scalar", "completion latency max"),
+    _m("wait_p50", "s", "f", "scalar", "queue wait p50 (upper-edge)"),
+    _m("wait_p95", "s", "f", "scalar", "queue wait p95"),
+    _m("wait_p99", "s", "f", "scalar", "queue wait p99"),
+    _m("wait_mean", "s", "f", "scalar", "queue wait mean"),
+    _m("wait_max", "s", "f", "scalar", "queue wait max"),
+    _m("last_finish", "s", "f", "scalar", "time of the last release"),
+    _m("n_preempted", "events", "i", "scalar",
+       "task-preemption events (node deaths hitting residents)"),
+    _m("n_reexec", "events", "i", "scalar", "requeues after preemption"),
+    _m("n_shed", "jobs", "i", "scalar", "tasks shed past max_retries"),
+    _m("work_lost", "vcpu-s", "f", "scalar",
+       "partial progress discarded by preemptions"),
+    _m("goodput", "vcpu-s", "f", "scalar", "work applied minus work lost"),
+    _m("n_kill_events", "events", "i", "scalar", "node-death edges"),
+    _m("node_down_ticks", "node-ticks", "i", "scalar",
+       "node-ticks spent dead"),
+    # ---- aux per-scenario scalars (feed the percentile reduction) ------
+    _m("lat_sum", "s", "f", "aux", "sum of completion latencies"),
+    _m("wait_sum", "s", "f", "aux", "sum of queue waits"),
+    # ---- per-scenario arrays -------------------------------------------
+    _m("job_completion", "s", "f", "array", "per-job completion time"),
+    _m("job_mask", "bool", "b", "array", "per-job slot validity"),
+    _m("start", "s", "f", "array", "per-task first placement time"),
+    _m("finish", "s", "f", "array", "per-task release time"),
+    _m("lat_hist", "jobs", "i", "array", "completion-latency histogram"),
+    _m("wait_hist", "jobs", "i", "array", "queue-wait histogram"),
+    _m("trace_ev_i", "-", "i", "array",
+       "decision-trace ring, int32 columns (tick/kind/subject/aux/rank)"),
+    _m("trace_ev_f", "-", "f", "array",
+       "decision-trace ring, per-event float32 value"),
+    _m("trace_head", "events", "i", "array",
+       "decision-trace total events recorded"),
+    # ---- sampled timeline series ---------------------------------------
+    _m("cpu_util", "fraction", "f", "timeline",
+       "served cpu rate over fleet vcpus"),
+    _m("cpu_credit_mean", "credits", "f", "timeline",
+       "mean effective cpu-bucket balance (surplus counts negative)"),
+    _m("cpu_credit_std", "credits", "f", "timeline",
+       "std of effective cpu-bucket balance"),
+    _m("disk_credit_mean", "credits", "f", "timeline",
+       "mean disk-bucket balance"),
+    _m("disk_credit_std", "credits", "f", "timeline",
+       "std of disk-bucket balance"),
+    _m("iops", "iops", "f", "timeline", "served disk rate per node"),
+    _m("queue_depth", "tasks", "i", "timeline",
+       "ready tasks left unplaced this tick"),
+    _m("occupancy", "slots", "i", "timeline", "occupied table slots"),
+    _m("completed_cum", "jobs", "i", "timeline", "cumulative completions"),
+    _m("dropped_cum", "jobs", "i", "timeline", "cumulative drops"),
+    _m("surplus_cum", "credits", "f", "timeline",
+       "cumulative fleet surplus (billing-window input)"),
+    # ---- group-level axes ----------------------------------------------
+    _m("timeline_t", "s", "f", "group", "timeline sample times"),
+    _m("slo_edges", "s", "f", "group", "SLO histogram bin edges"),
+)
+
+BY_NAME: Dict[str, MetricSpec] = {m.name: m for m in METRICS}
+
+
+def scalar_names() -> Tuple[str, ...]:
+    """The flat metric-table columns, in declaration order — the value of
+    `sweep.results.SCALAR_OUTPUTS`."""
+    return tuple(m.name for m in METRICS if m.scope == "scalar")
+
+
+def spec(name: str) -> MetricSpec:
+    return BY_NAME[name]
+
+
+def _check_kind(name: str, value: Any) -> None:
+    kind = np.asarray(value).dtype.kind
+    want = BY_NAME[name].kind
+    if kind not in _KIND_OK[want]:
+        raise ValueError(
+            f"metric {name!r}: dtype kind {kind!r} does not match the "
+            f"registered kind {want!r} ({BY_NAME[name].unit})")
+
+
+def validate_outputs(outputs: Dict[str, Any]) -> None:
+    """Validate one group's engine output dict against the registry:
+    every key must be declared (the nested ``timeline`` dict against the
+    timeline scope) with a matching dtype kind. Raises ValueError naming
+    the first offender."""
+    for k, v in outputs.items():
+        if k == "timeline":
+            if not isinstance(v, dict):
+                raise ValueError("'timeline' must be a nested dict")
+            for tk, tv in v.items():
+                m = BY_NAME.get(tk)
+                if m is None or m.scope != "timeline":
+                    raise ValueError(
+                        f"undeclared timeline metric {tk!r}: add a "
+                        "MetricSpec to repro.obs.registry.METRICS")
+                _check_kind(tk, tv)
+            continue
+        m = BY_NAME.get(k)
+        if m is None or m.scope == "timeline":
+            raise ValueError(
+                f"undeclared engine output {k!r}: add a MetricSpec to "
+                "repro.obs.registry.METRICS")
+        _check_kind(k, v)

@@ -1,0 +1,229 @@
+"""Device-side event ring: the in-scan decision trace.
+
+The engine (core.vecsim) records structured per-tick events — placement
+decisions with the credit rank that won them, CASH blacklist triggers
+with the predicted time-to-deplete, preemption/requeue/shed, SLO-bucket
+overflow, token-bucket depletion/regeneration crossings — into a
+fixed-capacity ring carried through the jitted `lax.scan`:
+
+    ev_i : (S, 5) int32    columns (tick, kind, subject, aux, rank)
+    ev_f : (S,)   float32  one value per event (latency, tdep, est, bal)
+    head : ()     int32    total events EVER recorded (not a slot index)
+
+Overwrite-oldest semantics: event number ``g`` (0-based, global) lives at
+slot ``g % S``; once ``head > S`` the ring retains exactly the last ``S``
+events. Recording is one masked scatter per tick: candidate event rows
+are concatenated in a canonical per-tick block order (the tick's phase
+order — see EVENT_ORDER), invalid rows get the out-of-range index ``S``
+and are dropped by ``mode="drop"``. Index uniqueness — and therefore
+scatter determinism — needs ``S >= (rows per tick)``; the engine sizes
+the ring ``max(cfg.trace_slots, per-tick block width)`` and
+`record_blocks` asserts it.
+
+When ``cfg.trace_slots == 0`` none of this exists: the scan carries zero
+trace state and compiles to the identical program (the faults/traffic
+zero-overhead contract, asserted by tests/test_obs.py).
+
+The numpy side of the same schema lives here too: `decode` rotates a
+finished ring back into chronological `Event` records, and
+`EventCollector` is the replay oracle's appender (repro.faults.oracle
+emits the SAME tuples at the mirrored tick points, so engine rings and
+oracle replays compare exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# event kinds, in canonical per-tick block order (= the tick phase order:
+# release -> fault step -> arrivals -> placement -> serve). Within one
+# block, events are ordered by array index (slot/task/node ascending).
+EV_SLO_OVER = 1      # release: latency beyond the top histogram edge
+EV_PREEMPT = 2       # fault step: resident task hit by a node death
+EV_SHED = 3          # fault step: hit task past max_retries leaves
+EV_DROP = 4          # arrivals: admissions lost to a full table (1 row)
+EV_BLACKLIST = 5     # placement: CASH blacklist applied to a node
+EV_PLACE = 6         # placement: task/slot assigned to a node
+EV_DEPLETE = 7       # serve: node bucket crossed to empty
+EV_REGEN = 8         # serve: node bucket crossed back above empty
+
+EVENT_ORDER = (EV_SLO_OVER, EV_PREEMPT, EV_SHED, EV_DROP, EV_BLACKLIST,
+               EV_PLACE, EV_DEPLETE, EV_REGEN)
+
+KIND_NAMES = {
+    EV_SLO_OVER: "slo_overflow",
+    EV_PREEMPT: "preempt",
+    EV_SHED: "shed",
+    EV_DROP: "drop",
+    EV_BLACKLIST: "blacklist",
+    EV_PLACE: "place",
+    EV_DEPLETE: "deplete",
+    EV_REGEN: "regen",
+}
+
+# int32 ring columns, in storage order
+I_FIELDS = ("tick", "kind", "subject", "aux", "rank")
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One decoded ring row. Field meaning by kind:
+
+    ============ ========== ============== ============ ================
+    kind         subject    aux            rank         value
+    ============ ========== ============== ============ ================
+    slo_overflow slot       -1             -1           latency (s)
+    preempt      task/slot  node (before)  retry count  work lost
+    shed         task/slot  node (before)  retry count  0
+    drop         -1         dropped count  -1           0
+    blacklist    node       notice flag    -1           time-to-deplete
+    place        task/slot  node assigned  credit rank  est credits
+    deplete      node       -1             -1           new balance
+    regen        node       -1             -1           new balance
+    ============ ========== ============== ============ ================
+
+    ``seq`` is the global event number (monotone across the run); for
+    ``place`` under the stock scheduler ``rank`` is the node id (stock
+    never consults credits) and ``value`` is 0.
+    """
+    seq: int
+    tick: int
+    kind: int
+    subject: int
+    aux: int
+    rank: int
+    value: float
+
+    @property
+    def kind_name(self) -> str:
+        return KIND_NAMES.get(self.kind, f"kind{self.kind}")
+
+    def key(self) -> Tuple[int, int, int, int, int]:
+        return (self.tick, self.kind, self.subject, self.aux, self.rank)
+
+
+def ring_init(slots: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fresh carried ring state ``(ev_i, ev_f, head)``."""
+    return (jnp.zeros((slots, len(I_FIELDS)), jnp.int32),
+            jnp.zeros(slots, jnp.float32), jnp.int32(0))
+
+
+def record_blocks(ev_i: jnp.ndarray, ev_f: jnp.ndarray, head: jnp.ndarray,
+                  tick, blocks: Sequence[Tuple]):
+    """Scatter one tick's candidate event blocks into the ring.
+
+    ``blocks`` is a sequence of ``(valid, kind, subject, aux, rank, value)``
+    tuples in canonical block order; every element except ``kind`` (a
+    Python int) is a 1-D array or a scalar broadcast against ``valid``.
+    Returns the updated ``(ev_i, ev_f, head)``.
+    """
+    S = ev_i.shape[0]
+
+    def cols(idx, dtype):
+        parts = []
+        for b in blocks:
+            n = b[0].shape[0]
+            v = jnp.asarray(b[idx])
+            parts.append(jnp.broadcast_to(v, (n,)).astype(dtype))
+        return jnp.concatenate(parts)
+
+    valid = jnp.concatenate([b[0] for b in blocks])
+    E = valid.shape[0]
+    if S < E:   # static shapes: a drifted ring size is a trace-time error
+        raise ValueError(
+            f"ring capacity {S} < per-tick event block width {E}; "
+            "scatter indices would collide")
+    subj = cols(2, jnp.int32)
+    aux = cols(3, jnp.int32)
+    rank = cols(4, jnp.int32)
+    val = cols(5, jnp.float32)
+    kind = jnp.concatenate([
+        jnp.full((b[0].shape[0],), int(b[1]), jnp.int32) for b in blocks])
+    tick_col = jnp.broadcast_to(jnp.asarray(tick, jnp.int32), (E,))
+
+    r = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    pos = jnp.where(valid, (head + r) % S, S)          # S = dropped
+    rows = jnp.stack([tick_col, kind, subj, aux, rank], axis=1)
+    ev_i = ev_i.at[pos].set(rows, mode="drop")
+    ev_f = ev_f.at[pos].set(val, mode="drop")
+    return ev_i, ev_f, head + r[-1] + 1
+
+
+def decode(ev_i: np.ndarray, ev_f: np.ndarray, head) -> List[Event]:
+    """Rotate one scenario's finished ring into chronological `Event`
+    records: the retained events are numbers ``[head - min(head, S),
+    head)``, event ``g`` at slot ``g % S``."""
+    ev_i = np.asarray(ev_i)
+    ev_f = np.asarray(ev_f)
+    total = int(head)
+    S = ev_i.shape[0]
+    n = min(total, S)
+    out: List[Event] = []
+    for g in range(total - n, total):
+        r = g % S
+        t, k, s, a, rk = (int(x) for x in ev_i[r])
+        out.append(Event(seq=g, tick=t, kind=k, subject=s, aux=a, rank=rk,
+                         value=float(ev_f[r])))
+    return out
+
+
+class EventCollector:
+    """The replay oracle's appender: `emit` at the mirrored tick points
+    yields the same `Event` stream the engine's ring records (values are
+    rounded through float32, matching the ring's storage dtype)."""
+
+    def __init__(self) -> None:
+        self.events: List[Event] = []
+
+    def emit(self, tick: int, kind: int, subject: int, aux: int, rank: int,
+             value: float) -> None:
+        self.events.append(Event(
+            seq=len(self.events), tick=int(tick), kind=int(kind),
+            subject=int(subject), aux=int(aux), rank=int(rank),
+            value=float(np.float32(value))))
+
+    def extend(self, events: Sequence[Event]) -> None:
+        for e in events:
+            self.emit(e.tick, e.kind, e.subject, e.aux, e.rank, e.value)
+
+    def tail(self, n: int) -> List[Event]:
+        return self.events[max(0, len(self.events) - n):]
+
+
+def assert_event_parity(engine_events: Sequence[Event],
+                        oracle_events: Sequence[Event],
+                        total: Optional[int] = None) -> None:
+    """Agreement between a decoded engine ring and the oracle replay's
+    retained tail: same count, DECISION FIELDS EXACT (tick, kind,
+    subject, aux, rank — int-for-int), float values float32-close.
+
+    Values are not compared bitwise because XLA contracts the serve's
+    ``balance - drain * t_burst`` into an FMA, which leaves a ~1e-17
+    residue exactly where pure-double math (the numpy oracle, which has
+    no fma on this interpreter) cancels to 0.0 — e.g. a just-depleted
+    bucket. The residue is additive noise far below every threshold the
+    engine compares against (1e-9), so decisions never diverge; the
+    tolerance below admits it while still catching any real mismatch."""
+    if total is not None and total != len(oracle_events):
+        raise AssertionError(
+            f"event totals differ: engine head={total}, "
+            f"oracle={len(oracle_events)}")
+    tail = oracle_events[len(oracle_events) - len(engine_events):]
+    for i, (e, o) in enumerate(zip(engine_events, tail)):
+        if e.key() != o.key():
+            raise AssertionError(
+                f"event {i}: engine {e} != oracle {o}")
+        ev, ov = np.float32(e.value), np.float32(o.value)
+        if np.isnan(ev) or np.isnan(ov):
+            same = bool(np.isnan(ev) and np.isnan(ov))
+        elif not (np.isfinite(ev) and np.isfinite(ov)):
+            same = bool(ev == ov)
+        else:
+            same = abs(float(ev) - float(ov)) \
+                <= 1e-9 + 1e-5 * abs(float(ov))
+        if not same:
+            raise AssertionError(
+                f"event {i} value: engine {e} != oracle {o}")

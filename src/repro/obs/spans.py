@@ -1,0 +1,68 @@
+"""Host-side structured spans for the sweep runner.
+
+`SpanTracer` is the orchestration half of the observability story: the
+`WorkQueue` and `run_sweep` (sweep/runner.py) emit spans/instants for
+claim, lease renewal, stale-lease steal, retry, quarantine, and chunk
+writes, so device events (the in-scan ring) and host orchestration land
+on ONE Perfetto timeline (`obs.trace.export_perfetto`).
+
+Thread-safe by construction — the pipelined runner's background
+`_ChunkWriter` thread and the heartbeat thread both emit — and cheap
+when absent: every call site guards on ``tracer is not None``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+# span taxonomy (DESIGN.md "Observability"): durations vs point events
+SPAN_NAMES = ("claim", "chunk-load", "chunk-compute", "chunk-write",
+              "retry-backoff")
+INSTANT_NAMES = ("claim-miss", "lease-renew", "lease-steal", "retry",
+                 "quarantine", "resume-hit")
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One runner event: a duration (``ph="X"``) when ``dur`` is set, a
+    point instant (``ph="i"``) otherwise. ``t0``/``dur`` are seconds
+    relative to the tracer's epoch."""
+    name: str
+    t0: float
+    dur: Optional[float]
+    thread: str
+    args: Dict[str, Any]
+
+
+class SpanTracer:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._epoch = time.perf_counter()
+        self.spans: List[Span] = []
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._epoch
+
+    def instant(self, name: str, **args: Any) -> None:
+        s = Span(name, self._now(), None, threading.current_thread().name,
+                 args)
+        with self._lock:
+            self.spans.append(s)
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args: Any):
+        t0 = self._now()
+        try:
+            yield
+        finally:
+            s = Span(name, t0, self._now() - t0,
+                     threading.current_thread().name, args)
+            with self._lock:
+                self.spans.append(s)
+
+    def snapshot(self) -> List[Span]:
+        with self._lock:
+            return list(self.spans)

@@ -1,0 +1,161 @@
+"""Host-side trace sink: decode device rings, bundle traces, export
+Chrome/Perfetto `trace_event` JSON and JSONL.
+
+Two clocks land on one timeline: device events carry SIMULATED time
+(``tick * cfg.dt`` seconds, pid "device", one Perfetto thread per
+scenario) and runner spans carry WALL time relative to the tracer epoch
+(pid "runner", one thread per host thread). Perfetto renders both from
+t=0; the pid split keeps the scales visually separate while claim /
+steal / retry / chunk-write orchestration sits next to the placement /
+blacklist / preempt decisions it computed.
+
+`save_trace`/`load_trace` persist a self-contained NPZ bundle — the
+scenario arrays, the static config, and one scenario's ring — which is
+what ``python -m repro.obs.explain`` replays against the numpy oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.vecsim import VecSimConfig
+from repro.obs.ring import Event, KIND_NAMES, decode
+from repro.obs.spans import Span
+
+TRACE_KEYS = ("trace_ev_i", "trace_ev_f", "trace_head")
+
+
+def _scenario_ring(outputs: Dict[str, Any], scenario: int):
+    """One scenario's ``(ev_i, ev_f, head)`` from an engine output dict —
+    batched (leading scenario axis) or already per-scenario."""
+    ev_i = np.asarray(outputs["trace_ev_i"])
+    ev_f = np.asarray(outputs["trace_ev_f"])
+    head = np.asarray(outputs["trace_head"])
+    if ev_i.ndim == 3:
+        return ev_i[scenario], ev_f[scenario], head[scenario]
+    return ev_i, ev_f, head
+
+
+def decode_trace(outputs: Dict[str, Any], scenario: int = 0) -> List[Event]:
+    """Decode one scenario's ring from an engine output dict into
+    chronological typed `Event` records."""
+    ev_i, ev_f, head = _scenario_ring(outputs, scenario)
+    return decode(ev_i, ev_f, head)
+
+
+def save_trace(path, cfg: VecSimConfig, sc: Dict[str, np.ndarray],
+               outputs: Dict[str, Any], scenario: int = 0) -> pathlib.Path:
+    """Write a self-contained trace bundle: the (unstacked) scenario
+    arrays, the static config, and one scenario's ring."""
+    path = pathlib.Path(path)
+    ev_i, ev_f, head = _scenario_ring(outputs, scenario)
+    payload: Dict[str, np.ndarray] = {
+        "trace/ev_i": ev_i, "trace/ev_f": ev_f,
+        "trace/head": np.asarray(head),
+        "cfg_json": np.asarray(json.dumps(dataclasses.asdict(cfg))),
+    }
+    for k, v in sc.items():
+        payload[f"sc/{k}"] = np.asarray(v)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path, **payload)
+    return path
+
+
+def load_trace(path):
+    """Load a `save_trace` bundle -> ``(cfg, sc, events, head)``."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as z:
+        cfg = VecSimConfig(**json.loads(str(z["cfg_json"])))
+        sc = {k[3:]: z[k] for k in z.files if k.startswith("sc/")}
+        ev_i, ev_f = z["trace/ev_i"], z["trace/ev_f"]
+        head = int(z["trace/head"])
+    return cfg, sc, decode(ev_i, ev_f, head), head
+
+
+def _device_trace_events(events: Sequence[Event], dt: float,
+                         scenario: int) -> List[Dict[str, Any]]:
+    rows: List[Dict[str, Any]] = []
+    for e in events:
+        rows.append({
+            "name": e.kind_name, "cat": "device", "ph": "i", "s": "t",
+            "pid": 1, "tid": int(scenario),
+            "ts": float(e.tick) * dt * 1e6,     # sim seconds -> "us"
+            "args": {"seq": e.seq, "tick": e.tick, "subject": e.subject,
+                     "aux": e.aux, "rank": e.rank,
+                     "value": _finite(e.value)},
+        })
+    return rows
+
+
+def _runner_trace_events(spans: Sequence[Span]) -> List[Dict[str, Any]]:
+    tids: Dict[str, int] = {}
+    rows: List[Dict[str, Any]] = []
+    for s in spans:
+        tid = tids.setdefault(s.thread, len(tids))
+        row: Dict[str, Any] = {
+            "name": s.name, "cat": "runner", "pid": 2, "tid": tid,
+            "ts": s.t0 * 1e6, "args": dict(s.args),
+        }
+        if s.dur is None:
+            row["ph"] = "i"
+            row["s"] = "t"
+        else:
+            row["ph"] = "X"
+            row["dur"] = s.dur * 1e6
+        rows.append(row)
+    return rows
+
+
+def _finite(v: float) -> Any:
+    # JSON has no Infinity/NaN literals; Perfetto chokes on them
+    if np.isfinite(v):
+        return float(v)
+    return repr(float(v))
+
+
+def export_perfetto(path, *, events: Sequence[Event] = (),
+                    dt: float = 1.0, scenario: int = 0,
+                    spans: Sequence[Span] = (),
+                    thread_names: Optional[Dict[str, Any]] = None
+                    ) -> pathlib.Path:
+    """Write Chrome/Perfetto ``trace_event`` JSON: device ring events
+    (instant, pid "device") + runner spans (complete/instant, pid
+    "runner") on one timeline. Load via chrome://tracing or
+    https://ui.perfetto.dev."""
+    path = pathlib.Path(path)
+    te: List[Dict[str, Any]] = [
+        {"name": "process_name", "ph": "M", "pid": 1,
+         "args": {"name": "device (simulated time)"}},
+        {"name": "process_name", "ph": "M", "pid": 2,
+         "args": {"name": "runner (wall time)"}},
+    ]
+    te += _device_trace_events(events, dt, scenario)
+    te += _runner_trace_events(spans)
+    doc = {"traceEvents": te, "displayTimeUnit": "ms",
+           "otherData": dict(thread_names or {})}
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=1) + "\n")
+    return path
+
+
+def export_jsonl(path, *, events: Sequence[Event] = (), dt: float = 1.0,
+                 spans: Sequence[Span] = ()) -> pathlib.Path:
+    """One JSON object per line: device events (``src: "device"``, sim
+    time) then runner spans (``src: "runner"``, wall time)."""
+    path = pathlib.Path(path)
+    lines = []
+    for e in events:
+        lines.append(json.dumps({
+            "src": "device", "t": float(e.tick) * dt, "seq": e.seq,
+            "kind": e.kind_name, "subject": e.subject, "aux": e.aux,
+            "rank": e.rank, "value": _finite(e.value)}))
+    for s in spans:
+        lines.append(json.dumps({
+            "src": "runner", "t": s.t0, "dur": s.dur, "name": s.name,
+            "thread": s.thread, "args": s.args}))
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("\n".join(lines) + ("\n" if lines else ""))
+    return path

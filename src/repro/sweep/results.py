@@ -19,27 +19,21 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.vecsim import VecSimConfig
+from repro.obs import registry
 from repro.sweep.spec import SweepPoint
 
-# per-scenario scalar outputs assembled into the flat metric table.
-# `scalars()` skips any name a group lacks, so the traffic-only columns
-# (stream counters + SLO percentiles from `traffic.slo`) cost closed
-# sweeps nothing.
-SCALAR_OUTPUTS = ("makespan", "all_done", "surplus_credits",
-                  "total_cpu_work", "cpu_work_served", "node_busy_seconds",
-                  "n_arrived", "n_admitted", "n_dropped", "n_completed",
-                  "lat_p50", "lat_p95", "lat_p99", "lat_mean", "lat_max",
-                  "wait_p50", "wait_p95", "wait_p99", "wait_mean",
-                  "wait_max", "last_finish",
-                  # fault-injection metrics (cfg.faults != "none" only;
-                  # scalars() skips columns any group lacks)
-                  "n_preempted", "n_reexec", "n_shed", "work_lost",
-                  "goodput", "n_kill_events", "node_down_ticks")
+# per-scenario scalar outputs assembled into the flat metric table, in
+# the metrics registry's declaration order (repro.obs.registry is the
+# single source of truth for names/units/schemas). `scalars()` skips any
+# name a group lacks, so the traffic-only columns (stream counters + SLO
+# percentiles from `traffic.slo`) cost closed sweeps nothing.
+SCALAR_OUTPUTS = registry.scalar_names()
 
 # outputs that are group-level (no leading scenario axis). Identified by
 # NAME, never by shape — a shape heuristic misfires whenever the sample
@@ -93,6 +87,13 @@ class SweepResult:
         for gi, g in enumerate(groups):
             for row, p in enumerate(g.points):
                 self._where[p.index] = (gi, row)
+        n_poisoned = self.n_poisoned
+        if n_poisoned:
+            warnings.warn(
+                f"{n_poisoned} of {self.n_points} scenario rows are "
+                "poisoned (NaN-filled quarantined chunks) — their scalar "
+                "metrics are NaN and all_done reads False; see "
+                "meta['quarantined_chunks']", stacklevel=2)
 
     # ------------------------------------------------------------- accessors
     @property
@@ -104,6 +105,23 @@ class SweepResult:
         """All points in grid (expansion) order."""
         pts = [p for g in self.groups for p in g.points]
         return sorted(pts, key=lambda p: p.index)
+
+    def poisoned_mask(self) -> np.ndarray:
+        """Per-point bool (grid order): True where the row came from a
+        NaN-filled quarantined chunk (`runner._nan_outputs` stand-ins,
+        identified by a NaN makespan — the engine never emits one)."""
+        mask = []
+        for p in self.points:
+            gi, row = self._where[p.index]
+            mk = self.groups[gi].outputs.get("makespan")
+            mask.append(bool(np.isnan(np.asarray(mk[row])))
+                        if mk is not None else False)
+        return np.asarray(mask, bool)
+
+    @property
+    def n_poisoned(self) -> int:
+        """Scenario rows NaN-filled because their chunk was quarantined."""
+        return int(self.poisoned_mask().sum())
 
     def scalars(self) -> Dict[str, np.ndarray]:
         """Per-point scalar metric columns in grid order."""
@@ -150,8 +168,14 @@ class SweepResult:
 
     # ------------------------------------------------------------ persistence
     def to_tidy(self) -> Dict[str, Any]:
-        """JSON-able artifact: grid + per-point coordinate/metric rows."""
+        """JSON-able artifact: grid + per-point coordinate/metric rows.
+        Every output key is validated against the metrics registry
+        (repro.obs.registry) — an undeclared engine output cannot
+        persist without a registered name/unit/schema."""
+        for g in self.groups:
+            registry.validate_outputs(g.outputs)
         scalars = self.scalars()
+        poisoned = self.poisoned_mask()
         rows = []
         for i, p in enumerate(self.points):
             gi, _ = self._where[p.index]
@@ -159,6 +183,7 @@ class SweepResult:
                 "index": p.index,
                 "coords": p.coord_dict,
                 "group": gi,
+                "poisoned": bool(poisoned[i]),
                 "metrics": {k: _jsonify(v[i]) for k, v in scalars.items()},
             })
         return {
@@ -166,7 +191,7 @@ class SweepResult:
                      for k, vs in self.axes.items()},
             "groups": [dataclasses.asdict(g.cfg) for g in self.groups],
             "points": rows,
-            "meta": self.meta,
+            "meta": {**self.meta, "n_poisoned": int(poisoned.sum())},
         }
 
     def save(self, prefix: str) -> Tuple[pathlib.Path, pathlib.Path]:

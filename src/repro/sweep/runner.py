@@ -28,6 +28,7 @@ double-compute — and any of them resumes cleanly after a crash.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -79,6 +80,23 @@ class RunnerOptions:
     # its scenario rows NaN-filled — and the rest of the grid drains.
     max_attempts: int = 3
     backoff_s: float = 1.0
+    # host-side structured spans (repro.obs.spans.SpanTracer): claim /
+    # lease-renew / lease-steal / retry / quarantine / chunk-write land
+    # on the same Perfetto timeline as the device event rings
+    # (repro.obs.trace.export_perfetto). None = no tracing.
+    tracer: Optional[Any] = None
+
+
+def _span(tracer, name: str, **args):
+    """`tracer.span(...)` or a no-op context when tracing is off."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, **args)
+
+
+def _instant(tracer, name: str, **args) -> None:
+    if tracer is not None:
+        tracer.instant(name, **args)
 
 
 # --------------------------------------------------------------------------
@@ -181,11 +199,13 @@ class WorkQueue:
     def __init__(self, directory: Union[str, pathlib.Path],
                  fingerprint: str,
                  components: Optional[Dict[str, str]] = None, *,
-                 lease_s: float = 900.0, poll_s: float = 0.1):
+                 lease_s: float = 900.0, poll_s: float = 0.1,
+                 tracer: Optional[Any] = None):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.lease_s = lease_s
         self.poll_s = poll_s
+        self.tracer = tracer
         self.owner = f"{os.getpid()}-{uuid.uuid4().hex[:8]}"
         self._owned: Dict[Tuple[int, int], pathlib.Path] = {}
         self._owned_lock = threading.Lock()
@@ -278,6 +298,8 @@ class WorkQueue:
                 except FileNotFoundError:
                     continue
                 aside.unlink(missing_ok=True)
+                _instant(self.tracer, "lease-steal", group=gi, chunk=ci,
+                         age_s=round(age, 3))
                 continue
             with os.fdopen(fd, "w") as f:
                 json.dump({"owner": self.owner, "t": time.time()}, f)
@@ -308,14 +330,19 @@ class WorkQueue:
         now = time.time()
         with self._owned_lock:
             owned = list(self._owned.items())
+        renewed = 0
         for key, path in owned:
             try:
                 if json.loads(path.read_text()).get("owner") != self.owner:
                     raise FileNotFoundError(path)
                 os.utime(path, (now, now))
+                renewed += 1
             except (FileNotFoundError, json.JSONDecodeError, OSError):
                 with self._owned_lock:
                     self._owned.pop(key, None)
+        if owned:
+            _instant(self.tracer, "lease-renew", renewed=renewed,
+                     held=len(owned))
 
     def start_heartbeat(self, period_s: Optional[float] = None) -> None:
         """Spawn the daemon renewal thread (default period: a third of the
@@ -360,6 +387,8 @@ class WorkQueue:
         the authority — the manifest mirror is best-effort (concurrent
         quarantines race read-modify-write, markers never do)."""
         path = self._quarantine_path(gi, ci)
+        _instant(self.tracer, "quarantine", group=gi, chunk=ci,
+                 attempts=attempts, error=error[:200])
         doc = {"owner": self.owner, "group": gi, "chunk": ci,
                "attempts": attempts, "error": error, "t": time.time()}
         tmp = path.with_name(f"{path.stem}.{self.owner}.tmp.json")
@@ -437,11 +466,12 @@ class _ChunkWriter:
 _QUARANTINED = object()
 
 
-def _retry_chunk(attempt, opts: RunnerOptions, first=None):
+def _retry_chunk(attempt, opts: RunnerOptions, first=None, where=()):
     """Run one chunk compute with retry + exponential backoff. ``first``
     (when given) is tried once before ``attempt`` — the pipeline path uses
     it to consume an already-dispatched device tree, then falls back to
-    full re-dispatches. Raises the last error after ``max_attempts``."""
+    full re-dispatches. Raises the last error after ``max_attempts``.
+    ``where`` = (group, chunk) labels the tracer's retry events."""
     tries = max(1, opts.max_attempts)
     last: Optional[BaseException] = None
     for i in range(tries):
@@ -451,8 +481,13 @@ def _retry_chunk(attempt, opts: RunnerOptions, first=None):
             return attempt()
         except Exception as e:          # noqa: BLE001 — quarantine decides
             last = e
+            _instant(opts.tracer, "retry", attempt=i + 1,
+                     error=repr(e)[:200],
+                     **dict(zip(("group", "chunk"), where)))
             if i + 1 < tries:
-                time.sleep(opts.backoff_s * (2.0 ** i))
+                with _span(opts.tracer, "retry-backoff", attempt=i + 1,
+                           **dict(zip(("group", "chunk"), where))):
+                    time.sleep(opts.backoff_s * (2.0 ** i))
     raise last
 
 
@@ -562,7 +597,8 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
             components["traffic"] = traffic
             fingerprint += f":traffic={traffic}"
         ckpt = WorkQueue(opts.checkpoint_dir, fingerprint, components,
-                         lease_s=opts.lease_s, poll_s=opts.poll_s)
+                         lease_s=opts.lease_s, poll_s=opts.poll_s,
+                         tracer=opts.tracer)
 
     t0 = time.perf_counter()
     n_scen = 0
@@ -608,9 +644,15 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                     quar.append((gi, ci))
                     progressed = True
                     continue
-                out = ckpt.load(gi, ci) if ckpt else None
+                with _span(opts.tracer, "chunk-load", group=gi, chunk=ci) \
+                        if ckpt else contextlib.nullcontext():
+                    out = ckpt.load(gi, ci) if ckpt else None
                 if out is None and ckpt is not None:
-                    if not ckpt.try_claim(gi, ci):
+                    with _span(opts.tracer, "claim", group=gi, chunk=ci):
+                        claimed = ckpt.try_claim(gi, ci)
+                    if not claimed:
+                        _instant(opts.tracer, "claim-miss", group=gi,
+                                 chunk=ci)
                         still.append((gi, ci))  # a live peer is computing it
                         continue
                     # close the load->claim window: a peer may have saved
@@ -620,6 +662,9 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                     if out is not None:
                         ckpt.release(gi, ci)
                 if out is not None:
+                    if ckpt is not None:
+                        _instant(opts.tracer, "resume-hit", group=gi,
+                                 chunk=ci, scenarios=real)
                     outs[gi][ci] = out
                     cached[gi] += real
                     progressed = True
@@ -655,13 +700,16 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                                 try:
                                     # attempt 1 consumes the dispatched
                                     # tree; retries re-dispatch from `sub`
-                                    res = _retry_chunk(
-                                        lambda: _run_arrays(
-                                            sub, cfg, statics, opts.shards,
-                                            opts.donate),
-                                        opts,
-                                        first=lambda: _finalize_arrays(
-                                            dev, n_real, cfg))
+                                    with _span(opts.tracer, "chunk-compute",
+                                               group=gi, chunk=ci):
+                                        res = _retry_chunk(
+                                            lambda: _run_arrays(
+                                                sub, cfg, statics,
+                                                opts.shards, opts.donate),
+                                            opts,
+                                            first=lambda: _finalize_arrays(
+                                                dev, n_real, cfg),
+                                            where=(gi, ci))
                                 except Exception as e:  # noqa: BLE001
                                     if ckpt:
                                         ckpt.quarantine(gi, ci, repr(e),
@@ -672,7 +720,9 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                                 if pad_tail:
                                     res = _trim_outputs(res, real)
                                 if ckpt:
-                                    ckpt.save(gi, ci, res)
+                                    with _span(opts.tracer, "chunk-write",
+                                               group=gi, chunk=ci):
+                                        ckpt.save(gi, ci, res)
                                 outs[gi][ci] = res
                             finally:
                                 if ckpt:
@@ -682,10 +732,13 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                         handed_off = True
                     else:
                         try:
-                            out = _retry_chunk(
-                                lambda: _run_arrays(sub, g.cfg, statics,
-                                                    opts.shards,
-                                                    opts.donate), opts)
+                            with _span(opts.tracer, "chunk-compute",
+                                       group=gi, chunk=ci):
+                                out = _retry_chunk(
+                                    lambda: _run_arrays(sub, g.cfg, statics,
+                                                        opts.shards,
+                                                        opts.donate),
+                                    opts, where=(gi, ci))
                         except Exception as e:      # noqa: BLE001
                             if ckpt:
                                 ckpt.quarantine(gi, ci, repr(e),
@@ -697,7 +750,9 @@ def run_sweep(spec: Union[SweepSpec, Sequence[CompileGroup]],
                         if pad_tail:
                             out = _trim_outputs(out, real)
                         if ckpt:
-                            ckpt.save(gi, ci, out)
+                            with _span(opts.tracer, "chunk-write",
+                                       group=gi, chunk=ci):
+                                ckpt.save(gi, ci, out)
                         outs[gi][ci] = out
                 finally:
                     if ckpt and not handed_off:

@@ -1,0 +1,173 @@
+"""Benchmark regression gate (ISSUE 9 satellite): the comparator in
+`benchmarks.check_regression` over fixture JSONs — gated throughput keys
+fail past the threshold, improvements and missing sections never do, and
+the CLI exit codes match.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+@pytest.fixture()
+def baseline():
+    # the committed BENCH_vecsim.json shape, reduced to what the gate reads
+    return {
+        "fast": {
+            "vec_ticks_nodes_scen_per_s": 3_000_000.0,
+            "sharded": {"ticks_nodes_scen_per_s": 3_400_000.0,
+                        "bitwise_equal_vmap": True},
+            "speedup": 250.0,
+            "meta": {"platform": "cpu"},
+        },
+        "traffic": {
+            "traffic_ticks_nodes_scen_per_s": 3_100_000.0,
+            "throughput_ratio_vs_closed": 0.97,
+        },
+        "churn": {"wasted_work_ratio_cash_vs_stock": 0.8},
+    }
+
+
+def test_identical_docs_pass(baseline):
+    assert cr.compare(baseline, baseline) == []
+
+
+def test_gated_drop_fails(baseline):
+    cand = copy.deepcopy(baseline)
+    cand["fast"]["vec_ticks_nodes_scen_per_s"] *= 0.80     # -20%
+    regs = cr.compare(baseline, cand)
+    assert [(r.section, r.key) for r in regs] == \
+        [("fast", "vec_ticks_nodes_scen_per_s")]
+    assert regs[0].drop == pytest.approx(0.20)
+    assert "vec_ticks_nodes_scen_per_s" in str(regs[0])
+
+
+def test_nested_sharded_key_gated(baseline):
+    cand = copy.deepcopy(baseline)
+    cand["fast"]["sharded"]["ticks_nodes_scen_per_s"] *= 0.5
+    regs = cr.compare(baseline, cand)
+    assert [(r.section, r.key) for r in regs] == \
+        [("fast", "sharded.ticks_nodes_scen_per_s")]
+
+
+def test_drop_within_threshold_passes(baseline):
+    cand = copy.deepcopy(baseline)
+    for sec, key in (("fast", "vec_ticks_nodes_scen_per_s"),
+                     ("traffic", "traffic_ticks_nodes_scen_per_s")):
+        cand[sec][key] *= 0.90                             # -10% < 15%
+    assert cr.compare(baseline, cand) == []
+
+
+def test_threshold_is_configurable(baseline):
+    cand = copy.deepcopy(baseline)
+    cand["traffic"]["traffic_ticks_nodes_scen_per_s"] *= 0.90
+    assert cr.compare(baseline, cand, threshold=0.05) != []
+    assert cr.compare(baseline, cand, threshold=0.15) == []
+
+
+def test_improvement_never_fails(baseline):
+    cand = copy.deepcopy(baseline)
+    cand["fast"]["vec_ticks_nodes_scen_per_s"] *= 10.0
+    cand["traffic"]["traffic_ticks_nodes_scen_per_s"] *= 10.0
+    assert cr.compare(baseline, cand) == []
+
+
+def test_ungated_keys_ignored(baseline):
+    """Only the throughput keys gate — SLO/churn/ratio drift does not."""
+    cand = copy.deepcopy(baseline)
+    cand["fast"]["speedup"] = 1.0
+    cand["traffic"]["throughput_ratio_vs_closed"] = 0.5
+    cand["churn"]["wasted_work_ratio_cash_vs_stock"] = 99.0
+    assert cr.compare(baseline, cand) == []
+
+
+def test_missing_sections_and_keys_skipped(baseline):
+    """A section or key absent on either side is skipped, never failed:
+    a fast CI run must not gate full-mode numbers, and a pre-section
+    baseline must not fail the first run that adds it."""
+    cand = copy.deepcopy(baseline)
+    del cand["traffic"]
+    assert cr.compare(baseline, cand) == []
+    old = copy.deepcopy(baseline)
+    del old["fast"]["sharded"]
+    assert cr.compare(old, baseline) == []
+    assert cr.compare({}, baseline) == []
+    # non-numeric / non-positive baselines cannot divide: skipped
+    weird = copy.deepcopy(baseline)
+    weird["fast"]["vec_ticks_nodes_scen_per_s"] = "fast"
+    assert cr.compare(weird, baseline) == []
+    zero = copy.deepcopy(baseline)
+    zero["fast"]["vec_ticks_nodes_scen_per_s"] = 0.0
+    assert cr.compare(zero, baseline) == []
+
+
+def test_cli_exit_codes(tmp_path, baseline, capsys):
+    bad = copy.deepcopy(baseline)
+    bad["fast"]["vec_ticks_nodes_scen_per_s"] *= 0.5
+    bp = tmp_path / "base.json"
+    cp = tmp_path / "cand.json"
+    bp.write_text(json.dumps(baseline))
+    cp.write_text(json.dumps(bad))
+    assert cr.main([str(bp), str(bp)]) == 0
+    assert cr.main([str(bp), str(cp)]) == 1
+    err = capsys.readouterr().err
+    assert "PERF REGRESSION" in err
+    assert cr.main([str(bp), str(cp), "--threshold", "0.6"]) == 0
+    assert cr.main([str(bp), str(tmp_path / "missing.json")]) == 1
+
+
+def test_run_driver_check_flag(tmp_path, monkeypatch):
+    """The real `benchmarks.run --fast --check` driver: it snapshots the
+    committed --out baseline BEFORE overwriting, stamps provenance, and
+    exits nonzero when a gated throughput metric regressed. The heavy
+    benchmark bodies are stubbed; the driver wiring is real."""
+    import benchmarks as bpkg
+    from benchmarks import run as run_mod
+
+    fresh = {"vec_ticks_nodes_scen_per_s": 1_000_000.0,
+             "sharded": {"ticks_nodes_scen_per_s": 1_100_000.0}}
+    stubs = {
+        "fig7_cpu_burst": {"run_batched": lambda fast=True: None},
+        "fig8_utilization": {"run_batched": lambda fast=True: None},
+        "fig9_query_completion": {"run_batched": lambda fast=True: None},
+        "fig11_cost": {"run_batched": lambda fast=True: None},
+        "ablation_joint": {"run_batched": lambda fast=True: None},
+        "sweep_smoke": {"run": lambda fast=True: None},
+        "vecsim_bench": {"run": lambda fast=True: dict(fresh)},
+        "roofline": {"vecsim_phases": lambda fast=True: {}},
+        "traffic_bench": {"run": lambda fast=True: {
+            "throughput_ratio_vs_closed": 1.0,
+            "traffic_ticks_nodes_scen_per_s": 1_000_000.0}},
+        "churn_bench": {"run": lambda fast=True: {
+            "wasted_work_ratio_cash_vs_stock": 0.9}},
+    }
+    for mod, attrs in stubs.items():
+        m = __import__(f"benchmarks.{mod}", fromlist=list(attrs))
+        for name, fn in attrs.items():
+            monkeypatch.setattr(m, name, fn)
+        monkeypatch.setattr(bpkg, mod, m, raising=False)
+    # _tune_xla_flags respects an explicit device-count flag; pin it to 1
+    # so calling the real driver cannot initialize the process-wide jax
+    # backend with forced extra host devices (which would un-skip and
+    # perturb multi-device tests later in the same pytest run)
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=1")
+
+    out = tmp_path / "BENCH_vecsim.json"
+    committed = {"fast": dict(fresh, vec_ticks_nodes_scen_per_s=2e6,
+                              sharded={"ticks_nodes_scen_per_s": 1.1e6})}
+    out.write_text(json.dumps(committed))
+    with pytest.raises(SystemExit):
+        run_mod.main(["--fast", "--check", "--out", str(out)])
+    written = json.loads(out.read_text())
+    # the fresh numbers DID overwrite the baseline (snapshot was first),
+    # and provenance landed alongside the per-mode sections
+    assert written["fast"]["vec_ticks_nodes_scen_per_s"] == 1_000_000.0
+    prov = written["provenance"]
+    assert prov["jax"] and prov["jaxlib"] and prov["timestamp_utc"]
+    assert prov["platform"]
+    # second run compares against the fresh (equal) numbers: gate passes
+    run_mod.main(["--fast", "--check", "--out", str(out)])
+    run_mod.main(["--fast", "--out", str(out)])     # no --check: no gate

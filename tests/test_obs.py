@@ -1,0 +1,549 @@
+"""Observability (ISSUE 9): the device event ring must record the same
+decision stream the numpy replay oracle derives (placement + credit
+rank, blacklist triggers with predicted time-to-deplete, preempt /
+shed / drop, SLO overflow, bucket deplete/regen crossings), stay
+bitwise-stable under unroll / fusion / `shard_map`, and cost ZERO
+carried state when disabled. The host side — trace sink, Perfetto/JSONL
+export, runner spans, metrics registry, explainer CLI — is covered
+here too.
+
+Decision fields (tick, kind, subject, aux, rank) compare int-exact;
+event VALUES compare float32-close because XLA contracts the serve's
+``balance - drain * t`` into an FMA the pure-double oracle doesn't have
+(see `repro.obs.ring.assert_event_parity`).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import vecsim
+from repro.core.annotations import Annotation, Task
+from repro.core.cluster import make_cluster
+from repro.core.simulator import Job
+from repro.faults import attach_fault_process
+from repro.obs import registry, ring
+from repro.obs import trace as obstrace
+from repro.obs.oracle import replay_events
+from repro.obs.ring import (EV_DEPLETE, EV_PLACE, EV_REGEN, Event,
+                            EventCollector, assert_event_parity, decode,
+                            record_blocks, ring_init)
+from repro.obs.spans import SpanTracer
+from repro.traffic import arrivals
+
+TRACE_KEYS = obstrace.TRACE_KEYS
+SLOTS = 4096        # retains every event at these scales (no overwrite)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+# ---------------------------------------------------------------------------
+# scenario/config helpers (mirroring tests/test_faults.py scales)
+# ---------------------------------------------------------------------------
+
+def _fleet(n=4, slots=3, frac=0.3):
+    return make_cluster(n, "t3.large", slots_per_node=slots,
+                        cpu_initial_fraction=frac)
+
+
+def _cpu_jobs(seed, n_jobs=3, tasks_per=5, burst_all=False):
+    rng = np.random.default_rng(seed)
+    jobs, tid = [], 0
+    for j in range(n_jobs):
+        tasks = []
+        for _ in range(tasks_per):
+            ann = (Annotation.BURST_CPU if burst_all or rng.random() < 0.6
+                   else Annotation.NONE)
+            tasks.append(Task(tid=tid, job=f"j{j}", vertex="map",
+                              work_cpu=float(rng.uniform(20, 80)),
+                              demand_cpu=float(rng.uniform(0.4, 1.0)),
+                              annotation=ann))
+            tid += 1
+        jobs.append(Job(name=f"j{j}", tasks=tasks))
+    return jobs
+
+
+def _closed_scenario(faults, seed=11):
+    nodes = make_cluster(3, "t3.large", slots_per_node=2,
+                         cpu_initial_fraction=0.3)
+    sc = vecsim.build_scenario(nodes, _cpu_jobs(seed), submit="parallel")
+    if faults != "none":
+        sc = attach_fault_process(sc, mode=faults, dt=5.0,
+                                  kill_rate=1 / 600.0,
+                                  restore_rate=1 / 900.0)
+    return sc
+
+
+def _closed_cfg(faults, scheduler="cash", **kw):
+    base = dict(n_ticks=400, dt=5.0, scheduler=scheduler,
+                telemetry="predicted", trace_slots=SLOTS)
+    if faults != "none":
+        base.update(faults=faults, max_retries=2,
+                    blacklist_horizon_s=120.0, preempt_notice_s=20.0)
+    base.update(kw)
+    return vecsim.VecSimConfig(**base)
+
+
+def _traffic_scenario(faults, rng_seed=7, **fkw):
+    tmpl = arrivals.make_template(6, seed=3)
+    sc = arrivals.build_traffic_scenario(_fleet(), tmpl, mode="poisson",
+                                         rate=0.05, rng_seed=rng_seed)
+    if faults != "none":
+        sc = attach_fault_process(sc, mode=faults, dt=5.0,
+                                  **{**dict(kill_rate=1 / 300.0,
+                                            restore_rate=1 / 900.0), **fkw})
+    return sc
+
+
+def _traffic_cfg(faults, scheduler="cash", **kw):
+    base = dict(n_ticks=300, dt=5.0, scheduler=scheduler,
+                telemetry="predicted", traffic="poisson", table_slots=24,
+                slo_bins=16, trace_slots=SLOTS)
+    if faults != "none":
+        base.update(faults=faults, max_retries=2,
+                    blacklist_horizon_s=120.0, preempt_notice_s=20.0)
+    base.update(kw)
+    return vecsim.VecSimConfig(**base)
+
+
+def _run_and_decode(sc, cfg):
+    out = vecsim.run_scenarios([sc], cfg)
+    events = obstrace.decode_trace(out, 0)
+    head = int(np.asarray(out["trace_head"])[0])
+    return out, events, head
+
+
+def _bitwise_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return np.array_equal(a, b, equal_nan=True)
+    return np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# ring unit semantics (pure, no engine)
+# ---------------------------------------------------------------------------
+
+def test_ring_record_decode_overwrite_oldest():
+    """Events scatter in canonical block order; once head > S only the
+    last S survive, and `decode` rotates them back chronologically."""
+    S = 5
+    ev_i, ev_f, head = ring_init(S)
+    ids = jnp.arange(3, dtype=jnp.int32)
+    for t in range(4):
+        # per tick: nodes t%3 and (t+1)%3 emit EV_DEPLETE, value 10t+n
+        valid = (ids == t % 3) | (ids == (t + 1) % 3)
+        blocks = [(valid, EV_DEPLETE, ids, -1, -1,
+                   10.0 * t + ids.astype(jnp.float32))]
+        ev_i, ev_f, head = record_blocks(ev_i, ev_f, head, t, blocks)
+    events = decode(np.asarray(ev_i), np.asarray(ev_f), int(head))
+    assert int(head) == 8                    # 2 events x 4 ticks
+    assert len(events) == S                  # ring kept the last 5
+    assert [e.seq for e in events] == [3, 4, 5, 6, 7]
+    assert [(e.tick, e.subject) for e in events] == \
+        [(1, 2), (2, 0), (2, 2), (3, 0), (3, 1)]
+    for e in events:
+        assert e.kind == EV_DEPLETE
+        assert e.value == pytest.approx(10.0 * e.tick + e.subject)
+
+
+def test_ring_capacity_guard():
+    """S < per-tick block width would collide scatter indices — a
+    static trace-time error, not silent corruption."""
+    ev_i, ev_f, head = ring_init(2)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="capacity"):
+        record_blocks(ev_i, ev_f, head, 0,
+                      [(ids >= 0, EV_REGEN, ids, -1, -1, 0.0)])
+
+
+def test_assert_event_parity_semantics():
+    """Decision fields are int-exact (a rank flip fails), values are
+    f32-close (an FMA-sized residue passes; a real delta fails)."""
+    col = EventCollector()
+    col.emit(3, EV_PLACE, 0, 1, 0, 5.0)
+    engine = [Event(seq=0, tick=3, kind=EV_PLACE, subject=0, aux=1,
+                    rank=0, value=5.0 + 1e-17)]
+    assert_event_parity(engine, col.events, total=1)        # residue ok
+    with pytest.raises(AssertionError, match="totals"):
+        assert_event_parity(engine, col.events, total=2)
+    bad_rank = [Event(seq=0, tick=3, kind=EV_PLACE, subject=0, aux=1,
+                      rank=1, value=5.0)]
+    with pytest.raises(AssertionError):
+        assert_event_parity(bad_rank, col.events)
+    bad_val = [Event(seq=0, tick=3, kind=EV_PLACE, subject=0, aux=1,
+                     rank=0, value=5.1)]
+    with pytest.raises(AssertionError, match="value"):
+        assert_event_parity(bad_val, col.events)
+
+
+# ---------------------------------------------------------------------------
+# zero-overhead contract: disabled => bitwise-equal + no extra carry
+# ---------------------------------------------------------------------------
+
+def test_trace_disabled_is_bitwise_free():
+    """Enabling the trace must not perturb ANY engine output — and with
+    `trace_slots=0` the outputs carry no trace keys at all."""
+    for sc, on, off in (
+        (_closed_scenario("spot"), _closed_cfg("spot"),
+         _closed_cfg("spot", trace_slots=0)),
+        (_traffic_scenario("spot"), _traffic_cfg("spot"),
+         _traffic_cfg("spot", trace_slots=0)),
+    ):
+        a = vecsim.run_scenarios([sc], off)
+        b = vecsim.run_scenarios([sc], on)
+        assert not any(k in a for k in TRACE_KEYS)
+        assert all(k in b for k in TRACE_KEYS)
+        for k, va in a.items():
+            if isinstance(va, dict):
+                continue
+            assert _bitwise_equal(va, b[k]), k
+
+
+def test_untraced_scan_carries_no_ring_state(monkeypatch):
+    """With `trace_slots=0` the tick scan's carry must not contain the
+    ring (`ev_i`/`ev_f`/`ev_head`) — statically absent, not zero-sized;
+    and the same keys DO appear once tracing is on."""
+    captured = []
+    orig = jax.lax.scan
+
+    def spy(f, init, xs=None, **kw):
+        if isinstance(init, dict):
+            captured.append(set(init.keys()))
+        return orig(f, init, xs, **kw)
+
+    monkeypatch.setattr(jax.lax, "scan", spy)
+    ring_keys = {"ev_i", "ev_f", "ev_head"}
+
+    # unique n_ticks force fresh traces so the spy sees the carry
+    tsc = _traffic_scenario("none")
+    vecsim.run_scenarios([tsc], _traffic_cfg("none", n_ticks=307,
+                                             trace_slots=0))
+    csc = _closed_scenario("none")
+    vecsim.run_scenarios([csc], _closed_cfg("none", n_ticks=309,
+                                            trace_slots=0))
+    assert captured, "spy saw no dict-carry scans (stale jit cache?)"
+    for keys in captured:
+        assert not (keys & ring_keys), keys & ring_keys
+
+    captured.clear()
+    vecsim.run_scenarios([tsc], _traffic_cfg("none", n_ticks=307))
+    vecsim.run_scenarios([csc], _closed_cfg("none", n_ticks=309))
+    assert any(keys & ring_keys for keys in captured)
+
+
+# ---------------------------------------------------------------------------
+# ring vs numpy replay oracle: scheduler x {path, faults} grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ("cash", "stock"))
+@pytest.mark.parametrize("faults", ("none", "spot"))
+def test_closed_trace_parity(scheduler, faults):
+    sc = _closed_scenario(faults)
+    cfg = _closed_cfg(faults, scheduler)
+    _, events, head = _run_and_decode(sc, cfg)
+    oracle_events, _, _ = replay_events(sc, cfg)
+    assert head > 0 and any(e.kind == EV_PLACE for e in events)
+    assert_event_parity(events, oracle_events, total=head)
+
+
+@pytest.mark.parametrize("scheduler", ("cash", "stock"))
+@pytest.mark.parametrize("faults", ("none", "spot"))
+def test_traffic_trace_parity(scheduler, faults):
+    sc = _traffic_scenario(faults)
+    cfg = _traffic_cfg(faults, scheduler)
+    _, events, head = _run_and_decode(sc, cfg)
+    oracle_events, _, _ = replay_events(sc, cfg)
+    assert head > 0 and any(e.kind == EV_PLACE for e in events)
+    if faults == "spot":
+        kinds = {e.kind for e in oracle_events}
+        assert ring.EV_PREEMPT in kinds     # the faults actually bite
+        if scheduler == "cash":
+            assert ring.EV_BLACKLIST in kinds
+    assert_event_parity(events, oracle_events, total=head)
+
+
+def test_trace_overwrite_tail_parity():
+    """An undersized ring (slots < total events) keeps exactly the LAST
+    `S` events — and that tail still matches the oracle replay's tail."""
+    sc = _traffic_scenario("none")
+    big = _traffic_cfg("none")
+    _, all_events, head = _run_and_decode(sc, big)
+    assert head > 0, "scenario recorded nothing"
+    small = _traffic_cfg("none", trace_slots=1)    # engine pads to width
+    out, tail_events, head2 = _run_and_decode(sc, small)
+    S = np.asarray(out["trace_ev_i"]).shape[1]
+    # the undersized ring really overflowed (else this test is vacuous)
+    assert head2 == head and len(tail_events) == min(head, S) < head
+    oracle_events, _, _ = replay_events(sc, small)
+    assert_event_parity(tail_events, oracle_events, total=head2)
+    # the retained tail is literally the end of the full stream
+    assert [e.key() for e in tail_events] == \
+        [e.key() for e in all_events[head - len(tail_events):]]
+
+
+@pytest.mark.parametrize("unroll", (2, 4))
+def test_traced_unroll_ring_bitwise(unroll):
+    """The k-unrolled tick scan records a bitwise-identical ring."""
+    sc = _traffic_scenario("spot")
+    a = vecsim.run_scenarios([sc], _traffic_cfg("spot", unroll=1))
+    b = vecsim.run_scenarios([sc], _traffic_cfg("spot", unroll=unroll))
+    for k, va in a.items():
+        if isinstance(va, dict):
+            continue
+        assert _bitwise_equal(va, b[k]), k
+
+
+def test_fused_unfused_trace_agree():
+    """The fused megatick threads the ring too: fused and unfused runs
+    produce the same decision stream, and both match the oracle."""
+    nodes = make_cluster(3, "t3.large", slots_per_node=2,
+                         cpu_initial_fraction=0.05)
+    sc = vecsim.build_scenario(nodes, _cpu_jobs(5, burst_all=True),
+                               submit="parallel")
+    evs = {}
+    for fusion in ("unfused", "fused"):
+        cfg = _closed_cfg("none", telemetry="oracle", fusion=fusion)
+        _, events, head = _run_and_decode(sc, cfg)
+        oracle_events, _, _ = replay_events(sc, cfg)
+        assert_event_parity(events, oracle_events, total=head)
+        evs[fusion] = events
+    assert [e.key() for e in evs["fused"]] == \
+        [e.key() for e in evs["unfused"]]
+
+
+# ---------------------------------------------------------------------------
+# shard_map bitwise parity (forced devices need a fresh process)
+# ---------------------------------------------------------------------------
+
+_TRACE_SHARD_SCRIPT = textwrap.dedent("""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro import sweep
+    from repro.core import vecsim
+    from repro.core.cluster import make_cluster
+    from repro.traffic import arrivals
+
+    tmpl = arrivals.make_template(6, seed=3)
+
+    def builder(rng_seed):
+        fleet = make_cluster(4, "t3.large", slots_per_node=3,
+                             cpu_initial_fraction=0.3)
+        return arrivals.build_traffic_scenario(fleet, tmpl, mode="poisson",
+                                               rate=0.05,
+                                               rng_seed=rng_seed)
+
+    spec = sweep.SweepSpec(builder, axes={"rng_seed": list(range(4))},
+                           base=vecsim.VecSimConfig(
+                               n_ticks=300, dt=5.0, traffic="poisson",
+                               table_slots=24, slo_bins=16,
+                               trace_slots=4096))
+    a = sweep.run_sweep(spec.groups(), shards=1)
+    b = sweep.run_sweep(spec.groups(), shards=2)
+    for key in ("trace_ev_i", "trace_ev_f", "trace_head"):
+        ka = np.asarray(a.groups[0].outputs[key])
+        kb = np.asarray(b.groups[0].outputs[key])
+        assert np.array_equal(ka, kb), key
+    assert np.asarray(a.groups[0].outputs["trace_head"]).min() > 0
+    sa, sb = a.scalars(), b.scalars()
+    for k in sa:
+        ka, kb = np.asarray(sa[k]), np.asarray(sb[k])
+        eq = (np.array_equal(ka, kb, equal_nan=True)
+              if ka.dtype.kind == "f" else np.array_equal(ka, kb))
+        assert eq, k
+    print("BITWISE_OK")
+""")
+
+
+def test_traced_shard_map_bitwise_subprocess():
+    """A traced sweep sharded 2-way over the scenario axis reproduces
+    the unsharded rings bit for bit (the ring is just more carried
+    per-scenario state — shard_map must not reorder or renumber it)."""
+    proc = subprocess.run([sys.executable, "-c", _TRACE_SHARD_SCRIPT],
+                          capture_output=True, text=True,
+                          env=_subprocess_env(2), timeout=300)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "BITWISE_OK" in proc.stdout
+
+
+def _subprocess_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    flags = " ".join(f for f in env.get("XLA_FLAGS", "").split()
+                     if "xla_force_host_platform_device_count" not in f)
+    env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count="
+                        + str(n_devices)).strip()
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# host side: bundle round-trip, Perfetto/JSONL export, runner spans
+# ---------------------------------------------------------------------------
+
+def test_trace_bundle_and_exports(tmp_path):
+    sc = _traffic_scenario("none")
+    cfg = _traffic_cfg("none")
+    out, events, head = _run_and_decode(sc, cfg)
+    bundle = obstrace.save_trace(tmp_path / "t.npz", cfg, sc, out)
+    cfg2, sc2, events2, head2 = obstrace.load_trace(bundle)
+    assert cfg2 == cfg and head2 == head
+    assert [dataclass_tuple(e) for e in events2] == \
+        [dataclass_tuple(e) for e in events]
+    assert set(sc2) == set(sc)
+
+    # runner spans + device events on one Perfetto timeline
+    tr = SpanTracer()
+    with tr.span("chunk-compute", group=0, chunk=1):
+        tr.instant("lease-renew", renewed=2)
+    pf = obstrace.export_perfetto(tmp_path / "t.json", events=events,
+                                  dt=cfg.dt, spans=tr.snapshot())
+    doc = json.loads(pf.read_text())
+    rows = doc["traceEvents"]
+    dev = [r for r in rows if r.get("cat") == "device"]
+    run = [r for r in rows if r.get("cat") == "runner"]
+    assert len(dev) == len(events) and dev[0]["pid"] == 1
+    assert {r["name"] for r in run} == {"chunk-compute", "lease-renew"}
+    assert all(r["pid"] == 2 for r in run)
+    x = next(r for r in run if r["name"] == "chunk-compute")
+    assert x["ph"] == "X" and x["dur"] >= 0
+    # sim-time instants land at tick * dt microseconds
+    e0 = events[0]
+    assert any(r["ts"] == pytest.approx(e0.tick * cfg.dt * 1e6)
+               for r in dev)
+
+    jl = obstrace.export_jsonl(tmp_path / "t.jsonl", events=events,
+                               dt=cfg.dt, spans=tr.snapshot())
+    lines = [json.loads(x) for x in jl.read_text().splitlines()]
+    assert sum(x["src"] == "device" for x in lines) == len(events)
+    assert sum(x["src"] == "runner" for x in lines) == 2
+
+
+def dataclass_tuple(e):
+    return (e.seq, e.tick, e.kind, e.subject, e.aux, e.rank,
+            np.float32(e.value))
+
+
+def test_runner_emits_spans(tmp_path):
+    """`run_sweep` with a tracer lands claim / chunk-compute /
+    chunk-write spans (checkpointed path) that export cleanly."""
+    from repro import sweep as sweeplib
+
+    def builder(seed):
+        nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                             cpu_initial_fraction=0.3)
+        return vecsim.build_scenario(nodes, _cpu_jobs(seed, n_jobs=1),
+                                     submit="parallel")
+
+    tr = SpanTracer()
+    spec = sweeplib.SweepSpec(builder, axes={"seed": [0, 1]},
+                              base=vecsim.VecSimConfig(n_ticks=150,
+                                                       dt=5.0))
+    res = sweeplib.run_sweep(
+        spec, sweeplib.RunnerOptions(tracer=tr, chunk_size=1,
+                                     checkpoint_dir=str(tmp_path / "ck")))
+    assert bool(res.scalars()["all_done"].all())
+    names = {s.name for s in tr.snapshot()}
+    assert {"claim", "chunk-compute", "chunk-write"} <= names
+    pf = obstrace.export_perfetto(tmp_path / "spans.json",
+                                  spans=tr.snapshot())
+    assert json.loads(pf.read_text())["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# explainer CLI
+# ---------------------------------------------------------------------------
+
+def test_explain_cli(tmp_path, capsys):
+    from repro.obs import explain
+
+    sc = _traffic_scenario("none")
+    cfg = _traffic_cfg("none")
+    out, events, _ = _run_and_decode(sc, cfg)
+    bundle = obstrace.save_trace(tmp_path / "t.npz", cfg, sc, out)
+    tick = next(e.tick for e in events if e.kind == EV_PLACE)
+
+    rc = explain.main([str(bundle), "--tick", str(tick)])
+    got = capsys.readouterr().out
+    assert rc == 0
+    assert "agreement" in got and "place:" in got
+    assert "placement order" in got         # pre-placement snapshot
+
+    assert explain.main([str(bundle), "--tick",
+                         str(cfg.n_ticks + 5)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + poisoned-row accounting (sweep/results.py)
+# ---------------------------------------------------------------------------
+
+def test_registry_validates_engine_outputs():
+    """Every engine output — closed and traffic, traced — is a declared
+    metric with a matching dtype kind; unknown keys are rejected."""
+    tout = vecsim.run_scenarios([_traffic_scenario("none")],
+                                _traffic_cfg("none"))
+    cout = vecsim.run_scenarios([_closed_scenario("none")],
+                                _closed_cfg("none"))
+    for out in (tout, cout):
+        registry.validate_outputs(out)
+        with pytest.raises(ValueError, match="undeclared"):
+            registry.validate_outputs({**out, "bogus": np.zeros(1)})
+    with pytest.raises(ValueError, match="kind"):
+        registry.validate_outputs({"makespan": np.zeros(1, np.int32)})
+    spec = registry.spec("trace_head")
+    assert spec.unit == "events"
+    assert "makespan" in registry.scalar_names()
+    assert "trace_head" not in registry.scalar_names()
+
+
+def test_poisoned_rows_warn_and_flag(tmp_path):
+    """NaN-filled quarantined rows surface as a load-time warning, a
+    `poisoned` flag per tidy row, and `n_poisoned` in the meta."""
+    from repro import sweep as sweeplib
+    from repro.sweep.results import SweepResult
+
+    def builder(seed):
+        nodes = make_cluster(2, "t3.large", slots_per_node=2,
+                             cpu_initial_fraction=0.3)
+        return vecsim.build_scenario(nodes, _cpu_jobs(seed, n_jobs=1),
+                                     submit="parallel")
+
+    spec = sweeplib.SweepSpec(builder, axes={"seed": [0, 1]},
+                              base=vecsim.VecSimConfig(n_ticks=150,
+                                                       dt=5.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # clean sweep: no warning
+        res = sweeplib.run_sweep(spec)
+    assert res.n_poisoned == 0
+    tidy = res.to_tidy()
+    assert tidy["meta"]["n_poisoned"] == 0
+    assert not any(r["poisoned"] for r in tidy["points"])
+
+    g = res.groups[0]
+    g.outputs["makespan"] = np.asarray(g.outputs["makespan"],
+                                       float).copy()
+    g.outputs["makespan"][0] = np.nan
+    with pytest.warns(UserWarning, match="poisoned"):
+        res2 = SweepResult(res.axes, res.groups, res.meta)
+    assert res2.n_poisoned == 1
+    res2.save(str(tmp_path / "sweep"))
+    with pytest.warns(UserWarning, match="poisoned"):
+        res3 = SweepResult.load(str(tmp_path / "sweep"))
+    t3 = res3.to_tidy()
+    assert t3["meta"]["n_poisoned"] == 1
+    assert sum(r["poisoned"] for r in t3["points"]) == 1
