@@ -21,7 +21,10 @@ section (benchmarks/traffic_bench.py) tracks the open-loop ring-buffer
 engine: CASH-vs-stock SLO tails plus throughput relative to the
 closed-batch path. A ``"churn"`` section (benchmarks/churn_bench.py)
 tracks CASH vs credit-blind placement under preemption churn on
-identical fault streams (wasted work, goodput, re-executions).
+identical fault streams (wasted work, goodput, re-executions). A
+``"serve"`` section (benchmarks/serve_bench.py) tracks the vectorized
+serving fleet: engine throughput vs the Python replay loop, plus
+CASH-vs-round-robin admission tails and $/Mtok.
 """
 from __future__ import annotations
 
@@ -106,7 +109,7 @@ def _merged_bench(path: pathlib.Path, mode: str, stats: dict) -> dict:
                                  if k != "mode"}
         else:
             doc = {k: v for k, v in prev.items()
-                   if k in ("fast", "full", "traffic", "churn")}
+                   if k in ("fast", "full", "traffic", "churn", "serve")}
     # mesh topology rides in THIS mode's meta: sharded throughput numbers
     # are only comparable across machines with the same device layout, and
     # the other mode's section may have been written on different hardware.
@@ -159,6 +162,7 @@ def main(argv=None) -> None:
         fig11_cost,
         kernels_bench,
         roofline,
+        serve_bench,
         sweep_smoke,
         tables,
         traffic_bench,
@@ -259,6 +263,31 @@ def main(argv=None) -> None:
         doc["churn"] = dict(cstats, meta=_topo())
     except Exception as e:  # noqa: BLE001
         failures.append(("churn_bench", e))
+        traceback.print_exc()
+    try:
+        sstats = serve_bench.run(fast=args.fast)
+        if args.fast:
+            # the ISSUE-10 acceptance gate, re-checked at the driver
+            # level: the vectorized serving-fleet engine must clear 50x
+            # over the Python replay loop (serve_bench also asserts it)
+            sp = float(sstats.get("speedup_vs_python_loop", 0.0))
+            if sp < serve_bench.SPEEDUP_FLOOR:
+                failures.append(("serve_speedup", AssertionError(
+                    f"serving engine speedup {sp:.1f}x < "
+                    f"{serve_bench.SPEEDUP_FLOOR:.0f}x vs Python loop")))
+        if doc is None:
+            doc = _merged_bench(out_path, mode, {})
+            doc.pop(mode, None)
+        from repro.sweep import mesh_topology as _stopo
+
+        sstats = dict(sstats)
+        smeta = _stopo()
+        sengine = sstats.pop("engine", None)
+        if sengine is not None:
+            smeta["engine"] = sengine
+        doc["serve"] = dict(sstats, meta=smeta)
+    except Exception as e:  # noqa: BLE001
+        failures.append(("serve_bench", e))
         traceback.print_exc()
     if doc is not None:
         doc["provenance"] = _provenance()

@@ -1,0 +1,467 @@
+"""Vectorized credit-aware serving fleet: the jitted `lax.scan` engine.
+
+`core.vecsim` vectorized the batch-scheduling simulator; this module does
+the same for the SERVING-FLEET scenario (`sched.serve_scheduler` /
+`serve.engine`): R inference replicas, each a token bucket in token/s
+units (burstable hosts — decode throughput throttles when credits run
+dry), serving an open-loop request stream under continuous batching.
+
+The mapping onto the vecsim machinery, piece for piece:
+
+  * **replicas = credit nodes.** A replica's sustained decode rate is its
+    bucket ``baseline``; prefill bursts drain the balance at up to
+    ``burst`` tokens/s (`kernels.bucket_serve._serve_math`, the exact
+    arithmetic of `core.token_bucket.TokenBucket.serve`).
+  * **KV slots = the slot resource.** Each replica holds ``cfg.kv_slots``
+    KV-cache slots (`serve.kv_cache.KVCacheManager`'s accounting,
+    collapsed to an occupancy counter); a request occupies one slot from
+    placement to release, and slots recycle exactly like vecsim's
+    ring-buffer table slots.
+  * **requests = two-phase jobs.** A request carries prefill tokens (its
+    prompt) then decode tokens; while prefill remains it demands
+    ``dpre`` tokens/s (compute-dense, the paper's map-like burst
+    annotation), afterwards ``ddec`` (the steady decode trickle). A
+    request whose prefill AND decode both hit zero releases — and frees
+    its KV slot — at the NEXT tick, vecsim's release-at-k+1 contract.
+  * **CASH admission = Algorithm 1 on the fleet.** Queued requests admit
+    to the credit-richest replica first (`sched.serve_scheduler
+    .admission_order`, replica-id tie-break) — prefill is the burst, so
+    it lands where headroom lives. The credit-blind baseline is
+    round-robin: one KV slot per replica per rotation pass, origin
+    carried in ``rr_ptr``, advanced by the number placed. The scheduler
+    is a STATIC axis (``cfg.scheduler``: ``"cash" | "rr"``), so a sweep
+    compares both on the identical arrival stream.
+  * **open-loop traffic** reuses `traffic.arrivals` unchanged: the
+    poisson / diurnal admission-count stream is drawn inside the
+    compiled program and fed to the scan as xs; excess arrivals beyond
+    the free request-table slots are dropped (load shedding).
+
+The per-tick hot path — admission rank + KV-slot assign + bucket-
+throttled serve + release detection — exists twice, bitwise-equal:
+
+  * **unfused**: the vecsim packed-cumsum placement (`_pack_counts` /
+    `_rr_table` rank->replica tables) + the `ops.bucket_serve_distribute`
+    fused serve, the fast formulation on CPU;
+  * **fused**: ONE `ops.serve_admit` kernel call (`kernels.serve_admit`,
+    a single `pl.pallas_call` on TPU with the XLA reference behind the
+    same dispatcher) covering all of it, the `ops.megatick` pattern.
+
+``cfg.fusion="auto"`` picks unfused on CPU and fused on TPU (same
+measured rationale as `vecsim.fusion_choice`); `serve_fusion_choice`
+takes an explicit ``platform`` so the decision is unit-testable.
+
+Correctness is anchored three ways (tests/test_servesim.py):
+`serve.oracle.ServeFleetOracle` — a plain-Python replay over real
+`KVCacheManager` instances and `admission_order` — matches float64-
+exactly; fused matches unfused bitwise; and the decision trace
+(`repro.obs.ring`, admission / release / throttle events) matches the
+oracle's `EventCollector` event-for-event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vecsim import (
+    _INF,
+    _gather_phase_nodes,
+    _node_orders,
+    _pack_counts,
+    _pack_table,
+    _rank_desc,
+    _rr_table,
+    _slo_hist_update,
+)
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSimConfig:
+    """Static (compile-time) serving-fleet configuration. One `run_batch`
+    covers scenarios sharing these; sweep the rest via the batch axis.
+    Field names are duck-compatible with `traffic.arrivals.arrival_counts`
+    and `traffic.slo.edges_for`."""
+    dt: float = 1.0
+    n_ticks: int = 4096
+    scheduler: str = "cash"          # cash | rr (credit-blind round-robin)
+    traffic: str = "poisson"         # poisson | diurnal (stochastic only)
+    kv_slots: int = 4                # KV-cache slots per replica
+    table_slots: int = 0             # request ring capacity (0 = 2*R*kv)
+    slo_bins: int = 64               # latency/queue-wait histogram bins
+    slo_max_s: float = 0.0           # histogram upper edge (0 = horizon)
+    impl: str = "auto"               # kernel path (ops.*: xla|pallas|...)
+    fusion: str = "auto"             # auto | fused | unfused
+    unroll: int = 1                  # ticks unrolled per lax.scan step
+    seed: int = 0                    # arrival-stream base key
+    trace_slots: int = 0             # decision-trace ring (0 = no trace)
+
+
+def serve_fusion_choice(cfg: ServeSimConfig,
+                        platform: Optional[str] = None) -> str:
+    """Resolve ``cfg.fusion`` for the serving tick: ``"fused"``
+    (ops.serve_admit) or ``"unfused"``. Unlike the vecsim megatick there
+    is no eligibility gate — both policies fit the kernel — so the only
+    question is the platform: the fused (C, R) interval/one-hot matrices
+    lose to the packed cumsum + table gather on CPU (the same measured
+    trade as `vecsim.fusion_choice`), so ``"auto"`` fuses on TPU only.
+    ``platform`` overrides ``jax.default_backend()`` for unit tests."""
+    if cfg.fusion in ("fused", "unfused"):
+        return cfg.fusion
+    if cfg.fusion != "auto":
+        raise ValueError(f"fusion must be auto|fused|unfused, "
+                         f"got {cfg.fusion!r}")
+    plat = jax.default_backend() if platform is None else platform
+    return "fused" if plat == "tpu" else "unfused"
+
+
+def _simulate_serve(cfg: ServeSimConfig,
+                    sc: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """One serving-fleet scenario under `lax.scan` (vmapped by
+    `batched_engine`). Mirrors `vecsim._simulate_traffic`'s tick shape:
+    release -> arrivals -> admission+serve -> trace."""
+    from repro.obs import ring as _obsring
+    from repro.traffic import arrivals as _arrivals
+    from repro.traffic import slo as _slo
+
+    if cfg.scheduler not in ("cash", "rr"):
+        raise NotImplementedError(
+            f"serving fleet supports cash|rr, got {cfg.scheduler!r}")
+    if cfg.traffic not in ("poisson", "diurnal"):
+        raise NotImplementedError(
+            "serving-fleet traffic is stochastic only (poisson|diurnal), "
+            f"got {cfg.traffic!r}")
+    if cfg.kv_slots < 1:
+        raise ValueError("kv_slots must be >= 1")
+
+    R = sc["rep_balance0"].shape[0]
+    dtype = sc["rep_balance0"].dtype
+    dt = cfg.dt
+    C = cfg.table_slots if cfg.table_slots > 0 else 2 * R * cfg.kv_slots
+    B = cfg.slo_bins
+    policy = cfg.scheduler
+    fused = serve_fusion_choice(cfg) == "fused"
+
+    edges = jnp.asarray(_slo.edges_for(cfg), dtype)
+    rids = jnp.arange(R, dtype=jnp.int32)
+    cidx = jnp.arange(C, dtype=jnp.int32)
+    zero_s = jnp.zeros((), dtype)
+
+    # the whole admission-count stream, derived inside the compiled
+    # program — the SAME stream `traffic` scenarios draw (shared key tag)
+    counts = _arrivals.arrival_counts(cfg, sc, dtype)
+
+    state = {
+        # --- ring-buffer request table (C,) -------------------------------
+        "rq_pre": jnp.zeros(C, dtype),          # remaining prefill tokens
+        "rq_dec": jnp.zeros(C, dtype),          # remaining decode tokens
+        "rq_dpre": jnp.zeros(C, dtype),         # prefill demand (tok/s)
+        "rq_ddec": jnp.zeros(C, dtype),         # decode demand (tok/s)
+        "rq_tmpl": jnp.full(C, -1, jnp.int32),  # template row (-1 = free)
+        "rq_rank": jnp.zeros(C, jnp.int32),     # FIFO queue rank
+        "rq_submit": jnp.zeros(C, dtype),
+        "rq_start": jnp.full(C, _INF, dtype),   # first placement time
+        "rq_rep": jnp.full(C, -1, jnp.int32),   # resident replica
+        # --- replica fleet (R,) -------------------------------------------
+        "occ": jnp.zeros(R, jnp.int32),         # occupied KV slots
+        "rel_cnt": jnp.zeros(R, jnp.int32),     # slots freeing next tick
+        "bal": sc["rep_balance0"],
+        "sur": jnp.zeros(R, dtype),
+        # --- queue / rotation / stream counters ---------------------------
+        "qlen": jnp.int32(0),
+        "rr_ptr": jnp.int32(0),
+        "n_seen": jnp.int32(0), "n_adm": jnp.int32(0),
+        "n_done": jnp.int32(0),
+        "tok_pre": zero_s, "tok_dec": zero_s, "busy": zero_s,
+        "hist2": jnp.zeros(2 * B, jnp.int32),   # [lat_hist; wait_hist]
+        "lat_sum": zero_s, "wait_sum": zero_s,
+        "lat_max": zero_s, "wait_max": zero_s,
+        "last_rel": jnp.full((), -jnp.inf, dtype),
+    }
+
+    tracing = cfg.trace_slots > 0
+    if tracing:
+        # SLO_OVER(C) + RELEASE(C) + DROP(1) + PLACE(C) + DEPLETE/REGEN(2R)
+        width = 3 * C + 1 + 2 * R
+        state["ev_i"], state["ev_f"], state["ev_head"] = \
+            _obsring.ring_init(max(cfg.trace_slots, width))
+
+    # stacked float template columns: ONE (4, C) gather per tick
+    tmplf = jnp.stack([sc["tmpl_pre"], sc["tmpl_dec"],
+                       sc["tmpl_dpre"], sc["tmpl_ddec"]])
+
+    def tick(st, inp):
+        t, k_t = inp
+        now = t.astype(dtype) * dt
+
+        # ---- 1) release: finished requests free their KV slots -----------
+        occupied = st["rq_tmpl"] >= 0
+        fin_now = occupied & (st["rq_rep"] >= 0) \
+            & (st["rq_pre"] <= 1e-9) & (st["rq_dec"] <= 1e-9)
+        nfin = jnp.sum(fin_now, dtype=jnp.int32)
+        if tracing:
+            lat_all = now - st["rq_submit"]
+            slo_over = fin_now & (lat_all >= edges[-1])
+            node_pre = st["rq_rep"]
+        hadd, sums, maxs = _slo_hist_update(edges, nfin, fin_now, now,
+                                            st["rq_start"], st["rq_submit"])
+        hist2 = st["hist2"] + hadd
+        n_done = st["n_done"] + nfin
+        lat_sum = st["lat_sum"] + sums[0]
+        wait_sum = st["wait_sum"] + sums[1]
+        lat_max = jnp.maximum(st["lat_max"], maxs[0])
+        wait_max = jnp.maximum(st["wait_max"], maxs[1])
+        last_rel = jnp.where(nfin > 0, now, st["last_rel"])
+        rq_tmpl = jnp.where(fin_now, -1, st["rq_tmpl"])
+        rq_rep = jnp.where(fin_now, -1, st["rq_rep"])
+        occ = st["occ"] - st["rel_cnt"]
+
+        # ---- 2) arrivals into free table slots, lowest index first -------
+        free_slot = rq_tmpl < 0
+        frank = jnp.cumsum(free_slot.astype(jnp.int32)) - 1
+        adm = free_slot & (frank < k_t)
+        aidx = st["n_seen"] + frank
+        trow = jnp.mod(aidx, jnp.maximum(sc["tmpl_n"], 1)).astype(jnp.int32)
+        cols = tmplf[:, trow]                                # (4, C)
+        rq_pre = jnp.where(adm, cols[0], st["rq_pre"])
+        rq_dec = jnp.where(adm, cols[1], st["rq_dec"])
+        rq_dpre = jnp.where(adm, cols[2], st["rq_dpre"])
+        rq_ddec = jnp.where(adm, cols[3], st["rq_ddec"])
+        rq_tmpl = jnp.where(adm, trow, rq_tmpl)
+        rq_submit = jnp.where(adm, now, st["rq_submit"])
+        n_new = jnp.minimum(k_t, jnp.sum(free_slot, dtype=jnp.int32))
+        rq_rank = jnp.where(adm, st["qlen"] + frank, st["rq_rank"])
+        qlen = st["qlen"] + n_new
+        n_seen = st["n_seen"] + k_t
+        n_adm = st["n_adm"] + n_new
+
+        # ---- 3) admission + serve (the fused/unfused hot path) -----------
+        pending = (rq_tmpl >= 0) & (rq_rep < 0)
+        free = cfg.kv_slots - occ                            # (R,) int32
+        bal0 = st["bal"]
+        if fused:
+            (assign, taken, n_placed, inc_pre, inc_dec, new_pre, new_dec,
+             fin, _w, new_bal, sur_add) = ops.serve_admit(
+                pending, rq_rank, rq_rep, rq_pre, rq_dec, rq_dpre, rq_ddec,
+                bal0, sc["rep_baseline"], sc["rep_burst"],
+                sc["rep_capacity"], sc["rep_unlimited"], free, qlen,
+                st["rr_ptr"], dt=dt, policy=policy,
+                max_rounds=cfg.kv_slots, impl=cfg.impl)
+            rq_rep = jnp.where(assign >= 0, assign, rq_rep)
+            running = rq_rep >= 0
+            onehot = jnp.where((rq_rep[:, None] == rids[None, :])
+                               & running[:, None], jnp.ones((), dtype), 0.0)
+        else:
+            ls = R * cfg.kv_slots
+            if policy == "cash":
+                desc, _ = _node_orders(bal0)
+                cum, taken = _pack_counts(desc, free, qlen)
+                total, table = cum[-1], _pack_table(desc, cum, ls)
+            else:
+                order = jnp.mod(st["rr_ptr"] + rids, R)
+                total, table, taken = _rr_table(order, free, qlen,
+                                                cfg.kv_slots, ls)
+            assign = _gather_phase_nodes([table], [total], [pending],
+                                         [rq_rank], ls)
+            n_placed = jnp.minimum(total, qlen)
+            # serve: phase-dependent demand, bucket throttle, pro-rata —
+            # expression-for-expression the kernel's serve_admit_math
+            rq_rep = jnp.where(assign >= 0, assign, rq_rep)
+            running = rq_rep >= 0
+            nidx = jnp.clip(rq_rep, 0, R - 1)
+            in_pre = rq_pre > 1e-9
+            live = in_pre | (rq_dec > 1e-9)
+            dem_i = jnp.where(in_pre, rq_dpre, rq_ddec)
+            onehot = jnp.where((rq_rep[:, None] == rids[None, :])
+                               & running[:, None], jnp.ones((), dtype), 0.0)
+            col = jnp.where(running & live, dem_i, 0.0)
+            dem_node = jax.lax.dot_general(
+                col[None, :], onehot, (((1,), (0,)), ((), ())),
+                preferred_element_type=dtype)[0]
+            share, _w, new_bal, sur_add = ops.bucket_serve_distribute(
+                bal0, dem_node, sc["rep_baseline"], sc["rep_burst"],
+                sc["rep_capacity"], sc["rep_unlimited"], nidx, dem_i,
+                dt=dt, impl=cfg.impl)
+            # balance snaps to the 2^-10 grid every tick (see
+            # kernels.serve_admit): it orders the cash admission sort, so
+            # FMA-vs-two-roundings ulps must not accumulate in the carry
+            new_bal = jnp.round(new_bal * 1024.0) / 1024.0
+            share = jnp.where(running & live, share, 0.0)
+            inc_pre = jnp.where(in_pre, jnp.minimum(share, rq_pre), 0.0)
+            inc_dec = jnp.where(~in_pre, jnp.minimum(share, rq_dec), 0.0)
+            new_pre = rq_pre - inc_pre
+            new_dec = rq_dec - inc_dec
+            fin = running & (new_pre <= 1e-9) & (new_dec <= 1e-9)
+
+        placed = assign >= 0
+        rq_start = jnp.where(placed, now, st["rq_start"])
+        # placement consumed ranks [0, n_placed): shift survivors down so
+        # the queue stays contiguous from 0 (placed slots keep a stale
+        # rank, never read while running)
+        rq_rank = jnp.where(pending, rq_rank - n_placed, rq_rank)
+        qlen = qlen - n_placed
+        rr_ptr = jnp.mod(st["rr_ptr"] + n_placed, R)
+        occ = occ + taken
+        # next tick's KV-slot frees, by replica (outside the fusion
+        # boundary: the onehot is needed for this either way)
+        rel_cnt = jax.lax.dot_general(
+            jnp.where(fin, jnp.ones((), dtype), 0.0), onehot,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=dtype).astype(jnp.int32)
+
+        new_st = {
+            "rq_pre": new_pre, "rq_dec": new_dec,
+            "rq_dpre": rq_dpre, "rq_ddec": rq_ddec,
+            "rq_tmpl": rq_tmpl, "rq_rank": rq_rank,
+            "rq_submit": rq_submit, "rq_start": rq_start, "rq_rep": rq_rep,
+            "occ": occ, "rel_cnt": rel_cnt,
+            "bal": new_bal, "sur": st["sur"] + sur_add,
+            "qlen": qlen, "rr_ptr": rr_ptr,
+            "n_seen": n_seen, "n_adm": n_adm, "n_done": n_done,
+            "tok_pre": st["tok_pre"] + jnp.sum(inc_pre),
+            "tok_dec": st["tok_dec"] + jnp.sum(inc_dec),
+            "busy": st["busy"] + jnp.sum((occ > 0).astype(dtype)) * dt,
+            "hist2": hist2,
+            "lat_sum": lat_sum, "wait_sum": wait_sum,
+            "lat_max": lat_max, "wait_max": wait_max,
+            "last_rel": last_rel,
+        }
+
+        # ---- 4) decision trace: one masked scatter per tick --------------
+        if tracing:
+            dep = (bal0 > 1e-9) & (new_bal <= 1e-9)
+            reg = (bal0 <= 1e-9) & (new_bal > 1e-9)
+            dropped = (k_t - n_new).astype(jnp.int32)
+            if policy == "cash":
+                nsel = jnp.clip(assign, 0, R - 1)
+                tr_rank, tr_val = _rank_desc(bal0)[nsel], bal0[nsel]
+            else:     # round-robin never consults credits: rank = replica
+                tr_rank, tr_val = assign, jnp.zeros(C, dtype)
+            blocks = [
+                (slo_over, _obsring.EV_SLO_OVER, cidx, -1, -1, lat_all),
+                (fin_now, _obsring.EV_RELEASE, cidx, node_pre, -1, lat_all),
+                ((dropped > 0)[None], _obsring.EV_DROP, -1, dropped, -1,
+                 0.0),
+                (placed, _obsring.EV_PLACE, cidx, assign, tr_rank, tr_val),
+                (dep, _obsring.EV_DEPLETE, rids, -1, -1, new_bal),
+                (reg, _obsring.EV_REGEN, rids, -1, -1, new_bal),
+            ]
+            (new_st["ev_i"], new_st["ev_f"],
+             new_st["ev_head"]) = _obsring.record_blocks(
+                st["ev_i"], st["ev_f"], st["ev_head"], t, blocks)
+        return new_st, None
+
+    xs_t = jnp.arange(cfg.n_ticks, dtype=jnp.int32)
+    st, _ = jax.lax.scan(tick, state, (xs_t, counts),
+                         unroll=max(1, cfg.unroll))
+
+    all_done = st["n_done"] == st["n_adm"]     # open stream: drained
+    makespan = jnp.where(all_done,
+                         jnp.where(st["n_done"] > 0, st["last_rel"], 0.0),
+                         cfg.n_ticks * dt)
+    out = {
+        "makespan": makespan,
+        "all_done": all_done,
+        "surplus_credits": jnp.sum(st["sur"]),
+        "node_busy_seconds": st["busy"],
+        "n_arrived": st["n_seen"],
+        "n_admitted": st["n_adm"],
+        "n_dropped": st["n_seen"] - st["n_adm"],
+        "n_completed": st["n_done"],
+        "lat_hist": st["hist2"][:B], "wait_hist": st["hist2"][B:],
+        "lat_sum": st["lat_sum"], "wait_sum": st["wait_sum"],
+        "lat_max": st["lat_max"], "wait_max": st["wait_max"],
+        "last_finish": st["last_rel"],
+        "tokens_prefilled": st["tok_pre"],
+        "tokens_decoded": st["tok_dec"],
+    }
+    if tracing:
+        out["trace_ev_i"] = st["ev_i"]
+        out["trace_ev_f"] = st["ev_f"]
+        out["trace_head"] = st["ev_head"]
+    return out
+
+
+def batched_engine(cfg: ServeSimConfig):
+    """The whole-batch device program: the vmapped serving tick engine.
+    Both the single-device jit path and the sharded mesh path execute
+    this one callable — bitwise parity between them is structural."""
+    sim = functools.partial(_simulate_serve, cfg)
+
+    def engine(arrays: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        return jax.vmap(sim)(arrays)
+
+    return engine
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_engine(cfg: ServeSimConfig):
+    return jax.jit(batched_engine(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_engine(cfg: ServeSimConfig, n_shards: int):
+    """jit(shard_map(batched_engine)) over the scenario mesh — the
+    `sweep.mesh._sharded_engine` construction, on the serving engine."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.sweep import mesh as _mesh
+    spec = PartitionSpec(_mesh.SCENARIO_AXIS)
+    # check_rep=False for the same reason as sweep.mesh: the replication
+    # checker has no rule for jax.random.poisson's while loop, and every
+    # input/output is fully partitioned along the scenario axis
+    fn = shard_map(batched_engine(cfg), mesh=_mesh.scenario_mesh(n_shards),
+                   in_specs=spec, out_specs=spec, check_rep=False)
+    return jax.jit(fn)
+
+
+def batch_arrays(batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """The batch entries the engine maps over (metadata stripped)."""
+    return {k: v for k, v in batch.items() if k != "_meta"}
+
+
+def finalize_outputs(out, cfg: ServeSimConfig) -> Dict[str, np.ndarray]:
+    """Device outputs -> numpy, plus the SLO percentile reductions over
+    the latency/queue-wait histograms (`traffic.slo`)."""
+    from repro.traffic import slo as _slo
+    res = jax.tree_util.tree_map(np.asarray, out)
+    _slo.attach_percentiles(res, cfg)
+    return res
+
+
+def run_batch(batch: Dict[str, np.ndarray],
+              cfg: ServeSimConfig) -> Dict[str, np.ndarray]:
+    """Run a stacked serving-fleet batch (`traffic.arrivals
+    .stack_serve_scenarios`) under one static config. Returns arrays with
+    a leading scenario axis — the registry-declared scalar/histogram keys
+    plus lat/wait percentiles."""
+    arrays = {k: jnp.asarray(v) for k, v in batch_arrays(batch).items()}
+    return finalize_outputs(_jitted_engine(cfg)(arrays), cfg)
+
+
+def run_batch_sharded(batch: Dict[str, np.ndarray], cfg: ServeSimConfig,
+                      n_shards: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """`run_batch` dispatched over the ``scenario`` mesh axis: the batch
+    pads to a multiple of the shard count (repeating row 0) and each
+    device scans its block. Bitwise-equal to `run_batch` per scenario —
+    same `batched_engine` callable under `shard_map`."""
+    from repro.sweep import mesh as _mesh
+    n = _mesh.device_count() if n_shards is None else n_shards
+    arrays = {k: np.asarray(v) for k, v in batch_arrays(batch).items()}
+    padded, b = _mesh.pad_scenario_axis(arrays, n)
+    out = _sharded_engine(cfg, n)(
+        {k: jnp.asarray(v) for k, v in padded.items()})
+    out = jax.tree_util.tree_map(lambda v: np.asarray(v)[:b], out)
+    return finalize_outputs(out, cfg)
+
+
+def run_scenarios(scenarios: Sequence[Dict[str, np.ndarray]],
+                  cfg: ServeSimConfig) -> Dict[str, np.ndarray]:
+    """Convenience: stack + run in one call."""
+    from repro.traffic import arrivals as _arrivals
+    return run_batch(_arrivals.stack_serve_scenarios(scenarios), cfg)

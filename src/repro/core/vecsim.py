@@ -562,10 +562,18 @@ def fusion_eligible(cfg: VecSimConfig,
 
 
 def fusion_choice(cfg: VecSimConfig,
-                  active: Tuple[bool, bool, bool, bool, bool]) -> str:
+                  active: Tuple[bool, bool, bool, bool, bool],
+                  platform: Optional[str] = None) -> str:
     """Resolve ``cfg.fusion`` to the tick implementation that will run:
     ``"fused"`` (ops.megatick) or ``"unfused"``. ``fusion="fused"`` on an
-    ineligible configuration raises rather than silently diverging."""
+    ineligible configuration raises rather than silently diverging.
+
+    ``platform`` overrides the backend the ``"auto"`` policy consults
+    (``jax.default_backend()`` when None) — BENCH_vecsim.json
+    ``tick_phases`` measured the fused megatick ~1.9x SLOWER than the
+    unfused tick on CPU (the (T, N) interval matrix loses to the packed
+    cumsum + table gather there), so auto fuses on TPU only; the
+    parameter exists so that decision is unit-testable per platform."""
     if cfg.fusion == "unfused":
         return "unfused"
     eligible = fusion_eligible(cfg, active)
@@ -580,10 +588,8 @@ def fusion_choice(cfg: VecSimConfig,
     if cfg.fusion != "auto":
         raise ValueError(f"fusion must be auto|fused|unfused, "
                          f"got {cfg.fusion!r}")
-    # auto: the megakernel's (T, N) interval matrix loses to the packed
-    # cumsum + table gather on CPU (measured) — fuse only on TPU
-    return "fused" if (eligible and jax.default_backend() == "tpu") \
-        else "unfused"
+    plat = jax.default_backend() if platform is None else platform
+    return "fused" if (eligible and plat == "tpu") else "unfused"
 
 
 def _fresh_telemetry(n: int, dtype) -> Dict[str, jnp.ndarray]:

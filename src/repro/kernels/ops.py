@@ -23,6 +23,7 @@ from repro.kernels.bucket_serve import (
     bucket_serve_pallas,
 )
 from repro.kernels.megatick import megatick_pallas, megatick_ref
+from repro.kernels.serve_admit import serve_admit_pallas, serve_admit_ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -152,6 +153,28 @@ def megatick(m_pend, rank, n_pend, node_prev, alive, dem_task, live,
                            interpret=(impl == "interpret"), **kw)
 
 
+def serve_admit(pending, rank, rep_prev, pre, dec, dpre, ddec, balance,
+                baseline, burst, capacity, unlimited, free, qlen, ptr, *,
+                dt: float, policy: str, max_rounds: int, impl: str = "auto"):
+    """Fused serving-fleet tick (core.servesim hot path): credit-aware
+    (cash) or round-robin admission of the pending FIFO queue onto
+    replicas with free KV slots, token-bucket-throttled prefill/decode
+    serve with pro-rata distribution, and release detection, in one
+    step. Returns ``(assign, taken, n_placed, inc_pre, inc_dec, new_pre,
+    new_dec, fin, work, new_balance, surplus_add)`` — see
+    kernels.serve_admit.serve_admit_math for the semantics contract."""
+    impl = _resolve(impl)
+    kw = dict(dt=dt, policy=policy, max_rounds=max_rounds)
+    if impl == "xla":
+        return serve_admit_ref(pending, rank, rep_prev, pre, dec, dpre,
+                               ddec, balance, baseline, burst, capacity,
+                               unlimited, free, qlen, ptr, **kw)
+    return serve_admit_pallas(pending, rank, rep_prev, pre, dec, dpre, ddec,
+                              balance, baseline, burst, capacity, unlimited,
+                              free, qlen, ptr,
+                              interpret=(impl == "interpret"), **kw)
+
+
 def megatick_estimate(tel, balance, baseline, capacity, now, *,
                       tel_mode: str):
     """The megakernel's Algorithm-2 credit estimate, standalone — the SAME
@@ -172,3 +195,5 @@ ssd_jit = jax.jit(ssd, static_argnames=("chunk", "impl"))
 bucket_serve_jit = jax.jit(bucket_serve, static_argnames=("dt", "impl"))
 bucket_serve_distribute_jit = jax.jit(bucket_serve_distribute,
                                       static_argnames=("dt", "impl"))
+serve_admit_jit = jax.jit(serve_admit, static_argnames=(
+    "dt", "policy", "max_rounds", "impl"))

@@ -1,0 +1,262 @@
+"""Serving-fleet tick kernel: admission rank + KV-slot assign +
+bucket-throttled decode + release detection, fused.
+
+One device step covering the hot phases of `core.servesim`'s per-tick
+loop for a replica fleet serving continuous-batching inference traffic:
+
+  * **admission**: the pending FIFO queue (carried ranks, a rank prefix
+    is always consumed) is placed onto replicas with free KV slots —
+    either CASH credit-aware (credit-richest replica first, replica-id
+    tie-break: prefill is the burst, so it lands where headroom lives)
+    or credit-blind round-robin (one slot per replica per round,
+    rotation carried via ``ptr``);
+  * **serve**: each replica's token bucket (`_serve_math`, the
+    `bucket_serve` arithmetic) serves its residents' aggregate token
+    demand — prefill demand while a request's prompt remains, decode
+    demand after — and the delivered work is distributed pro-rata;
+  * **release**: requests whose prefill AND decode work both fall to
+    ``<= 1e-9`` are flagged finished (their KV slot frees next tick,
+    mirroring the engine's release-at-k+1 contract).
+
+Placement is expressed as *interval assignment* exactly like
+`kernels.megatick`: CASH ranks replicas by balance descending and each
+replica's packed slots cover queue ranks ``[cum_excl_j, cum_excl_j +
+free_j)``; round-robin enumerates the (replica, round) grid — the cell
+for replica j in round r has global rank ``sum_k min(free_k, r) +
+|participants before j this round|`` — as a static loop over
+``max_rounds`` (the per-replica KV-slot count). Both are bitwise-equal
+to `core.servesim`'s unfused packed-cumsum (`_pack_counts`/`_rr_table`)
+formulation: identical integer bookkeeping, identical serve arithmetic.
+
+`serve_admit_ref` is the XLA lowering; `serve_admit_pallas` is the
+single `pl.pallas_call` TPU kernel (fleet + request table whole in
+VMEM, lane-padded, runnable under ``interpret=True`` on CPU). Both wrap
+the SAME `serve_admit_math`, differing only in the work/demand gather
+(direct index vs one-hot matmul, the `megatick` pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bucket_serve import LANES, _serve_math
+from repro.kernels.compat import CompilerParams
+from repro.kernels.megatick import _pad_to
+
+# pad filler for queue ranks: far above any reachable rank so a padded
+# lane can never match a round-robin (replica, round) cell rank
+_RANK_PAD = 1 << 28
+
+
+def serve_admit_math(pending, rank, rep_prev, pre, dec, dpre, ddec,
+                     balance, baseline, burst, capacity, unlimited, free,
+                     qlen, ptr, *, dt: float, policy: str, max_rounds: int,
+                     gather: str = "direct"):
+    """One fused serving tick step.
+
+    Request-side (C,): ``pending`` admitted-but-unplaced mask, ``rank``
+    carried FIFO queue ranks (contiguous from 0 over pending),
+    ``rep_prev`` resident replica before placement (-1 unplaced),
+    ``pre``/``dec`` remaining prefill/decode tokens, ``dpre``/``ddec``
+    token demand rates per phase. Replica-side (R,): the token-bucket
+    fields plus ``free`` KV-slot counts. ``qlen`` is the carried queue
+    length, ``ptr`` the round-robin rotation origin (read only when
+    ``policy == "rr"``); ``max_rounds`` bounds free KV slots per replica
+    (the static KV capacity).
+
+    Returns ``(assign, taken, n_placed, inc_pre, inc_dec, new_pre,
+    new_dec, fin, work, new_balance, surplus_add)`` — ``inc_*`` are the
+    tokens applied this tick per request (masked to served lanes, so
+    both gather formulations agree lane-for-lane), ``fin`` the requests
+    finishing this tick (released by the engine next tick).
+    """
+    dtype = balance.dtype
+    n = balance.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    unl = unlimited > 0.5 if unlimited.dtype != jnp.bool_ else unlimited
+
+    # ---- admission: interval assignment over the visit order -------------
+    if policy == "cash":
+        # credit-richest first, replica-id tie-break (prefill = the burst)
+        ck, cj = balance[None, :], balance[:, None]
+        tie = (ck == cj) & (ids[None, :] < ids[:, None])
+        before = (ck > cj) | tie
+        cum_excl = jnp.sum(jnp.where(before, free[None, :], 0), axis=1,
+                           dtype=jnp.int32)                   # (R,)
+        taken = jnp.clip(qlen - cum_excl, 0, free)
+        r = rank[:, None]
+        hit = pending[:, None] & (cum_excl[None, :] <= r) \
+            & (r < (cum_excl + free)[None, :])                # (C, R)
+    elif policy == "rr":
+        # one KV slot per replica per round, replicas visited in rotation
+        # order from ptr; padded replicas (free == 0) never participate,
+        # and only the RELATIVE rotation order matters, so mod by the
+        # (possibly lane-padded) width is safe
+        pos = jnp.mod(ids - ptr, n)                           # visit order
+        hit = jnp.zeros((pending.shape[0], n), bool)
+        taken = jnp.zeros(n, jnp.int32)
+        start = jnp.zeros((), jnp.int32)
+        for rd in range(max_rounds):
+            part = free > rd                                  # (R,)
+            earlier = part[None, :] & (pos[None, :] < pos[:, None])
+            rib = jnp.sum(earlier, axis=1, dtype=jnp.int32)   # (R,)
+            cell = start + rib            # global rank of cell (j, rd)
+            hit = hit | (part[None, :] & (rank[:, None] == cell[None, :]))
+            taken = taken + (part & (cell < qlen)).astype(jnp.int32)
+            start = start + jnp.sum(part, dtype=jnp.int32)
+        hit = hit & pending[:, None]
+    else:
+        raise ValueError(f"policy must be cash|rr, got {policy!r}")
+    assign = jnp.sum(jnp.where(hit, ids[None, :] + 1, 0), axis=1,
+                     dtype=jnp.int32) - 1
+    n_placed = jnp.minimum(qlen, jnp.sum(free, dtype=jnp.int32))
+
+    # ---- serve: phase-dependent demand, bucket throttle, pro-rata --------
+    rep_new = jnp.where(assign >= 0, assign, rep_prev)
+    running = rep_new >= 0
+    nidx = jnp.clip(rep_new, 0, n - 1)
+    # phase predicates share the release threshold: min(share, remaining)
+    # zeroes a phase exactly when the bucket covers it, but an ulp of
+    # work-arithmetic drift (XLA fuses mul+sub into FMA; numpy rounds
+    # twice) can leave ~1e-14 behind on one side only — below 1e-9 a
+    # phase is OVER everywhere, or the demand mix forks
+    in_pre = pre > 1e-9
+    live = in_pre | (dec > 1e-9)
+    dem_i = jnp.where(in_pre, dpre, ddec)
+    onehot = jnp.where((rep_new[:, None] == ids[None, :]) &
+                       running[:, None], jnp.ones((), dtype), 0.0)
+    col = jnp.where(running & live, dem_i, 0.0)
+    dem_node = jax.lax.dot_general(
+        col[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=dtype)[0]                      # (R,)
+    work, new_bal, sur_add = _serve_math(balance, dem_node, baseline, burst,
+                                         capacity, unl, dt=dt)
+    # the carried balance snaps to the 2^-10 grid (the demand-rate grid,
+    # `traffic.arrivals._snap_rates`): balance ORDERS the cash admission
+    # sort, so the FMA-vs-two-roundings ulp in `balance - drain*t_burst`
+    # would otherwise compound across ticks and flip near-tie sorts
+    # between this kernel, the unfused engine, and the replay oracle
+    new_bal = jnp.round(new_bal * 1024.0) / 1024.0
+    if gather == "direct":
+        w_t, dd_t = work[nidx], dem_node[nidx]
+    else:   # one-hot matmul gather (TPU kernel path) — identical values
+        w_t = jax.lax.dot_general(onehot, work[:, None],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=dtype)[:, 0]
+        dd_t = jax.lax.dot_general(onehot, dem_node[:, None],
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=dtype)[:, 0]
+    share = jnp.where(dd_t > 0.0, w_t * dem_i / dd_t, 0.0)
+    share = jnp.where(running & live, share, 0.0)
+    # a request finishing its prefill mid-tick starts decoding next tick;
+    # leftover share at the phase boundary is discarded (the engine's
+    # min(share, remaining) contract, as core.vecsim)
+    inc_pre = jnp.where(in_pre, jnp.minimum(share, pre), 0.0)
+    inc_dec = jnp.where(~in_pre, jnp.minimum(share, dec), 0.0)
+    new_pre = pre - inc_pre
+    new_dec = dec - inc_dec
+
+    # ---- release detection (the engine frees the KV slot next tick) -----
+    fin = running & (new_pre <= 1e-9) & (new_dec <= 1e-9)
+    return (assign, taken, n_placed, inc_pre, inc_dec, new_pre, new_dec,
+            fin, work, new_bal, sur_add)
+
+
+def serve_admit_ref(*args, **kw):
+    """XLA reference lowering of the fused serving tick."""
+    return serve_admit_math(*args, gather="direct", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: fleet + request table resident in VMEM, one grid step
+# ---------------------------------------------------------------------------
+
+def _serve_admit_kernel(pend_ref, rank_ref, rprev_ref, pre_ref, dec_ref,
+                        dpre_ref, ddec_ref, bal_ref, base_ref, brst_ref,
+                        cap_ref, unl_ref, free_ref, qlen_ref, ptr_ref,
+                        assign_ref, taken_ref, npl_ref, ipre_ref, idec_ref,
+                        npre_ref, ndec_ref, fin_ref, work_ref, nbal_ref,
+                        sur_ref, *, dt, policy, max_rounds):
+    (assign, taken, n_placed, inc_pre, inc_dec, new_pre, new_dec, fin,
+     work, nbal, sur) = serve_admit_math(
+        pend_ref[0, :] > 0, rank_ref[0, :], rprev_ref[0, :], pre_ref[0, :],
+        dec_ref[0, :], dpre_ref[0, :], ddec_ref[0, :], bal_ref[0, :],
+        base_ref[0, :], brst_ref[0, :], cap_ref[0, :], unl_ref[0, :],
+        free_ref[0, :], qlen_ref[0, 0], ptr_ref[0, 0], dt=dt, policy=policy,
+        max_rounds=max_rounds, gather="onehot")
+    assign_ref[0, :] = assign
+    taken_ref[0, :] = taken
+    npl_ref[0, 0] = n_placed
+    ipre_ref[0, :] = inc_pre
+    idec_ref[0, :] = inc_dec
+    npre_ref[0, :] = new_pre
+    ndec_ref[0, :] = new_dec
+    fin_ref[0, :] = fin.astype(jnp.int32)
+    work_ref[0, :] = work
+    nbal_ref[0, :] = nbal
+    sur_ref[0, :] = sur
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dt", "policy", "max_rounds", "interpret"))
+def serve_admit_pallas(pending, rank, rep_prev, pre, dec, dpre, ddec,
+                       balance, baseline, burst, capacity, unlimited, free,
+                       qlen, ptr, *, dt: float, policy: str,
+                       max_rounds: int, interpret: bool = False):
+    """`serve_admit_math` as one `pl.pallas_call`: the request table and
+    replica fleet ride whole in VMEM (lane-padded), one grid step per
+    tick — fleets are tens of replicas and at most a few thousand table
+    slots, so whole-block residency beats any tiling."""
+    c, n = pre.shape[0], balance.shape[0]
+    dtype = balance.dtype
+    cp, np_ = -(-c // LANES) * LANES, -(-n // LANES) * LANES
+
+    fmask = functools.partial(jnp.asarray, dtype=dtype)
+    req_in = [
+        _pad_to(fmask(pending), cp, 0.0),
+        _pad_to(rank.astype(jnp.int32), cp, _RANK_PAD),
+        _pad_to(rep_prev.astype(jnp.int32), cp, -1),
+        _pad_to(pre.astype(dtype), cp, 0.0),
+        _pad_to(dec.astype(dtype), cp, 0.0),
+        _pad_to(dpre.astype(dtype), cp, 0.0),
+        _pad_to(ddec.astype(dtype), cp, 0.0),
+    ]
+    rep_in = [_pad_to(v.astype(dtype), np_, 0.0)
+              for v in (balance, baseline, burst, capacity)]
+    rep_in.append(_pad_to(fmask(unlimited), np_, 0.0))
+    rep_in.append(_pad_to(free.astype(jnp.int32), np_, 0))
+    inputs = [v.reshape(1, -1) for v in req_in + rep_in] + [
+        jnp.asarray(qlen, jnp.int32).reshape(1, 1),
+        jnp.asarray(ptr, jnp.int32).reshape(1, 1),
+    ]
+
+    out_shape = [
+        jax.ShapeDtypeStruct((1, cp), jnp.int32),       # assign
+        jax.ShapeDtypeStruct((1, np_), jnp.int32),      # taken
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),        # n_placed
+        jax.ShapeDtypeStruct((1, cp), dtype),           # inc_pre
+        jax.ShapeDtypeStruct((1, cp), dtype),           # inc_dec
+        jax.ShapeDtypeStruct((1, cp), dtype),           # new_pre
+        jax.ShapeDtypeStruct((1, cp), dtype),           # new_dec
+        jax.ShapeDtypeStruct((1, cp), jnp.int32),       # fin
+        jax.ShapeDtypeStruct((1, np_), dtype),          # work
+        jax.ShapeDtypeStruct((1, np_), dtype),          # new balance
+        jax.ShapeDtypeStruct((1, np_), dtype),          # surplus add
+    ]
+    kernel = functools.partial(_serve_admit_kernel, dt=dt, policy=policy,
+                               max_rounds=max_rounds)
+    # no grid: every ref is the whole (lane-padded) array in VMEM
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(),
+        interpret=interpret,
+    )(*inputs)
+    (assign, taken, npl, ipre, idec, npre, ndec, fin, work, nbal,
+     sur) = outs
+    return (assign[0, :c], taken[0, :n], npl[0, 0], ipre[0, :c],
+            idec[0, :c], npre[0, :c], ndec[0, :c], fin[0, :c] > 0,
+            work[0, :n], nbal[0, :n], sur[0, :n])

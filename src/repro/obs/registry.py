@@ -74,6 +74,10 @@ METRICS: Tuple[MetricSpec, ...] = (
     _m("wait_mean", "s", "f", "scalar", "queue wait mean"),
     _m("wait_max", "s", "f", "scalar", "queue wait max"),
     _m("last_finish", "s", "f", "scalar", "time of the last release"),
+    _m("tokens_prefilled", "tokens", "f", "scalar",
+       "prefill tokens applied across the serving fleet (core.servesim)"),
+    _m("tokens_decoded", "tokens", "f", "scalar",
+       "decode tokens applied across the serving fleet (core.servesim)"),
     _m("n_preempted", "events", "i", "scalar",
        "task-preemption events (node deaths hitting residents)"),
     _m("n_reexec", "events", "i", "scalar", "requeues after preemption"),

@@ -49,12 +49,16 @@ EV_BLACKLIST = 5     # placement: CASH blacklist applied to a node
 EV_PLACE = 6         # placement: task/slot assigned to a node
 EV_DEPLETE = 7       # serve: node bucket crossed to empty
 EV_REGEN = 8         # serve: node bucket crossed back above empty
+EV_RELEASE = 9       # release: finished request frees its KV slot
+                     # (serving fleet, core.servesim; ordered with
+                     # EV_SLO_OVER in the release block)
 
-EVENT_ORDER = (EV_SLO_OVER, EV_PREEMPT, EV_SHED, EV_DROP, EV_BLACKLIST,
-               EV_PLACE, EV_DEPLETE, EV_REGEN)
+EVENT_ORDER = (EV_SLO_OVER, EV_RELEASE, EV_PREEMPT, EV_SHED, EV_DROP,
+               EV_BLACKLIST, EV_PLACE, EV_DEPLETE, EV_REGEN)
 
 KIND_NAMES = {
     EV_SLO_OVER: "slo_overflow",
+    EV_RELEASE: "release",
     EV_PREEMPT: "preempt",
     EV_SHED: "shed",
     EV_DROP: "drop",
@@ -76,6 +80,7 @@ class Event:
     kind         subject    aux            rank         value
     ============ ========== ============== ============ ================
     slo_overflow slot       -1             -1           latency (s)
+    release      slot       replica        -1           latency (s)
     preempt      task/slot  node (before)  retry count  work lost
     shed         task/slot  node (before)  retry count  0
     drop         -1         dropped count  -1           0

@@ -55,6 +55,27 @@ def make_replicas(n: int, instance_type: str = "t3.2xlarge",
     return reps
 
 
+def admission_order(credits: Sequence[float], *, credit_aware: bool = True,
+                    ptr: int = 0) -> List[int]:
+    """The replica visit order for admitting queued prefills — the ONE
+    contract `core.servesim`, `kernels.serve_admit`, and the numpy
+    replay oracle all implement:
+
+      credit-aware (CASH): credit-richest replica first, replica id as
+        the tie-break (prefill is the burst; it lands where headroom
+        lives — Algorithm 1's sort, collapsed to the serving fleet);
+      credit-blind (round-robin): rotation from ``ptr`` — replica
+        ``(ptr + i) mod n`` is visited i-th regardless of credit state.
+
+    The engine consumes the queue-rank prefix along this order, filling
+    each visited replica's free KV slots before moving on (round-robin
+    takes ONE slot per replica per rotation pass)."""
+    n = len(credits)
+    if credit_aware:
+        return sorted(range(n), key=lambda j: (-credits[j], j))
+    return [(ptr + i) % n for i in range(n)]
+
+
 class CashServeScheduler:
     """Route prefill (burst) and decode (network) work by credit state."""
 

@@ -1,0 +1,276 @@
+"""Pure-Python replay oracle for the vectorized serving fleet.
+
+`ServeFleetOracle` interprets ONE (unstacked) serving-fleet scenario
+under the same `ServeSimConfig` the vectorized engine
+(`core.servesim._simulate_serve`) compiles, mirroring it tick-for-tick
+with plain Python loops over numpy float64 state — and doubling as the
+Python-loop baseline the `benchmarks/serve_bench.py` speedup is measured
+against:
+
+  * the arrival stream IS the engine's stream — `arrivals.arrival_counts`
+    called eagerly, so the per-scenario Poisson draws match
+    integer-for-integer;
+  * KV-slot accounting runs through REAL `serve.kv_cache.KVCacheManager`
+    instances (one per replica): admit takes the lowest free slot,
+    release recycles it — the occupancy counts the engine carries are
+    exactly ``kv_slots - len(mgr.free_slots())``;
+  * the admission visit order comes from `sched.serve_scheduler
+    .admission_order` — the ONE contract the engine's packed-cumsum
+    placement and the fused kernel's interval assignment implement;
+  * token-bucket serve mirrors `kernels.ref` branch-for-branch via the
+    scalar `traffic.oracle._serve_bucket`.
+
+Latencies are exact float64 products of tick index and ``dt`` on both
+sides and both bucket with `slo.bucket_index`, so under
+``jax_enable_x64`` the oracle's counters, histograms, token totals and
+percentiles equal the engine's EXACTLY (tests assert equality, not a
+tolerance). With ``collect_events=True`` the oracle also emits the
+engine's decision-trace stream (`obs.ring.EventCollector`) in the same
+canonical per-tick block order.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.servesim import ServeSimConfig
+from repro.obs import ring as obsring
+from repro.sched.serve_scheduler import admission_order
+from repro.serve.kv_cache import KVCacheManager
+from repro.traffic import arrivals, slo
+from repro.traffic.oracle import _serve_bucket
+
+# far above any prompt: the manager's per-slot length cap never binds in
+# the fleet simulation (overflow is a serve.engine concern)
+_ORACLE_MAX_LEN = 1 << 20
+
+
+class ServeFleetOracle:
+    """Interpret one serving-fleet scenario; `run()` returns the engine's
+    scalar/histogram output keys (plus lat/wait percentiles) as plain
+    numpy values, with the decision-trace events on ``self.events`` when
+    ``collect_events`` is set."""
+
+    def __init__(self, sc: Dict[str, np.ndarray], cfg: ServeSimConfig,
+                 collect_events: bool = False):
+        if cfg.scheduler not in ("cash", "rr"):
+            raise NotImplementedError(
+                f"serving fleet supports cash|rr, got {cfg.scheduler!r}")
+        if cfg.traffic not in ("poisson", "diurnal"):
+            raise NotImplementedError(
+                f"stochastic traffic only, got {cfg.traffic!r}")
+        self.sc = {k: np.asarray(v) for k, v in sc.items()}
+        self.cfg = cfg
+        self.R = len(self.sc["rep_balance0"])
+        self.C = (cfg.table_slots if cfg.table_slots > 0
+                  else 2 * self.R * cfg.kv_slots)
+        self.edges = slo.edges_for(cfg)
+        self.counts = np.asarray(arrivals.arrival_counts(cfg, self.sc,
+                                                         np.float64))
+        self.collector: Optional[obsring.EventCollector] = \
+            obsring.EventCollector() if collect_events else None
+
+    @property
+    def events(self) -> List[obsring.Event]:
+        return self.collector.events if self.collector else []
+
+    # ------------------------------------------------------------------ tick
+    def run(self) -> Dict[str, np.ndarray]:
+        cfg, sc, R, C = self.cfg, self.sc, self.R, self.C
+        dt = cfg.dt
+        B = cfg.slo_bins
+        cash = cfg.scheduler == "cash"
+        col = self.collector
+
+        rq_pre = np.zeros(C)
+        rq_dec = np.zeros(C)
+        rq_dpre = np.zeros(C)
+        rq_ddec = np.zeros(C)
+        rq_tmpl = np.full(C, -1, np.int64)
+        rq_seq = np.full(C, np.iinfo(np.int32).max, np.int64)
+        rq_submit = np.zeros(C)
+        rq_start = np.full(C, np.inf)
+        rq_rep = np.full(C, -1, np.int64)
+        rq_kv = np.full(C, -1, np.int64)       # owning KV slot on its replica
+
+        kv = [KVCacheManager(cfg.kv_slots, _ORACLE_MAX_LEN)
+              for _ in range(R)]
+        rel_pending: List[int] = []            # table slots finishing last tick
+        bal = sc["rep_balance0"].astype(np.float64).copy()
+        sur = np.zeros(R)
+        baseline = sc["rep_baseline"].astype(np.float64)
+        burst = sc["rep_burst"].astype(np.float64)
+        capacity = sc["rep_capacity"].astype(np.float64)
+        unlimited = sc["rep_unlimited"].astype(np.float64) > 0.0
+        tmpl_n = max(int(sc["tmpl_n"]), 1)
+
+        rr_ptr = 0
+        n_seen = n_adm = n_done = 0
+        lat_hist = np.zeros(B, np.int64)
+        wait_hist = np.zeros(B, np.int64)
+        lat_sum = wait_sum = 0.0
+        lat_max = wait_max = 0.0
+        last_rel = -np.inf
+        tok_pre = tok_dec = busy_seconds = 0.0
+
+        for t in range(cfg.n_ticks):
+            now = float(t) * dt
+
+            # 1) release finished requests: SLO buckets + KV-slot recycle
+            fin_prev = sorted(rel_pending)
+            for i in fin_prev:
+                lat = now - rq_submit[i]
+                wait = rq_start[i] - rq_submit[i]
+                if col and lat >= self.edges[-1]:
+                    col.emit(t, obsring.EV_SLO_OVER, i, -1, -1, lat)
+                lat_hist[slo.bucket_index(lat, self.edges)] += 1
+                wait_hist[slo.bucket_index(wait, self.edges)] += 1
+                lat_sum += lat
+                wait_sum += wait
+                lat_max = max(lat_max, lat)
+                wait_max = max(wait_max, wait)
+            if col:
+                for i in fin_prev:
+                    col.emit(t, obsring.EV_RELEASE, i, int(rq_rep[i]), -1,
+                             now - rq_submit[i])
+            for i in fin_prev:
+                kv[rq_rep[i]].release(int(rq_kv[i]))
+                rq_tmpl[i] = -1
+                rq_rep[i] = -1
+                rq_kv[i] = -1
+                rq_seq[i] = np.iinfo(np.int32).max
+            if fin_prev:
+                n_done += len(fin_prev)
+                last_rel = now
+            rel_pending = []
+
+            # 2) arrivals into free table slots, lowest index first
+            k = int(self.counts[t])
+            free_slots = np.flatnonzero(rq_tmpl < 0)
+            admitted = free_slots[:k]
+            for r, i in enumerate(admitted):
+                aidx = n_seen + r
+                row = aidx % tmpl_n
+                rq_pre[i] = float(sc["tmpl_pre"][row])
+                rq_dec[i] = float(sc["tmpl_dec"][row])
+                rq_dpre[i] = float(sc["tmpl_dpre"][row])
+                rq_ddec[i] = float(sc["tmpl_ddec"][row])
+                rq_tmpl[i] = row
+                rq_submit[i] = now
+                rq_seq[i] = aidx
+            n_seen += k
+            n_adm += len(admitted)
+            if col and k > len(admitted):
+                col.emit(t, obsring.EV_DROP, -1, k - len(admitted), -1, 0.0)
+
+            # 3) admission: FIFO queue onto replicas with free KV slots,
+            #    visited in the admission_order contract
+            bal0 = bal.copy()
+            pending = (rq_tmpl >= 0) & (rq_rep < 0)
+            q = np.flatnonzero(pending)
+            queue = list(q[np.argsort(rq_seq[q], kind="stable")])
+            free = [len(kv[n].free_slots()) for n in range(R)]
+            n_placed = min(len(queue), sum(free))
+            order = admission_order(bal0, credit_aware=cash, ptr=rr_ptr)
+            placed_now: List[int] = []
+
+            def place(i: int, n: int) -> None:
+                rq_rep[i] = n
+                rq_kv[i] = kv[n].admit(int(rq_seq[i]),
+                                       int(min(rq_pre[i],
+                                               _ORACLE_MAX_LEN - 1)))
+                rq_start[i] = now
+                free[n] -= 1
+                placed_now.append(i)
+
+            if cash:
+                for n in order:
+                    while free[n] > 0 and queue:
+                        place(queue.pop(0), n)
+            else:    # round-robin: ONE KV slot per replica per pass
+                progress = True
+                while queue and progress:
+                    progress = False
+                    for n in order:
+                        if free[n] > 0 and queue:
+                            place(queue.pop(0), n)
+                            progress = True
+            rr_ptr = (rr_ptr + n_placed) % R
+            if col:
+                desc_pos = {n: r for r, n in enumerate(
+                    admission_order(bal0, credit_aware=True))}
+                for i in sorted(placed_now):
+                    n = int(rq_rep[i])
+                    if cash:
+                        col.emit(t, obsring.EV_PLACE, i, n, desc_pos[n],
+                                 bal0[n])
+                    else:
+                        col.emit(t, obsring.EV_PLACE, i, n, n, 0.0)
+
+            # 4) serve: phase demand, bucket throttle, pro-rata distribute
+            running = rq_rep >= 0
+            # phase thresholds + balance snap mirror kernels.serve_admit:
+            # sub-1e-9 residue means the phase is over, and balances live
+            # on the 2^-10 grid so FMA-vs-two-roundings ulps between the
+            # engine's fused arithmetic and this loop cannot reorder the
+            # cash admission sort
+            in_pre = rq_pre > 1e-9
+            live = running & (in_pre | (rq_dec > 1e-9))
+            dem_i = np.where(in_pre, rq_dpre, rq_ddec)
+            dem_node = np.zeros(R)
+            for i in np.flatnonzero(live):
+                dem_node[rq_rep[i]] += dem_i[i]
+            w_node = np.zeros(R)
+            for n in range(R):
+                w, nb, over = _serve_bucket(
+                    bal[n], dem_node[n], baseline[n], burst[n],
+                    capacity[n], unlimited[n], dt)
+                bal[n] = np.round(nb * 1024.0) / 1024.0
+                w_node[n] = w
+                sur[n] += over
+            for i in np.flatnonzero(live):
+                n = rq_rep[i]
+                share = (w_node[n] * dem_i[i] / dem_node[n]
+                         if dem_node[n] > 0.0 else 0.0)
+                if in_pre[i]:
+                    inc = min(share, rq_pre[i])
+                    rq_pre[i] -= inc
+                    tok_pre += inc
+                else:
+                    inc = min(share, rq_dec[i])
+                    rq_dec[i] -= inc
+                    tok_dec += inc
+            for i in np.flatnonzero(running):
+                if rq_pre[i] <= 1e-9 and rq_dec[i] <= 1e-9:
+                    rel_pending.append(i)
+            occ = [cfg.kv_slots - len(kv[n].free_slots()) for n in range(R)]
+            busy_seconds += float(sum(1 for o in occ if o > 0)) * dt
+            if col:
+                for n in range(R):
+                    if bal0[n] > 1e-9 and bal[n] <= 1e-9:
+                        col.emit(t, obsring.EV_DEPLETE, n, -1, -1, bal[n])
+                for n in range(R):
+                    if bal0[n] <= 1e-9 and bal[n] > 1e-9:
+                        col.emit(t, obsring.EV_REGEN, n, -1, -1, bal[n])
+
+        all_done = n_done == n_adm
+        makespan = ((last_rel if n_done > 0 else 0.0) if all_done
+                    else cfg.n_ticks * dt)
+        out = {
+            "makespan": makespan, "all_done": all_done,
+            "surplus_credits": float(np.sum(sur)),
+            "node_busy_seconds": busy_seconds,
+            "n_arrived": n_seen, "n_admitted": n_adm,
+            "n_dropped": n_seen - n_adm, "n_completed": n_done,
+            "lat_hist": lat_hist, "wait_hist": wait_hist,
+            "lat_sum": lat_sum, "wait_sum": wait_sum,
+            "lat_max": lat_max, "wait_max": wait_max,
+            "last_finish": last_rel,
+            "tokens_prefilled": tok_pre, "tokens_decoded": tok_dec,
+        }
+        for pfx in ("lat", "wait"):
+            for q_, tag in slo.DEFAULT_QS:
+                out[f"{pfx}_{tag}"] = float(slo.hist_percentile(
+                    out[f"{pfx}_hist"], self.edges, q_))
+        return out

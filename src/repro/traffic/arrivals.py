@@ -189,6 +189,134 @@ def build_traffic_scenario(nodes: Sequence, template: Dict[str, np.ndarray],
     return sc
 
 
+# ---------------------------------------------------------------------------
+# serving-fleet scenarios (core.servesim)
+# ---------------------------------------------------------------------------
+
+# per-scenario arrays a serving-fleet scenario carries (replica-side token
+# buckets + request-kind templates + the arrival process above)
+SERVE_SCENARIO_KEYS = ("rep_balance0", "rep_baseline", "rep_burst",
+                       "rep_capacity", "rep_unlimited", "tmpl_pre",
+                       "tmpl_dec", "tmpl_dpre", "tmpl_ddec", "tmpl_n",
+                       "arr_rate", "arr_amp", "arr_period", "arr_phase",
+                       "rng_seed")
+
+
+def make_serve_template(n_kinds: int = 4, *, seed: int = 0,
+                        prompt=(64.0, 768.0), decode=(32.0, 256.0),
+                        prefill_rate=(800.0, 2400.0),
+                        decode_rate=(40.0, 160.0)) -> Dict[str, np.ndarray]:
+    """A random request-kind table for the serving fleet: ``n_kinds``
+    rows of (prompt tokens, decode tokens, prefill token-demand rate,
+    decode token-demand rate). Prefill is compute-dense and bursty
+    (demand far above a replica's sustained rate); decode is a steady
+    trickle — the map/reduce annotation split of
+    `sched.serve_scheduler`, in token units."""
+    if n_kinds < 1:
+        raise ValueError("need at least one template row")
+    rng = np.random.default_rng(seed)
+    f = np.float64
+    return {
+        "tmpl_pre": rng.uniform(*prompt, n_kinds).astype(f),
+        "tmpl_dec": rng.uniform(*decode, n_kinds).astype(f),
+        "tmpl_dpre": rng.uniform(*prefill_rate, n_kinds).astype(f),
+        "tmpl_ddec": rng.uniform(*decode_rate, n_kinds).astype(f),
+    }
+
+
+def _snap_rates(a) -> np.ndarray:
+    """Snap demand rates to the 2^-10 dyadic grid. Per-replica demand is
+    a SUM of these across resident requests, and the engine
+    (``dot_general``) and the replay oracle (a python loop) reduce in
+    different orders — off the grid, a single ulp of summation-order
+    drift leaks into the token-bucket balance, flips the credit-richest
+    admission sort at near-tie balances, and forks the whole decision
+    trace. On the grid every term is an integer multiple of 2^-10, so
+    any sum of fewer than ~2^30 requests is EXACT in float64 whatever
+    the reduction order."""
+    return np.round(np.asarray(a, np.float64) * 1024.0) / 1024.0
+
+
+def build_serve_scenario(template: Dict[str, np.ndarray], *,
+                         n_replicas: int, balance0=600.0, baseline=200.0,
+                         burst=2000.0, capacity=600.0,
+                         unlimited: bool = False, rate: float = 1.0,
+                         amp: float = 0.0, period: float = 86400.0,
+                         phase: float = 0.0,
+                         rng_seed: int = 0) -> Dict[str, np.ndarray]:
+    """Freeze one serving-fleet scenario: a replica fleet (each replica a
+    token bucket in token/s units) + a request-kind template table + an
+    arrival process. Bucket fields broadcast from scalars or ride
+    per-replica arrays; ``mode`` is the static ``ServeSimConfig.traffic``
+    (stochastic only — trace replay is a vecsim-path feature)."""
+    if n_replicas < 1:
+        raise ValueError("need at least one replica")
+    k = len(template["tmpl_pre"])
+    if not (len(template["tmpl_dec"]) == len(template["tmpl_dpre"])
+            == len(template["tmpl_ddec"]) == k):
+        raise ValueError("serve template columns disagree on row count")
+
+    f = np.float64
+
+    def rep(v):
+        return np.broadcast_to(np.asarray(v, f), (n_replicas,)).copy()
+
+    sc: Dict[str, np.ndarray] = {
+        "rep_balance0": rep(balance0),
+        "rep_baseline": rep(baseline),
+        "rep_burst": rep(burst),
+        "rep_capacity": rep(capacity),
+        "rep_unlimited": np.broadcast_to(
+            np.asarray(unlimited, bool), (n_replicas,)).copy(),
+        "tmpl_pre": np.asarray(template["tmpl_pre"], f),
+        "tmpl_dec": np.asarray(template["tmpl_dec"], f),
+        "tmpl_dpre": _snap_rates(template["tmpl_dpre"]),
+        "tmpl_ddec": _snap_rates(template["tmpl_ddec"]),
+        "tmpl_n": np.int32(k),
+        "arr_rate": f(rate),
+        "arr_amp": f(amp),
+        "arr_period": f(period),
+        "arr_phase": f(phase),
+        "rng_seed": np.int32(rng_seed),
+    }
+    if np.any(sc["tmpl_pre"] < 0) or np.any(sc["tmpl_dec"] < 0):
+        raise ValueError("template token counts must be >= 0")
+    return sc
+
+
+def stack_serve_scenarios(
+        scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    """Stack serving-fleet scenarios on a leading axis. Template tables
+    pad to the group's max row count (padded rows are never instantiated
+    — ``i mod tmpl_n`` indexes real rows only); the replica count must be
+    UNIFORM across the group — round-robin admission rotates over the
+    replica axis, so a padded fleet would change the rotation sequence.
+    Vary balances/rates across a group instead of fleet width."""
+    widths = {len(s["rep_balance0"]) for s in scenarios}
+    if len(widths) != 1:
+        raise ValueError(
+            "serving-fleet groups need a uniform replica count (round-"
+            f"robin rotates over the replica axis); got widths {sorted(widths)}")
+    K = max(len(s["tmpl_pre"]) for s in scenarios)
+
+    out: Dict[str, list] = {}
+    for s in scenarios:
+        k_pad = K - len(s["tmpl_pre"])
+
+        def pad(a, width, fill=0.0):
+            a = np.asarray(a)
+            if not width:
+                return a
+            return np.concatenate([a, np.full(width, fill, a.dtype)])
+
+        row = dict(s)
+        for key in ("tmpl_pre", "tmpl_dec", "tmpl_dpre", "tmpl_ddec"):
+            row[key] = pad(s[key], k_pad)
+        for key, v in row.items():
+            out.setdefault(key, []).append(np.asarray(v))
+    return {k: np.stack(v) for k, v in out.items()}
+
+
 def stack_traffic_scenarios(
         scenarios: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
     """Pad every traffic scenario to the group's max (nodes, template

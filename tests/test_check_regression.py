@@ -26,7 +26,11 @@ def baseline():
             "traffic_ticks_nodes_scen_per_s": 3_100_000.0,
             "throughput_ratio_vs_closed": 0.97,
         },
-        "churn": {"wasted_work_ratio_cash_vs_stock": 0.8},
+        "churn": {"wasted_work_ratio_cash_vs_stock": 0.8,
+                  "schedulers": {"cash": {"goodput_vcpu_s": 70_000.0},
+                                 "stock": {"goodput_vcpu_s": 69_000.0}}},
+        "serve": {"serve_ticks_reps_scen_per_s": 2_700_000.0,
+                  "speedup_vs_python_loop": 56.0},
     }
 
 
@@ -50,6 +54,24 @@ def test_nested_sharded_key_gated(baseline):
     regs = cr.compare(baseline, cand)
     assert [(r.section, r.key) for r in regs] == \
         [("fast", "sharded.ticks_nodes_scen_per_s")]
+
+
+def test_serve_throughput_gated(baseline):
+    cand = copy.deepcopy(baseline)
+    cand["serve"]["serve_ticks_reps_scen_per_s"] *= 0.5
+    regs = cr.compare(baseline, cand)
+    assert [(r.section, r.key) for r in regs] == \
+        [("serve", "serve_ticks_reps_scen_per_s")]
+
+
+def test_churn_goodput_gated(baseline):
+    """The churn gate keys are deterministic simulation outcomes, not
+    wall-clock rates — a goodput drop is a semantic regression."""
+    cand = copy.deepcopy(baseline)
+    cand["churn"]["schedulers"]["cash"]["goodput_vcpu_s"] *= 0.8
+    regs = cr.compare(baseline, cand)
+    assert [(r.section, r.key) for r in regs] == \
+        [("churn", "schedulers.cash.goodput_vcpu_s")]
 
 
 def test_drop_within_threshold_passes(baseline):
@@ -80,6 +102,7 @@ def test_ungated_keys_ignored(baseline):
     cand["fast"]["speedup"] = 1.0
     cand["traffic"]["throughput_ratio_vs_closed"] = 0.5
     cand["churn"]["wasted_work_ratio_cash_vs_stock"] = 99.0
+    cand["serve"]["speedup_vs_python_loop"] = 1.0
     assert cr.compare(baseline, cand) == []
 
 
@@ -142,6 +165,9 @@ def test_run_driver_check_flag(tmp_path, monkeypatch):
             "traffic_ticks_nodes_scen_per_s": 1_000_000.0}},
         "churn_bench": {"run": lambda fast=True: {
             "wasted_work_ratio_cash_vs_stock": 0.9}},
+        "serve_bench": {"run": lambda fast=True: {
+            "serve_ticks_reps_scen_per_s": 2_000_000.0,
+            "speedup_vs_python_loop": 60.0}},
     }
     for mod, attrs in stubs.items():
         m = __import__(f"benchmarks.{mod}", fromlist=list(attrs))

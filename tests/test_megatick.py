@@ -221,6 +221,29 @@ def test_traffic_fused_matches_unfused(scheduler, telemetry, burst_fraction):
     _assert_bitwise(outs["unfused"], outs["fused"])
 
 
+def test_fusion_auto_is_platform_aware(monkeypatch):
+    """``fusion="auto"`` resolves per backend: the megakernel loses to
+    the packed-cumsum tick on CPU (BENCH tick_phases), so auto fuses on
+    TPU only — forced modes ignore the platform entirely."""
+    cfg = vecsim.VecSimConfig(n_ticks=10, scheduler="cash", fusion="auto")
+    one_phase = (False, False, True, False, False)
+    assert vecsim.fusion_eligible(cfg, one_phase)
+    assert vecsim.fusion_choice(cfg, one_phase, platform="cpu") == "unfused"
+    assert vecsim.fusion_choice(cfg, one_phase, platform="tpu") == "fused"
+    # ineligible statics stay unfused even where fusion would win
+    two_phase = (False, False, True, False, True)
+    assert vecsim.fusion_choice(cfg, two_phase, platform="tpu") == "unfused"
+    # platform=None consults the live backend
+    monkeypatch.setattr(vecsim.jax, "default_backend", lambda: "tpu")
+    assert vecsim.fusion_choice(cfg, one_phase) == "fused"
+    monkeypatch.setattr(vecsim.jax, "default_backend", lambda: "cpu")
+    assert vecsim.fusion_choice(cfg, one_phase) == "unfused"
+    # forced modes never consult it
+    forced = dataclasses.replace(cfg, fusion="unfused")
+    assert vecsim.fusion_choice(forced, one_phase, platform="tpu") == \
+        "unfused"
+
+
 def test_fused_on_ineligible_config_raises():
     """``fusion="fused"`` on a two-phase workload (burst + plain classes)
     must raise instead of silently running a diverging tick."""

@@ -28,6 +28,51 @@ class TestKVManager:
         with pytest.raises(RuntimeError):
             kv.append_token(s)
 
+    def test_can_admit_at_length_boundary(self):
+        """Admission needs strict headroom: a prompt of max_len (or one
+        under) must leave room for at least one generated token."""
+        kv = KVCacheManager(2, 16)
+        assert kv.can_admit(14)
+        assert not kv.can_admit(16)
+        s = kv.admit(1, 14)
+        kv.append_token(s)           # 15: the last token that fits
+        with pytest.raises(RuntimeError):
+            kv.append_token(s)       # 16 would exceed max_len
+
+    def test_can_admit_exhausts_on_slots_not_length(self):
+        kv = KVCacheManager(1, 128)
+        kv.admit(1, 4)
+        assert not kv.can_admit(4)   # slot-bound, length irrelevant
+
+    def test_blocks_at_block_boundary(self):
+        """Paged accounting rounds up per BLOCK_TOKENS=128: crossing the
+        boundary by one token takes a whole extra block."""
+        kv = KVCacheManager(2, 512)
+        s = kv.admit(1, 128)
+        assert kv.slots[s].blocks() == 1
+        kv.append_token(s)           # 129 tokens
+        assert kv.slots[s].blocks() == 2
+        assert kv.used_blocks() == 2
+        t = kv.admit(2, 0)           # empty prompt still holds one block
+        assert kv.slots[t].blocks() == 1
+
+    def test_release_then_readmit_recycles_lowest_slot(self):
+        """Released slots go back to the free pool and readmission takes
+        the lowest index with fresh length state — the recycling contract
+        the serving-fleet oracle leans on."""
+        kv = KVCacheManager(3, 64)
+        s0 = kv.admit(10, 5)
+        s1 = kv.admit(11, 6)
+        s2 = kv.admit(12, 7)
+        assert (s0, s1, s2) == (0, 1, 2)
+        kv.release(s1)
+        kv.release(s0)
+        assert kv.free_slots() == [0, 1]
+        r = kv.admit(13, 3)
+        assert r == 0                # lowest free index first
+        assert kv.lengths()[r] == 3  # stale length from rid 10 is gone
+        assert kv.active() == {12: s2, 13: r}
+
 
 class TestSampler:
     def test_greedy(self):
@@ -47,6 +92,23 @@ class TestSampler:
         draws = {int(sample(logits, jax.random.PRNGKey(i), cfg)[0])
                  for i in range(40)}
         assert draws <= {0, 1}
+
+    def test_deterministic_under_fixed_key(self):
+        """Same (logits, key, config) -> same token, for every sampler
+        mode; different keys may (and for this spread do) disagree."""
+        logits = jnp.asarray(
+            np.random.default_rng(7).normal(size=(4, 32)), jnp.float32)
+        for cfg in (SamplerConfig(),
+                    SamplerConfig(temperature=0.7),
+                    SamplerConfig(temperature=1.0, top_k=8),
+                    SamplerConfig(temperature=1.3, top_p=0.8)):
+            a = sample(logits, jax.random.PRNGKey(42), cfg)
+            b = sample(logits, jax.random.PRNGKey(42), cfg)
+            assert np.array_equal(np.asarray(a), np.asarray(b)), cfg
+        stoch = SamplerConfig(temperature=1.5)
+        draws = {tuple(np.asarray(sample(logits, jax.random.PRNGKey(i),
+                                         stoch))) for i in range(10)}
+        assert len(draws) > 1
 
 
 class TestEngine:

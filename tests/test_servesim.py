@@ -1,0 +1,335 @@
+"""Vectorized credit-aware serving fleet (core.servesim, ISSUE 10).
+
+Correctness is anchored the same three ways as the traffic engine:
+
+  * the pure-Python `ServeFleetOracle` replay — real `KVCacheManager`
+    slot accounting + the `admission_order` visit contract — matches
+    float64-exactly (integer counters / histograms bit-for-bit, summed
+    float accumulators at 1e-9: summation order differs between
+    `jnp.sum` and the oracle's loop, the test_traffic convention);
+  * the fused `ops.serve_admit` tick is BITWISE-equal to the unfused
+    packed-cumsum tick, for both schedulers, and the Pallas interpret
+    path matches the XLA reference at ragged (non-lane-multiple) shapes;
+  * k-unrolled scans and the shard_map dispatch reproduce the k=1 vmap
+    results bit for bit, decision-trace rings included.
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import servesim
+from repro.kernels import ops
+from repro.obs import registry as obsreg
+from repro.obs import ring as obsring
+from repro.sched.serve_scheduler import admission_order
+from repro.serve.oracle import ServeFleetOracle
+from repro.traffic import arrivals
+
+TOL = 1e-9
+
+# exact on both sides: integer counters, histograms, and tick*dt products
+_EXACT = ("n_arrived", "n_admitted", "n_dropped", "n_completed",
+          "lat_hist", "wait_hist", "all_done", "makespan", "last_finish",
+          "node_busy_seconds")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _scenario(rng_seed=7, n_replicas=4, unlimited=False, rate=0.6,
+              amp=0.0):
+    tmpl = arrivals.make_serve_template(4, seed=3)
+    return arrivals.build_serve_scenario(
+        tmpl, n_replicas=n_replicas, balance0=400.0, baseline=150.0,
+        burst=1500.0, capacity=500.0, unlimited=unlimited, rate=rate,
+        amp=amp, period=600.0, rng_seed=rng_seed)
+
+
+def _cfg(**kw):
+    kw.setdefault("n_ticks", 300)
+    kw.setdefault("kv_slots", 3)
+    kw.setdefault("table_slots", 32)
+    kw.setdefault("slo_bins", 16)
+    return servesim.ServeSimConfig(**kw)
+
+
+def _assert_engine_matches_oracle(cfg, sc, i, res):
+    o = ServeFleetOracle(sc, cfg).run()
+    for k, v in o.items():
+        e = np.asarray(res[k])[i]
+        if k in _EXACT:
+            assert np.array_equal(e, np.asarray(v)), \
+                f"{k}: engine {e} != oracle {v}"
+        else:
+            assert np.allclose(e, v, rtol=TOL, atol=TOL, equal_nan=True), \
+                f"{k}: engine {e} != oracle {v}"
+    return o
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler,traffic", [
+    ("cash", "poisson"), ("rr", "diurnal"),
+])
+def test_matches_oracle(scheduler, traffic):
+    sc = _scenario(amp=0.5 if traffic == "diurnal" else 0.0)
+    cfg = _cfg(scheduler=scheduler, traffic=traffic)
+    res = servesim.run_batch(arrivals.stack_serve_scenarios([sc]), cfg)
+    o = _assert_engine_matches_oracle(cfg, sc, 0, res)
+    assert o["n_completed"] > 0 and o["tokens_decoded"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scheduler", ["cash", "rr"])
+@pytest.mark.parametrize("traffic", ["poisson", "diurnal"])
+@pytest.mark.parametrize("rng_seed", [7, 11, 23])
+@pytest.mark.parametrize("unlimited", [False, True])
+def test_matches_oracle_full_grid(scheduler, traffic, rng_seed, unlimited):
+    """The full parity grid — scheduler x arrival process x stream seed x
+    overdraft mode (tier-2: the two-combo tier-1 test covers the hot
+    paths)."""
+    sc = _scenario(rng_seed=rng_seed, unlimited=unlimited,
+                   amp=0.5 if traffic == "diurnal" else 0.0)
+    cfg = _cfg(scheduler=scheduler, traffic=traffic, n_ticks=500)
+    res = servesim.run_batch(arrivals.stack_serve_scenarios([sc]), cfg)
+    _assert_engine_matches_oracle(cfg, sc, 0, res)
+
+
+def test_batched_scenarios_match_solo():
+    """Scenarios in one stacked batch see exactly their solo results
+    (slot recycling state never leaks across the vmap axis)."""
+    scens = [_scenario(rng_seed=s) for s in (7, 11)]
+    cfg = _cfg(scheduler="cash")
+    both = servesim.run_batch(arrivals.stack_serve_scenarios(scens), cfg)
+    for i, sc in enumerate(scens):
+        solo = servesim.run_batch(arrivals.stack_serve_scenarios([sc]), cfg)
+        for k in ("n_completed", "lat_hist", "tokens_decoded"):
+            assert np.array_equal(np.asarray(both[k])[i],
+                                  np.asarray(solo[k])[0]), k
+
+
+# ---------------------------------------------------------------------------
+# fused kernel: bitwise vs unfused, interpret vs xla
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["cash", "rr"])
+def test_fused_matches_unfused_bitwise(scheduler):
+    sc = _scenario()
+    batch = arrivals.stack_serve_scenarios([sc])
+    outs = {}
+    for fusion in ("unfused", "fused"):
+        cfg = _cfg(scheduler=scheduler, fusion=fusion, trace_slots=4096)
+        outs[fusion] = servesim.run_batch(batch, cfg)
+    for k in outs["unfused"]:
+        a = np.asarray(outs["unfused"][k])
+        b = np.asarray(outs["fused"][k])
+        assert np.array_equal(a, b, equal_nan=a.dtype.kind == "f"), k
+
+
+@pytest.mark.parametrize("policy", ["cash", "rr"])
+def test_serve_admit_interpret_matches_xla(policy):
+    """The Pallas kernel (interpret mode) against the XLA reference at
+    ragged, non-lane-multiple shapes — lane padding must be inert."""
+    key = jax.random.PRNGKey(0)
+    C, R = 37, 5
+    pend = np.asarray(jax.random.bernoulli(key, 0.5, (C,)))
+    rank = np.where(pend, np.cumsum(pend) - 1, 999).astype(np.int32)
+
+    def f(k, shape, lo, hi):
+        return jax.random.uniform(jax.random.fold_in(key, k), shape,
+                                  jnp_dtype, lo, hi)
+    jnp_dtype = np.float64
+    args = (pend, rank, np.full(C, -1, np.int32),
+            np.asarray(f(1, (C,), 0.0, 100.0)),
+            np.asarray(f(2, (C,), 0.0, 50.0)),
+            np.full(C, 900.0), np.full(C, 60.0),
+            np.asarray(f(3, (R,), 0.0, 300.0)),
+            np.full(R, 150.0), np.full(R, 1500.0), np.full(R, 500.0),
+            np.zeros(R, bool), np.asarray([3, 0, 2, 1, 3], np.int32),
+            np.int32(pend.sum()), np.int32(2))
+    kw = dict(dt=1.0, policy=policy, max_rounds=3)
+    o_x = ops.serve_admit(*args, impl="xla", **kw)
+    o_i = ops.serve_admit(*args, impl="interpret", **kw)
+    for a, b in zip(o_x, o_i):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.kind == "f":
+            assert np.allclose(a, b, rtol=1e-12, atol=1e-12)
+        else:
+            assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_unroll_bitwise(k):
+    """k tick bodies unrolled per scan step (non-divisible tick count)
+    reproduce k=1 bit for bit."""
+    batch = arrivals.stack_serve_scenarios([_scenario()])
+    base = servesim.run_batch(batch, _cfg(n_ticks=123))
+    rolled = servesim.run_batch(batch, _cfg(n_ticks=123, unroll=k))
+    for key in base:
+        assert np.array_equal(np.asarray(base[key]),
+                              np.asarray(rolled[key])), key
+
+
+# ---------------------------------------------------------------------------
+# decision trace + registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["cash", "rr"])
+def test_event_parity(scheduler):
+    """The engine's device ring decodes to exactly the oracle's event
+    stream: admission (place), release, drop, deplete/regen — decision
+    fields int-for-int."""
+    sc = _scenario()
+    cfg = _cfg(scheduler=scheduler, trace_slots=8192)
+    res = servesim.run_batch(arrivals.stack_serve_scenarios([sc]), cfg)
+    ora = ServeFleetOracle(sc, cfg, collect_events=True)
+    ora.run()
+    events = obsring.decode(res["trace_ev_i"][0], res["trace_ev_f"][0],
+                            res["trace_head"][0])
+    obsring.assert_event_parity(events, ora.events,
+                                total=int(res["trace_head"][0]))
+    kinds = {e.kind for e in events}
+    assert obsring.EV_PLACE in kinds and obsring.EV_RELEASE in kinds
+
+
+def test_trace_release_fields():
+    """EV_RELEASE rows carry (slot, replica, latency) — the replica is
+    the one the request actually resided on."""
+    sc = _scenario()
+    cfg = _cfg(scheduler="cash", trace_slots=8192)
+    res = servesim.run_batch(arrivals.stack_serve_scenarios([sc]), cfg)
+    events = obsring.decode(res["trace_ev_i"][0], res["trace_ev_f"][0],
+                            res["trace_head"][0])
+    rel = [e for e in events if e.kind == obsring.EV_RELEASE]
+    assert rel and all(0 <= e.aux < 4 and e.value >= 0.0 for e in rel)
+    # every release's (slot, replica) pairs with a preceding placement
+    seen = set()
+    ok = True
+    for e in events:
+        if e.kind == obsring.EV_PLACE:
+            seen.add((e.subject, e.aux))
+        elif e.kind == obsring.EV_RELEASE:
+            ok = ok and (e.subject, e.aux) in seen
+    assert ok
+
+
+def test_registry_validates_serve_outputs():
+    """Every serving-fleet output key is declared in the metrics
+    registry (tokens_prefilled / tokens_decoded ride the scalar table)."""
+    sc = _scenario()
+    cfg = _cfg(trace_slots=2048)
+    res = servesim.run_batch(arrivals.stack_serve_scenarios([sc]), cfg)
+    obsreg.validate_outputs(res)
+    assert obsreg.spec("tokens_prefilled").scope == "scalar"
+    assert obsreg.spec("tokens_decoded").scope == "scalar"
+
+
+# ---------------------------------------------------------------------------
+# shard_map parity (subprocess: forced host device count)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    from repro.core import servesim
+    from repro.traffic import arrivals
+
+    tmpl = arrivals.make_serve_template(4, seed=3)
+    scens = [arrivals.build_serve_scenario(
+        tmpl, n_replicas=4, balance0=400.0, baseline=150.0, burst=1500.0,
+        capacity=500.0, rate=0.6, rng_seed=s) for s in (7, 11, 23)]
+    batch = arrivals.stack_serve_scenarios(scens)
+    cfg = servesim.ServeSimConfig(n_ticks=200, kv_slots=3, table_slots=32,
+                                  slo_bins=16, trace_slots=2048)
+    a = servesim.run_batch(batch, cfg)
+    b = servesim.run_batch_sharded(batch, cfg, n_shards=2)
+    for k in a:
+        ka, kb = np.asarray(a[k]), np.asarray(b[k])
+        eq = (np.array_equal(ka, kb, equal_nan=True)
+              if ka.dtype.kind == "f" else np.array_equal(ka, kb))
+        assert eq, k
+    print("BITWISE_OK")
+""")
+
+
+def test_sharded_matches_vmap_bitwise_subprocess():
+    """`run_batch_sharded` (2-way scenario mesh, padded ragged batch)
+    reproduces the vmap path bit for bit, trace rings included."""
+    env = dict(os.environ)
+    flags = " ".join(f for f in env.get("XLA_FLAGS", "").split()
+                     if "xla_force_host_platform_device_count" not in f)
+    env["XLA_FLAGS"] = \
+        (flags + " --xla_force_host_platform_device_count=2").strip()
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=300)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "BITWISE_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# contracts: admission order, fusion choice, config/scenario validation
+# ---------------------------------------------------------------------------
+
+def test_admission_order_contract():
+    credits = [10.0, 30.0, 30.0, 5.0]
+    assert admission_order(credits, credit_aware=True) == [1, 2, 0, 3]
+    assert admission_order(credits, credit_aware=False, ptr=2) == \
+        [2, 3, 0, 1]
+
+
+def test_serve_fusion_choice_platform():
+    auto = _cfg(fusion="auto")
+    assert servesim.serve_fusion_choice(auto, platform="cpu") == "unfused"
+    assert servesim.serve_fusion_choice(auto, platform="tpu") == "fused"
+    assert servesim.serve_fusion_choice(_cfg(fusion="fused"),
+                                        platform="cpu") == "fused"
+    assert servesim.serve_fusion_choice(_cfg(fusion="unfused"),
+                                        platform="tpu") == "unfused"
+    with pytest.raises(ValueError, match="fusion"):
+        servesim.serve_fusion_choice(_cfg(fusion="bogus"))
+
+
+def test_config_validation():
+    batch = arrivals.stack_serve_scenarios([_scenario()])
+    with pytest.raises(NotImplementedError, match="cash|rr"):
+        servesim.run_batch(batch, _cfg(scheduler="stock"))
+    with pytest.raises(NotImplementedError, match="stochastic"):
+        servesim.run_batch(batch, _cfg(traffic="replay"))
+    with pytest.raises(ValueError, match="kv_slots"):
+        servesim.run_batch(batch, _cfg(kv_slots=0))
+
+
+def test_stack_requires_uniform_fleet():
+    with pytest.raises(ValueError, match="uniform replica count"):
+        arrivals.stack_serve_scenarios([_scenario(n_replicas=4),
+                                        _scenario(n_replicas=5)])
+
+
+def test_stack_pads_templates_only():
+    t2 = arrivals.make_serve_template(2, seed=1)
+    t5 = arrivals.make_serve_template(5, seed=2)
+    a = arrivals.build_serve_scenario(t2, n_replicas=3, rng_seed=1)
+    b = arrivals.build_serve_scenario(t5, n_replicas=3, rng_seed=2)
+    batch = arrivals.stack_serve_scenarios([a, b])
+    assert batch["tmpl_pre"].shape == (2, 5)
+    assert batch["rep_balance0"].shape == (2, 3)
+    # tmpl_n guards the mod-indexing: padded rows never instantiate
+    assert list(batch["tmpl_n"]) == [2, 5]
